@@ -1,0 +1,1 @@
+# One benchmark per paper table/figure; `python -m benchmarks.run` runs all.

@@ -1,0 +1,36 @@
+"""Shared helpers for the paper-reproduction benchmarks (Scale A:
+TileLoom planning on the Wormhole df model, profiled by the event simulator —
+see DESIGN.md S3/S4)."""
+from __future__ import annotations
+
+import math
+from typing import Iterable, List, Optional, Tuple
+
+from repro.core import (SearchBudget, block_shape_candidates, estimate,
+                        get_hw, matmul_program, plan_kernel, plan_kernel_multi,
+                        simulate, templates)
+
+HW_CONFIGS = ("wormhole_1x8", "wormhole_4x8", "wormhole_8x8")
+DEFAULT_BUDGET = SearchBudget(top_k=5, max_plans_per_mapping=48,
+                              max_candidates=8000)
+
+
+def geomean(xs: Iterable[float]) -> float:
+    xs = [x for x in xs if x > 0]
+    if not xs:
+        return 0.0
+    return math.exp(sum(math.log(x) for x in xs) / len(xs))
+
+
+def tl_gemm(M: int, N: int, K: int, hw, budget=DEFAULT_BUDGET, **kw):
+    progs = [matmul_program(M, N, K, bm=bm, bn=bn, bk=bk)
+             for bm, bn, bk in block_shape_candidates(M, N, K)]
+    return plan_kernel_multi(progs, hw, budget=budget, **kw)
+
+
+def sim_time(plan, hw) -> float:
+    return simulate(plan, hw).total_s
+
+
+def row(name: str, us: float, derived: str = "") -> str:
+    return f"{name},{us:.2f},{derived}"

@@ -1,0 +1,47 @@
+"""Paper Fig 6: irregular GEMM shapes.
+
+(a) M=N=32768, K in 256..2048 — K is sequential within a block, so dataflow
+    choice matters little (paper: "both TL and TTNN exhibit behavior similar
+    to the 1D and 2D baselines");
+(b) M=K=32768, N in 256..2048 — the preferred dataflow flips from 1D-like to
+    2D-like as N grows (paper: TTNN missteps at N=1024; TL adapts).
+"""
+from __future__ import annotations
+
+from repro.core import get_hw, simulate, templates
+
+from .common import row, tl_gemm
+
+
+def sweep():
+    hw = get_hw("wormhole_8x8")
+    lines = []
+    for tag, fixed, var in (("varyK", "MN32768", "K"), ("varyN", "MK32768", "N")):
+        for v in (256, 512, 1024, 2048):
+            if tag == "varyK":
+                M = N = 32768
+                K = v
+            else:
+                M = K = 32768
+                N = v
+            res = tl_gemm(M, N, K, hw)
+            tl_t = res.best.sim.total_s
+            tt1 = simulate(templates.tt1d_matmul_plan(M, N, K, hw), hw).total_s
+            tt2 = simulate(templates.tt2d_matmul_plan(M, N, K, hw), hw).total_s
+            ttnn = simulate(templates.ttnn_matmul_plan(M, N, K, hw), hw).total_s
+            best_kind = "1D-like" if tt1 < tt2 else "2D-like"
+            lines.append(row(
+                f"gemm_fig6/{tag}/{fixed}_{var}{v}", tl_t * 1e6,
+                f"vs_ttnn={ttnn / tl_t:.3f};vs_tt1d={tt1 / tl_t:.3f};"
+                f"vs_tt2d={tt2 / tl_t:.3f};template_best={best_kind};"
+                f"tl_plan={res.best.plan.describe().replace(',', ' ')}"))
+    return lines
+
+
+def main():
+    for ln in sweep():
+        print(ln)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Paper Fig 5: GEMM — TL vs TTNN / TT-1D / TT-2D across shapes x meshes.
+
+For each (M, N, K, hw): TileLoom plans with the two-step top-5 selection; the
+baselines use their fixed templates.  All on the Wormhole df model with the
+event simulator as the profiling stage.  Output: per-config normalized perf
+(TL / TTNN, higher is better) and the geomean + win-rate summary the paper
+reports (S3.2: geomean +2.8% on 8x8; >=0.9x on 78.5% of configs; +30%/+9%
+vs fixed TT-1D/TT-2D).
+"""
+from __future__ import annotations
+
+from repro.core import estimate, get_hw, simulate, templates
+
+from .common import DEFAULT_BUDGET, HW_CONFIGS, geomean, row, tl_gemm
+
+
+def sweep(full: bool = False):
+    Ms = (256, 1024, 4096, 16384) if full else (1024, 4096, 16384)
+    Ns = Ms
+    Ks = (1024, 4096) if full else (4096,)
+    lines = []
+    summary = {}
+    for hw_name in HW_CONFIGS:
+        hw = get_hw(hw_name)
+        ratios, r1d, r2d = [], [], []
+        for K in Ks:
+            for M in Ms:
+                for N in Ns:
+                    res = tl_gemm(M, N, K, hw)
+                    tl_t = res.best.sim.total_s
+                    tt1 = simulate(templates.tt1d_matmul_plan(M, N, K, hw), hw).total_s
+                    tt2 = simulate(templates.tt2d_matmul_plan(M, N, K, hw), hw).total_s
+                    ttnn = simulate(templates.ttnn_matmul_plan(M, N, K, hw), hw).total_s
+                    ratios.append(ttnn / tl_t)
+                    r1d.append(tt1 / tl_t)
+                    r2d.append(tt2 / tl_t)
+                    lines.append(row(
+                        f"gemm_fig5/{hw_name}/M{M}_N{N}_K{K}", tl_t * 1e6,
+                        f"vs_ttnn={ttnn / tl_t:.3f};vs_tt1d={tt1 / tl_t:.3f};"
+                        f"vs_tt2d={tt2 / tl_t:.3f};"
+                        f"tflops={res.best.sim.tflops:.1f}"))
+        win = sum(1 for r in ratios if r >= 1.0) / len(ratios)
+        within10 = sum(1 for r in ratios if r >= 0.9) / len(ratios)
+        summary[hw_name] = (geomean(ratios), win, within10,
+                            geomean(r1d), geomean(r2d))
+        lines.append(row(
+            f"gemm_fig5/{hw_name}/geomean", 0.0,
+            f"tl_vs_ttnn={geomean(ratios):.3f};win_rate={win:.3f};"
+            f"within10pct={within10:.3f};vs_tt1d={geomean(r1d):.3f};"
+            f"vs_tt2d={geomean(r2d):.3f}"))
+    return lines, summary
+
+
+def main(full: bool = False):
+    lines, summary = sweep(full)
+    for ln in lines:
+        print(ln)
+    return summary
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  ``--full`` widens the Fig 5 sweep
+toward the paper's 140 configurations.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", nargs="*", default=None)
+    args = ap.parse_args()
+
+    from . import (ablation_spatial, ablation_temporal, flash_table,
+                   gemm_irregular, gemm_table, perfmodel_validation,
+                   topk_table)
+    suites = {
+        "gemm_fig5": lambda: gemm_table.main(full=args.full),
+        "gemm_fig6": gemm_irregular.main,
+        "flash_fig7": flash_table.main,
+        "spatial_tbl1": ablation_spatial.main,
+        "temporal_fig8": ablation_temporal.main,
+        "perfmodel_fig9": perfmodel_validation.main,
+        "topk_tbl2": topk_table.main,
+    }
+    print("name,us_per_call,derived")
+    for name, fn in suites.items():
+        if args.only and name not in args.only:
+            continue
+        t0 = time.perf_counter()
+        fn()
+        print(f"suite/{name},{(time.perf_counter() - t0) * 1e6:.0f},done",
+              file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

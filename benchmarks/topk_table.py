@@ -1,0 +1,53 @@
+"""Paper Table 2: top-k trade-off.
+
+Geomean performance (normalized to TTNN) and planning time for k = 1..5 on
+the three mesh configs.  top-1 = fully static compilation (no profiling);
+larger k profiles more candidates on the simulator.  Paper: -6.5% (top-1) ->
++2.8% (top-5) on the 8x8 mesh, most of the gap closed by top-2.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core import SearchBudget, get_hw, simulate, templates
+
+from .common import HW_CONFIGS, geomean, row, tl_gemm
+
+SHAPES = ((1024, 1024, 4096), (4096, 4096, 4096), (16384, 1024, 4096),
+          (4096, 16384, 4096))
+
+
+def sweep():
+    lines = []
+    for hw_name in HW_CONFIGS:
+        hw = get_hw(hw_name)
+        ttnn_times = {}
+        for (M, N, K) in SHAPES:
+            ttnn_times[(M, N, K)] = simulate(
+                templates.ttnn_matmul_plan(M, N, K, hw), hw).total_s
+        for k in range(1, 6):
+            t0 = time.perf_counter()
+            ratios = []
+            for (M, N, K) in SHAPES:
+                res = tl_gemm(M, N, K, hw,
+                              budget=SearchBudget(top_k=k,
+                                                  max_plans_per_mapping=48),
+                              profile=(k > 1))
+                # top-1 = static best (no profiling); otherwise profiled best
+                t = (simulate(res.best.plan, hw).total_s)
+                ratios.append(ttnn_times[(M, N, K)] / t)
+            dt = time.perf_counter() - t0
+            lines.append(row(
+                f"topk_tbl2/{hw_name}/top{k}", dt * 1e6 / len(SHAPES),
+                f"vs_ttnn_geomean={geomean(ratios):.3f};"
+                f"plan_time_s={dt:.2f}"))
+    return lines
+
+
+def main():
+    for ln in sweep():
+        print(ln)
+
+
+if __name__ == "__main__":
+    main()

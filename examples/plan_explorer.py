@@ -1,0 +1,27 @@
+"""Mesh-plan explorer: how TileLoom picks sharding layouts per (arch, shape).
+
+    PYTHONPATH=src python examples/plan_explorer.py [arch ...]
+"""
+import sys
+
+from repro.configs import ARCHS, SHAPES
+from repro.configs.base import TrainConfig
+from repro.models import build_model
+from repro.parallel.planner_bridge import plan_mesh, tileloom_view
+
+archs = sys.argv[1:] or ["qwen2.5-3b", "llama3-405b", "qwen3-moe-30b-a3b",
+                         "rwkv6-3b"]
+tcfg = TrainConfig(microbatches=4, opt_state_dtype="bfloat16")
+for arch in archs:
+    api = build_model(ARCHS[arch])
+    print(f"\n=== {arch} ({api.n_params():,} params) ===")
+    for shp in ("train_4k", "prefill_32k", "decode_32k"):
+        ranked = plan_mesh(api, SHAPES[shp], tcfg)
+        top = ranked[0]
+        print(f"{shp:12s} -> {top.plan.name:18s} "
+              f"dominant={top.cost.dominant:10s} "
+              f"est={top.cost.total_s * 1e3:9.2f} ms/step "
+              f"hbm={top.cost.hbm_bytes_per_chip / 1e9:5.1f} GB/chip")
+    print("TileLoom view of the chosen train plan:")
+    print(tileloom_view(plan_mesh(api, SHAPES['train_4k'], tcfg)[0].plan,
+                        api.cfg))

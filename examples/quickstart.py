@@ -1,0 +1,31 @@
+"""Quickstart: plan a GEMM with TileLoom on the paper's Wormhole target, and
+watch the two-step selection at work.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.core import (SearchBudget, block_shape_candidates, estimate,
+                        get_hw, matmul_program, plan_kernel_multi, simulate,
+                        templates)
+
+hw = get_hw("wormhole_8x8")
+print("=== hardware (df dialect, paper S2.4) ===")
+print(hw.df_text())
+
+M = N = K = 2048
+# front-end block-shape exploration (paper S2.1) + dataflow planning
+progs = [matmul_program(M, N, K, bm=bm, bn=bn, bk=bk)
+         for bm, bn, bk in block_shape_candidates(M, N, K)]
+res = plan_kernel_multi(progs, hw, budget=SearchBudget(top_k=5))
+print("\n=== TileLoom two-step selection ===")
+print(res.summary())
+print("\n=== chosen dataflow (paper Listing 5 style) ===")
+print(res.best.plan.mlir_like(hw))
+
+print("\n=== vs vendor templates ===")
+for name, mk in (("TT-1D", templates.tt1d_matmul_plan),
+                 ("TT-2D", templates.tt2d_matmul_plan),
+                 ("TTNN", templates.ttnn_matmul_plan)):
+    t = simulate(mk(M, N, K, hw), hw)
+    print(f"{name:6s}: {t.total_s * 1e6:8.1f} us  ({t.tflops:5.1f} TFLOP/s)")
+best = res.best.sim
+print(f"TL    : {best.total_s * 1e6:8.1f} us  ({best.tflops:5.1f} TFLOP/s)")

@@ -1,0 +1,13 @@
+"""Serving example: batched greedy decoding with a KV cache (reduced gemma).
+
+    PYTHONPATH=src python examples/serve_decode.py
+"""
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    argv = sys.argv[1:] or ["--arch", "gemma-7b", "--reduced",
+                            "--batch", "4", "--prompt-len", "8",
+                            "--tokens", "24"]
+    main(argv)

@@ -1,0 +1,14 @@
+"""End-to-end training example: a few hundred steps of a reduced qwen2.5-3b
+with checkpointing and auto-resume.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300]
+"""
+import sys
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    argv = sys.argv[1:] or ["--arch", "qwen2.5-3b", "--reduced",
+                            "--steps", "300", "--batch", "8", "--seq", "128",
+                            "--microbatches", "2", "--save-every", "100"]
+    main(argv)

@@ -1,0 +1,3 @@
+"""TileLoom-JAX: automatic dataflow planning for tile programs (paper
+reproduction) and TPU pod sharding (deployment).  See README.md."""
+__version__ = "1.0.0"

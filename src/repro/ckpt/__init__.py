@@ -1,0 +1,2 @@
+from .checkpoint import latest, list_steps, load_manifest, restore, save
+from .manager import CheckpointManager

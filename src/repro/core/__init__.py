@@ -1,0 +1,38 @@
+# TileLoom core: the paper's primary contribution — automatic dataflow
+# planning for tile-based programs on spatial dataflow architectures.
+#
+# Pipeline (paper Fig 2):  program.py (front-end IR)  ->  mapping.py (S2.2)
+# -> reuse.py (S2.3) -> plan.py (dataflow-aware IR) -> perfmodel.py (S2.5)
+# -> planner.py (two-step top-k selection; simulator.py plays the hardware
+# profiling stage) -> lower_jax.py (back-end handoff).
+from .affine import AffineExpr, AffineMap, footprint_tiles
+from .hw import (HardwareModel, MatUnit, Memory, VecUnit, get_hw, tpu_v5e_chip,
+                 tpu_v5e_pod, wormhole, spyre_triple_ring, PRESETS)
+from .mapping import Mapping, SpatialBind, TemporalLoop, enumerate_mappings
+from .perfmodel import PlanCost, body_compute_seconds, estimate, pipelined_loop_time
+from .plan import DataflowPlan, make_plan
+from .planner import (Candidate, PlanResult, SearchBudget, plan_kernel,
+                      plan_kernel_multi)
+from .program import (LoopDim, TensorSpec, TileAccess, TileOp, TileProgram,
+                      block_shape_candidates, flash_attention_program,
+                      fused_matmul_program, matmul_program)
+from .reuse import (HoistOption, MemOpChoice, ReuseInfo, analyze_reuse,
+                    broadcast_options, enumerate_memop_choices, hoist_options)
+from .simulator import SimResult, simulate
+from . import templates
+
+__all__ = [
+    "AffineExpr", "AffineMap", "footprint_tiles",
+    "HardwareModel", "MatUnit", "Memory", "VecUnit", "get_hw", "PRESETS",
+    "tpu_v5e_chip", "tpu_v5e_pod", "wormhole", "spyre_triple_ring",
+    "Mapping", "SpatialBind", "TemporalLoop", "enumerate_mappings",
+    "PlanCost", "body_compute_seconds", "estimate", "pipelined_loop_time",
+    "DataflowPlan", "make_plan",
+    "Candidate", "PlanResult", "SearchBudget", "plan_kernel", "plan_kernel_multi",
+    "LoopDim", "TensorSpec", "TileAccess", "TileOp", "TileProgram",
+    "block_shape_candidates", "flash_attention_program", "fused_matmul_program",
+    "matmul_program",
+    "HoistOption", "MemOpChoice", "ReuseInfo", "analyze_reuse",
+    "broadcast_options", "enumerate_memop_choices", "hoist_options",
+    "SimResult", "simulate", "templates",
+]

@@ -1,0 +1,98 @@
+"""Lowering TileLoom decisions to JAX/Pallas artifacts (the "back-end" edge).
+
+On the paper's stack this is the hand-off from the dataflow-aware IR to the
+vendor backend (TT-Metalium).  On TPU the hand-off has two levels
+(DESIGN.md S3):
+
+* **intra-chip** (this module): the planner runs on the single-chip df model
+  (``tpu_v5e_chip``: VMEM = local scratchpad, MXU = df.mat) to choose Pallas
+  ``BlockSpec`` shapes for the kernels — exactly the paper's block-level
+  planning with VMEM capacity pruning and MXU alignment;
+* **cross-chip** (``parallel/planner_bridge.py``): the planner runs on the
+  pod-level df model to choose sharding layouts, whose "broadcasts" lower to
+  XLA collectives.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax.numpy as jnp
+
+from .hw import tpu_v5e_chip
+from .planner import SearchBudget, plan_kernel_multi
+from .program import flash_attention_program, matmul_program
+
+MXU_GRANULE = 128          # MXU systolic dimension: blocks must be multiples
+_CHIP_BUDGET = SearchBudget(top_k=1, max_plans_per_mapping=24,
+                            max_mappings=16)
+
+
+def _pow2_options(limit: int, lo: int = MXU_GRANULE, hi: int = 1024):
+    out = []
+    b = lo
+    while b <= min(hi, max(lo, limit)):
+        out.append(b)
+        b *= 2
+    return out or [lo]
+
+
+@functools.lru_cache(maxsize=512)
+def plan_gemm_blocks(M: int, N: int, K: int, dtype=jnp.bfloat16
+                     ) -> Tuple[int, int, int]:
+    """Choose (bm, bn, bk) for the GEMM kernel on one TPU chip.
+
+    Enumerates MXU-aligned block shapes, builds the corresponding tile
+    programs, and lets the TileLoom planner rank them on the chip df model
+    (VMEM capacity pruning included).  Falls back to (128,128,128) when the
+    problem is smaller than one MXU tile.
+    """
+    dbytes = jnp.dtype(dtype).itemsize
+    progs = []
+    for bm in _pow2_options(M, hi=512):
+        for bn in _pow2_options(N, hi=512):
+            for bk in _pow2_options(K, hi=512):
+                progs.append(matmul_program(max(M, bm), max(N, bn), max(K, bk),
+                                            bm=bm, bn=bn, bk=bk,
+                                            dtype_bytes=dbytes))
+    if not progs:
+        return (MXU_GRANULE,) * 3
+    hw = tpu_v5e_chip()
+    # size blocks against VMEM (scratch) rather than HBM: swap local memory
+    hw = _with_vmem_as_local(hw)
+    try:
+        res = plan_kernel_multi(progs, hw, budget=_CHIP_BUDGET, profile=False)
+    except RuntimeError:
+        return (MXU_GRANULE,) * 3
+    loads = {c.access.tensor.name: c for c in res.best.plan.loads}
+    bm, bk = loads["A"].access.tile_shape
+    _, bn = loads["B"].access.tile_shape
+    return (bm, bn, bk)
+
+
+@functools.lru_cache(maxsize=512)
+def plan_flash_blocks(Sq: int, Skv: int, d: int, dtype=jnp.bfloat16
+                      ) -> Tuple[int, int]:
+    """Choose (block_q, block_kv) for the FlashAttention kernel."""
+    dbytes = jnp.dtype(dtype).itemsize
+    progs = []
+    for bq in _pow2_options(Sq, lo=128, hi=512):
+        for bkv in _pow2_options(Skv, lo=128, hi=1024):
+            progs.append(flash_attention_program(
+                8, max(Sq, bq), max(Skv, bkv), d, bq=bq, bkv=bkv,
+                dtype_bytes=dbytes))
+    hw = _with_vmem_as_local(tpu_v5e_chip())
+    try:
+        res = plan_kernel_multi(progs, hw, budget=_CHIP_BUDGET, profile=False)
+    except RuntimeError:
+        return (128, 128)
+    loads = {c.access.tensor.name: c for c in res.best.plan.loads}
+    bq = loads["Q"].access.tile_shape[1]
+    bkv = loads["K"].access.tile_shape[1]
+    return (bq, bkv)
+
+
+def _with_vmem_as_local(hw):
+    """The chip model's planning 'local memory' is VMEM; its 'global' memory
+    is the chip's HBM (already set up by tpu_v5e_chip)."""
+    return hw

@@ -1,0 +1,266 @@
+"""Spatiotemporal mapping (paper S2.2).
+
+A mapping decides how the iteration space of the ``affine.parallel`` loop —
+the logical multidimensional tile grid — is assigned to physical cores and to
+time.  Following the paper, mappings are *tiling-based*: contiguous regions of
+the iteration space go to contiguous spatial regions of the core array or to
+contiguous temporal *waves*.
+
+The design space is the paper's three coupled choices:
+
+1. each parallel (grid) dim maps to **zero or more** hardware spatial dims;
+2. when a grid dim is tiled by multiple spatial dims, the **tiling order**
+   matters (different orders induce different layouts / reuse);
+3. residual extents become **temporal wave loops** whose order is itself a
+   design choice.
+
+``enumerate_mappings`` produces the full space; each :class:`Mapping` then
+yields the concrete loop-nest structure (Listing 2) and rewritten affine
+accesses that reuse analysis and the performance model consume.
+"""
+from __future__ import annotations
+
+import itertools
+import math
+from dataclasses import dataclass
+from typing import Dict, Iterator, List, Mapping as TMapping, Optional, Sequence, Tuple
+
+from .affine import AffineExpr, AffineMap
+from .hw import HardwareModel
+from .program import LoopDim, TileAccess, TileProgram
+
+
+def _ceil(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+@dataclass(frozen=True)
+class SpatialBind:
+    """One hardware spatial dim consumed by one grid dim."""
+    hw_dim: str
+    hw_size: int
+    grid_dim: str
+
+
+@dataclass(frozen=True)
+class TemporalLoop:
+    """A wave loop over the residual extent of one grid dim (Listing 2's
+    ``%tx`` / ``%ty``)."""
+    name: str                      # "t_<grid_dim>"
+    grid_dim: str
+    extent: int
+
+
+@dataclass(frozen=True)
+class Mapping:
+    """A fixed spatiotemporal mapping of a program onto a hardware mesh.
+
+    Loop-nest structure implied (outermost -> innermost), matching Listing 2:
+
+        affine.parallel (hw spatial dims)        # truly parallel cores
+          affine.for (temporal wave loops, in ``temporal`` order)
+            scf.for (program sequential dims)
+              <tile body>
+    """
+    program: TileProgram
+    hw_name: str
+    hw_dims: Tuple[Tuple[str, int], ...]          # full mesh (name, size)
+    spatial: Tuple[SpatialBind, ...]              # tiling order: outer digit first
+    temporal: Tuple[TemporalLoop, ...]            # outer -> inner
+
+    # -- derived structure -----------------------------------------------------
+    def spatial_for(self, grid_dim: str) -> Tuple[SpatialBind, ...]:
+        return tuple(b for b in self.spatial if b.grid_dim == grid_dim)
+
+    def spatial_factor(self, grid_dim: str) -> int:
+        return math.prod(b.hw_size for b in self.spatial_for(grid_dim)) or 1
+
+    def wave_extent(self, grid_dim: str) -> int:
+        return _ceil(self.program.dim(grid_dim).extent, self.spatial_factor(grid_dim))
+
+    def used_hw_dims(self) -> Tuple[str, ...]:
+        return tuple(b.hw_dim for b in self.spatial)
+
+    def idle_hw_dims(self) -> Tuple[Tuple[str, int], ...]:
+        used = set(self.used_hw_dims())
+        return tuple((n, s) for n, s in self.hw_dims if n not in used)
+
+    def active_cores(self) -> int:
+        n = 1
+        for b in self.spatial:
+            n *= min(b.hw_size, self.program.dim(b.grid_dim).extent)
+        return n
+
+    def total_cores(self) -> int:
+        return math.prod(s for _, s in self.hw_dims)
+
+    def utilization(self) -> float:
+        """Fraction of (core x wave) slots holding real (non-padded) tiles."""
+        u = 1.0
+        for d in self.program.grid_dims:
+            padded = self.spatial_factor(d.name) * self.wave_extent(d.name)
+            u *= d.extent / padded
+        # idle hw dims waste whole planes of the machine
+        for _, s in self.idle_hw_dims():
+            u /= s
+        return u
+
+    def n_waves(self) -> int:
+        return math.prod(t.extent for t in self.temporal) or 1
+
+    # -- index rewriting ---------------------------------------------------------
+    def grid_index_expr(self, grid_dim: str) -> AffineExpr:
+        """Reconstruct the logical grid index from (wave, spatial digits).
+
+        With binds [h1(s1), h2(s2)] (tiling order: h1 outer) and wave t:
+            g = t * s1 * s2 + h1 * s2 + h2
+        """
+        binds = self.spatial_for(grid_dim)
+        terms: Dict[str, int] = {}
+        stride = 1
+        for b in reversed(binds):              # innermost digit has stride 1
+            terms[b.hw_dim] = stride
+            stride *= b.hw_size
+        t = self._temporal_for(grid_dim)
+        if t is not None and t.extent > 1:
+            terms[t.name] = stride
+        elif t is not None:
+            pass                                # extent-1 wave: index 0
+        return AffineExpr.linear(terms)
+
+    def _temporal_for(self, grid_dim: str) -> Optional[TemporalLoop]:
+        for t in self.temporal:
+            if t.grid_dim == grid_dim:
+                return t
+        return None
+
+    def rewrite_access(self, access: TileAccess) -> AffineMap:
+        """Substitute grid dims with their (wave, spatial) reconstruction."""
+        m = access.index
+        for d in self.program.grid_dims:
+            if m.depends_on(d.name):
+                m = m.substitute(d.name, self.grid_index_expr(d.name))
+        return m
+
+    # -- loop nest (for reuse analysis & printing) --------------------------------
+    def loop_nest(self) -> Tuple[Tuple[str, str, int], ...]:
+        """(kind, name, extent) outer->inner; kind in
+        {"spatial", "temporal", "sequential"}."""
+        nest: List[Tuple[str, str, int]] = []
+        for b in self.spatial:
+            nest.append(("spatial", b.hw_dim, b.hw_size))
+        for t in self.temporal:
+            nest.append(("temporal", t.name, t.extent))
+        for d in self.program.seq_dims:
+            nest.append(("sequential", d.name, d.extent))
+        return tuple(nest)
+
+    def extents_env(self) -> Dict[str, int]:
+        env = dict(self.program.extents)
+        for b in self.spatial:
+            env[b.hw_dim] = b.hw_size
+        for t in self.temporal:
+            env[t.name] = t.extent
+        return env
+
+    def describe(self) -> str:
+        sp = ", ".join(f"{b.grid_dim}->%{b.hw_dim}({b.hw_size})" for b in self.spatial)
+        tp = ", ".join(f"{t.name}({t.extent})" for t in self.temporal)
+        return f"[spatial: {sp or '-'} | temporal: {tp or '-'}]"
+
+    def mlir_like(self) -> str:
+        """Render the mapped loop structure in the paper's Listing-2 style."""
+        lines = []
+        sp_dims = ", ".join(f"%{b.hw_dim}" for b in self.spatial)
+        sp_sizes = ", ".join(str(b.hw_size) for b in self.spatial)
+        indent = ""
+        if self.spatial:
+            lines.append(f"affine.parallel ({sp_dims}) = (0) to ({sp_sizes}) {{")
+            indent += "  "
+        for t in self.temporal:
+            lines.append(f"{indent}affine.for %{t.name} = 0 to {t.extent} {{")
+            indent += "  "
+        for d in self.program.seq_dims:
+            lines.append(f"{indent}scf.for %{d.name} = 0 to {d.extent} {{")
+            indent += "  "
+        lines.append(f"{indent}// tile body: "
+                     + ", ".join(op.kind for op in self.program.body))
+        while indent:
+            indent = indent[:-2]
+            lines.append(f"{indent}}}")
+        return "\n".join(lines)
+
+
+# --------------------------------------------------------------------------
+# Enumeration
+# --------------------------------------------------------------------------
+def enumerate_mappings(program: TileProgram, hw: HardwareModel, *,
+                       allow_idle_dims: bool = True,
+                       max_candidates: int = 512) -> Tuple[Mapping, ...]:
+    """Enumerate the paper's mapping design space.
+
+    For every function ``hw_dim -> grid_dim | idle`` we derive the set of
+    spatial binds; for every grid dim bound to >=2 hw dims we expand all tiling
+    orders; residual grid dims with wave extent > 1 generate temporal loops in
+    all orders.  Degenerate duplicates (idle dims that could host work while a
+    grid dim still has residual extent) are kept only if ``allow_idle_dims`` —
+    they are occasionally optimal for very small grids (paper S3.2 small-shape
+    regime).
+    """
+    program.validate()
+    mesh = hw.mesh_dims
+    grid_names = [d.name for d in program.grid_dims]
+    choices = [grid_names + [None] for _ in mesh]
+    out: List[Mapping] = []
+    seen = set()
+    for combo in itertools.product(*choices):
+        # binds grouped by grid dim, in mesh order
+        by_grid: Dict[str, List[Tuple[str, int]]] = {}
+        for (hw_name, hw_size), g in zip(mesh, combo):
+            if g is not None:
+                by_grid.setdefault(g, []).append((hw_name, hw_size))
+        if not allow_idle_dims and len(by_grid) == 0 and grid_names:
+            continue
+        # skip assignments where a hw dim is idle while unassigned grid dims
+        # exist *and* idle dims are disallowed
+        if not allow_idle_dims:
+            idle = len(mesh) - sum(len(v) for v in by_grid.values())
+            unassigned = [g for g in grid_names if g not in by_grid]
+            if idle > 0 and unassigned:
+                continue
+        # expand tiling orders per grid dim with multiple binds
+        order_spaces = []
+        for g in grid_names:
+            binds = by_grid.get(g, [])
+            if len(binds) > 1:
+                order_spaces.append([tuple(p) for p in itertools.permutations(binds)])
+            else:
+                order_spaces.append([tuple(binds)])
+        for orders in itertools.product(*order_spaces):
+            spatial: List[SpatialBind] = []
+            for g, binds in zip(grid_names, orders):
+                for hw_name, hw_size in binds:
+                    spatial.append(SpatialBind(hw_name, hw_size, g))
+            # temporal loops for residual extents
+            residual = []
+            for d in program.grid_dims:
+                sf = math.prod(b.hw_size for b in spatial if b.grid_dim == d.name) or 1
+                ext = _ceil(d.extent, sf)
+                residual.append((d.name, ext))
+            movable = [(g, e) for g, e in residual if e > 1]
+            fixed = [(g, e) for g, e in residual if e <= 1]
+            temporal_orders = (list(itertools.permutations(movable))
+                               if movable else [()])
+            for t_order in temporal_orders:
+                temporal = tuple(TemporalLoop(f"t_{g}", g, e) for g, e in t_order)
+                # extent-1 waves are dropped (index fixed at 0)
+                m = Mapping(program=program, hw_name=hw.name, hw_dims=mesh,
+                            spatial=tuple(spatial), temporal=temporal)
+                key = (m.spatial, m.temporal)
+                if key in seen:
+                    continue
+                seen.add(key)
+                out.append(m)
+                if len(out) >= max_candidates:
+                    return tuple(out)
+    return tuple(out)

@@ -1,0 +1,280 @@
+"""Analytic performance model (paper S2.5).
+
+Evaluates a :class:`DataflowPlan` hierarchically from the innermost loop
+outward, exactly as the paper describes:
+
+* **compute** — each tile op is decomposed onto its unit type; ``N``
+  independent intrinsics on ``U`` units issuing ``r``/cycle cost
+  ``N/(U*r)`` cycles; ops in the same dependence segment but on different
+  unit types overlap (max), segments serialize (sum);
+* **overlap** — the innermost loop runs as a double-buffered
+  load-compute-store pipeline:
+  ``T ~ (I-2)*max(Tl+Ts, Tc) + max(Tl,Tc) + max(Ts,Tc) + Tl + Ts``;
+* **contention** — concurrent transfers are grouped by the ``df`` resources
+  they occupy; each resource's nominal bandwidth is partitioned among its
+  users, transfers on disjoint resources proceed in parallel
+  (``T = max over resources of sum(demand)/bandwidth``).
+
+The model deliberately stays coarse (the paper: "calibrated to be accurate
+enough to distinguish compute-bound from memory-bound mappings") — the
+event-driven ``simulator.py`` plays the role of the paper's on-hardware
+profiling stage for the top-k candidates.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Mapping as TMapping, Optional, Sequence, Tuple
+
+from .hw import HardwareModel, Interconnect
+from .plan import DataflowPlan
+from .reuse import MemOpChoice, StorePlacement
+
+
+@dataclass(frozen=True)
+class PlanCost:
+    """Everything the ranking and the reports need."""
+    total_s: float
+    compute_s: float                    # pure compute time (body x iters)
+    inner_load_s: float                 # per-innermost-iteration load time
+    inner_store_s: float
+    hoisted_s: float                    # serialized out-of-loop transfer time
+    dram_bytes: float                   # total off-chip traffic (whole array)
+    noc_bytes: float                    # total NoC traffic (whole array)
+    flops: float
+    buffer_bytes: int
+    utilization: float
+    bound: str                          # "compute" | "memory" | "noc"
+
+    @property
+    def tflops(self) -> float:
+        return self.flops / self.total_s / 1e12 if self.total_s > 0 else 0.0
+
+
+# --------------------------------------------------------------------------
+# Compute cost of the innermost tile body (per core)
+# --------------------------------------------------------------------------
+def body_compute_seconds(plan_or_mapping, hw: HardwareModel) -> float:
+    mapping = getattr(plan_or_mapping, "mapping", plan_or_mapping)
+    prog = mapping.program
+    core = hw.core
+    clock_hz = hw.clock_ghz * 1e9
+    segments: Dict[int, Dict[str, float]] = {}
+    for op in prog.body:
+        seg = segments.setdefault(op.segment, {})
+        if op.unit == "mat":
+            if core.mat is None:
+                raise ValueError(f"{hw.name} has no matrix unit for op {op.kind}")
+            n_intr = op.work / core.mat.flops_per_intrinsic
+            cycles = n_intr / (core.mat.count * core.mat.intrinsics_per_cycle)
+        elif op.unit == "vec":
+            if core.vec is None:
+                raise ValueError(f"{hw.name} has no vector unit for op {op.kind}")
+            n_intr = op.work / core.vec.width
+            cycles = n_intr / (core.vec.count * core.vec.intrinsics_per_cycle)
+        else:
+            lat = core.scalar.latency_cycles if core.scalar else 1.0
+            cycles = op.work * lat
+        seg[op.unit] = seg.get(op.unit, 0.0) + cycles
+    total_cycles = 0.0
+    for seg in segments.values():
+        total_cycles += max(seg.values())      # unit types overlap in a segment
+    return total_cycles / clock_hz
+
+
+# --------------------------------------------------------------------------
+# Memory-op timing with contention
+# --------------------------------------------------------------------------
+@dataclass
+class _Transfer:
+    """One memory operation instance at some loop level, with its aggregate
+    (whole-array) demand on each df resource per issue."""
+    name: str
+    level: int
+    kind: str                           # "load" | "store"
+    demand: Dict[str, float]            # resource -> bytes per issue (array-wide)
+    dram_bytes: float
+    noc_bytes: float
+
+
+def _resource_pools(hw: HardwareModel) -> Dict[str, float]:
+    """Aggregate bandwidth pools (bytes/s)."""
+    pools: Dict[str, float] = {}
+    pools["dram"] = hw.global_mem.bandwidth_gbps * 1e9 * hw.global_channels()
+    for ic in hw.interconnects:
+        pools[ic.name] = ic.bandwidth_gbps * 1e9 * hw.links_of(ic)
+    pools["l1"] = hw.local_mem.bandwidth_gbps * 1e9 * hw.n_cores
+    return pools
+
+
+def _load_transfer(c: MemOpChoice, plan: DataflowPlan,
+                   hw: HardwareModel) -> _Transfer:
+    m = plan.mapping
+    active = m.active_cores()
+    tile = c.access.tile_bytes
+    tiles = c.hoist.tiles_per_issue
+    bytes_per_core = tile * tiles
+    demand: Dict[str, float] = {}
+    noc_bytes = 0.0
+    if not c.bcast_axes:
+        # direct per-core global load: every active core fetches its tiles
+        dram = bytes_per_core * active
+        demand["dram"] = dram
+        demand["l1"] = dram
+    else:
+        sizes = {a: s for a, s in m.hw_dims}
+        repl = math.prod(sizes[a] for a in c.bcast_axes)
+        producers = max(1, active // repl)
+        dram = bytes_per_core * producers
+        demand["dram"] = dram
+        # staged multicast: along axis a_i, (s_i - 1) link-hops per receiving
+        # plane; earlier stages fan out to progressively more planes
+        planes = producers
+        for a in c.bcast_axes:
+            ic = hw.interconnect_along(a)
+            s = sizes[a]
+            leg = bytes_per_core * (s - 1) * planes
+            if ic is not None:
+                demand[ic.name] = demand.get(ic.name, 0.0) + leg
+            noc_bytes += leg
+            planes *= s
+        demand["l1"] = bytes_per_core * active      # every core lands a copy
+    return _Transfer(c.access.label(), c.hoist.level, "load",
+                     demand, demand.get("dram", 0.0), noc_bytes)
+
+
+def _store_transfer(s: StorePlacement, plan: DataflowPlan,
+                    hw: HardwareModel) -> _Transfer:
+    active = plan.mapping.active_cores()
+    bytes_all = s.access.tile_bytes * active
+    demand = {"dram": bytes_all, "l1": bytes_all}
+    return _Transfer(s.access.label(), s.level, "store", demand, bytes_all, 0.0)
+
+
+def _contended_time(transfers: Sequence[_Transfer],
+                    pools: TMapping[str, float]) -> float:
+    """Paper's contention rule: partition each resource's bandwidth among its
+    users; disjoint resources in parallel -> makespan = max over resources of
+    (total demand / bandwidth)."""
+    if not transfers:
+        return 0.0
+    busy: Dict[str, float] = {}
+    for t in transfers:
+        for res, b in t.demand.items():
+            busy[res] = busy.get(res, 0.0) + b / pools[res]
+    return max(busy.values())
+
+
+# --------------------------------------------------------------------------
+# Pipelined loop formula (paper S2.5, Figure 4)
+# --------------------------------------------------------------------------
+def pipelined_loop_time(I: int, t_load: float, t_store: float,
+                        t_body: float) -> float:
+    if I <= 0:
+        return 0.0
+    if I == 1:
+        return t_load + t_body + t_store
+    steady = (I - 2) * max(t_load + t_store, t_body)
+    return (steady + max(t_load, t_body) + max(t_store, t_body)
+            + t_load + t_store)
+
+
+# --------------------------------------------------------------------------
+# End-to-end estimation
+# --------------------------------------------------------------------------
+def estimate(plan: DataflowPlan, hw: HardwareModel, *,
+             pipeline_outer_levels: bool = False) -> PlanCost:
+    """Estimate end-to-end execution time of one candidate plan.
+
+    ``pipeline_outer_levels=False`` is the paper-faithful model (overlap only
+    in the innermost loop).  ``True`` additionally double-buffers hoisted
+    transfers against the inner loop body — the beyond-paper "collective /
+    compute overlap" optimization evaluated in EXPERIMENTS.md SPerf.
+    """
+    m = plan.mapping
+    prog = m.program
+    pools = _resource_pools(hw)
+
+    loops: List[Tuple[str, int]] = [(t.name, t.extent) for t in m.temporal]
+    loops += [(d.name, d.extent) for d in prog.seq_dims]
+    n = len(loops)
+
+    transfers = [_load_transfer(c, plan, hw) for c in plan.loads]
+    transfers += [_store_transfer(s, plan, hw) for s in plan.stores]
+    by_level: Dict[int, List[_Transfer]] = {}
+    for t in transfers:
+        by_level.setdefault(t.level, []).append(t)
+
+    t_body = body_compute_seconds(plan, hw)
+
+    # traffic bookkeeping (drives the paper's "-70% DRAM accesses" ablation
+    # and the roofline reports)
+    dram_bytes = noc_bytes = 0.0
+    for tr, issues in ((tr, _issues_at(tr.level, loops)) for tr in transfers):
+        dram_bytes += tr.dram_bytes * issues
+        noc_bytes += tr.noc_bytes * issues
+
+    # innermost level: pipelined load/compute/store (levels index positions:
+    # ops at level L sit between loop L-1 and loop L; level n = in-body)
+    inner = by_level.get(n, [])
+    t_load_in = _contended_time([t for t in inner if t.kind == "load"], pools)
+    t_store_in = _contended_time([t for t in inner if t.kind == "store"], pools)
+
+    hoisted_s = 0.0
+    if n == 0:
+        total = t_load_in + t_body + t_store_in
+    else:
+        _, I_in = loops[-1]
+        # consumes loop n-1 and the level-n (in-body) memory ops
+        total = pipelined_loop_time(I_in, t_load_in, t_store_in, t_body)
+        for lvl in range(n - 2, -1, -1):        # consume loop `lvl`
+            ops = by_level.get(lvl + 1, [])
+            t_ops_load = _contended_time([t for t in ops if t.kind == "load"], pools)
+            t_ops_store = _contended_time([t for t in ops if t.kind == "store"], pools)
+            _, I = loops[lvl]
+            if pipeline_outer_levels and (t_ops_load + t_ops_store) > 0:
+                new_total = pipelined_loop_time(I, t_ops_load, t_ops_store, total)
+                hoisted_s += max(0.0, new_total - I * total)
+                total = new_total
+            else:
+                total = I * (total + t_ops_load + t_ops_store)
+                hoisted_s += I * (t_ops_load + t_ops_store)
+        # level-0 ops (once per core, outside all temporal loops)
+        ops0 = by_level.get(0, [])
+        t0 = _contended_time(ops0, pools)
+        total += t0
+        hoisted_s += t0
+
+    flops = prog.mat_flops() + sum(op.work for op in prog.body
+                                   if op.unit != "mat") * prog.inner_iters * prog.n_blocks
+
+    compute_total = t_body * math.prod(e for _, e in loops) if loops else t_body
+    util = m.utilization()
+
+    # classify the bottleneck via the three roofline-style terms
+    t_dram = dram_bytes / pools["dram"]
+    noc_pools = {k: v for k, v in pools.items() if k not in ("dram", "l1")}
+    # per-resource accumulation for the NoC term
+    noc_busy: Dict[str, float] = {}
+    for tr in transfers:
+        issues = _issues_at(tr.level, loops)
+        for res, b in tr.demand.items():
+            if res in noc_pools:
+                noc_busy[res] = noc_busy.get(res, 0.0) + b * issues / noc_pools[res]
+    t_noc = max(noc_busy.values()) if noc_busy else 0.0
+    terms = {"compute": compute_total, "memory": t_dram, "noc": t_noc}
+    bound = max(terms, key=terms.get)
+
+    return PlanCost(total_s=total, compute_s=compute_total,
+                    inner_load_s=t_load_in, inner_store_s=t_store_in,
+                    hoisted_s=hoisted_s, dram_bytes=dram_bytes,
+                    noc_bytes=noc_bytes, flops=flops,
+                    buffer_bytes=plan.buffer_bytes(), utilization=util,
+                    bound=bound)
+
+
+def _issues_at(level: int, loops: Sequence[Tuple[str, int]]) -> int:
+    k = 1
+    for _, e in loops[:level]:
+        k *= e
+    return k

@@ -1,0 +1,187 @@
+"""End-to-end dataflow planner (paper S2.1 "two-step selection strategy").
+
+Pipeline per kernel:
+
+1. front-end block-shape exploration (``program_factory`` over candidate block
+   shapes);
+2. spatiotemporal mapping enumeration (S2.2);
+3. memory-operation mapping: broadcast x hoist design space, capacity-pruned
+   (S2.3);
+4. analytic ranking with the performance model (S2.5) -> keep top-k;
+5. "profiling": the event-driven simulator (the on-hardware stage stand-in,
+   DESIGN.md S4) -> pick the final top-1.
+
+``plan_kernel`` is the public entry point used by benchmarks and the JAX
+lowering layer.
+"""
+from __future__ import annotations
+
+import math
+import time
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional, Sequence, Tuple
+
+from .hw import HardwareModel
+from .mapping import Mapping, enumerate_mappings
+from .perfmodel import PlanCost, estimate
+from .plan import DataflowPlan, make_plan
+from .program import TileProgram
+from .reuse import enumerate_memop_choices
+from .simulator import SimResult, simulate
+
+
+@dataclass
+class Candidate:
+    plan: DataflowPlan
+    cost: PlanCost                       # analytic (ranking) cost
+    sim: Optional[SimResult] = None      # "profiled" cost (top-k only)
+
+    @property
+    def final_s(self) -> float:
+        return self.sim.total_s if self.sim is not None else self.cost.total_s
+
+
+@dataclass
+class PlanResult:
+    kernel: str
+    hw_name: str
+    best: Candidate
+    topk: List[Candidate]
+    n_candidates: int
+    n_mappings: int
+    plan_seconds: float
+    log: List[str] = field(default_factory=list)
+
+    def summary(self) -> str:
+        c = self.best
+        lines = [
+            f"kernel={self.kernel} hw={self.hw_name} "
+            f"candidates={self.n_candidates} mappings={self.n_mappings} "
+            f"plan_time={self.plan_seconds:.2f}s",
+            f"  best: {c.plan.describe()}",
+            f"  model: {c.cost.total_s * 1e6:.1f}us ({c.cost.tflops:.2f} TFLOP/s, "
+            f"{c.cost.bound}-bound)  dram={c.cost.dram_bytes / 1e6:.1f}MB "
+            f"noc={c.cost.noc_bytes / 1e6:.1f}MB",
+        ]
+        if c.sim:
+            lines.append(f"  sim:   {c.sim.total_s * 1e6:.1f}us "
+                         f"({c.sim.tflops:.2f} TFLOP/s)")
+        return "\n".join(lines)
+
+
+@dataclass
+class SearchBudget:
+    """Knobs bounding the search (paper Table 2 studies top-k; the others cap
+    pathological spaces without changing small-space results)."""
+    top_k: int = 5
+    max_mappings: int = 256
+    max_plans_per_mapping: int = 96
+    max_candidates: int = 20000
+    max_per_load: int = 12
+    min_utilization: float = 0.0        # prune mappings below this (0 = keep all)
+    pipeline_outer_levels: bool = False  # beyond-paper overlap (EXPERIMENTS SPerf)
+
+
+def enumerate_plans(program: TileProgram, hw: HardwareModel,
+                    budget: SearchBudget) -> Tuple[List[DataflowPlan], int]:
+    mappings = enumerate_mappings(program, hw,
+                                  max_candidates=budget.max_mappings)
+    if budget.min_utilization > 0:
+        best_u = max((m.utilization() for m in mappings), default=0.0)
+        mappings = tuple(m for m in mappings
+                         if m.utilization() >= budget.min_utilization * best_u)
+    plans: List[DataflowPlan] = []
+    for m in mappings:
+        combos = enumerate_memop_choices(m, hw, max_per_load=budget.max_per_load)
+        for loads in combos[:budget.max_plans_per_mapping]:
+            plans.append(make_plan(m, loads, hw))
+            if len(plans) >= budget.max_candidates:
+                return plans, len(mappings)
+    return plans, len(mappings)
+
+
+def plan_kernel(program: TileProgram, hw: HardwareModel, *,
+                budget: Optional[SearchBudget] = None,
+                profile: bool = True,
+                spatial_reuse: bool = True,
+                temporal_reuse: bool = True) -> PlanResult:
+    """Run the full TileLoom pipeline for one program on one target.
+
+    ``spatial_reuse`` / ``temporal_reuse`` disable the respective passes for
+    the paper's ablations (Table 1 / Fig 8): with spatial reuse off every load
+    is a per-core global load; with temporal reuse off every load stays at the
+    innermost level.
+    """
+    budget = budget or SearchBudget()
+    t0 = time.perf_counter()
+    plans, n_mappings = enumerate_plans(program, hw, budget)
+    plans = _apply_ablations(plans, spatial_reuse, temporal_reuse)
+    if not plans:
+        raise RuntimeError(f"no feasible plan for {program.name} on {hw.name} "
+                           f"(local memory too small for any tiling?)")
+    cands = [Candidate(p, estimate(p, hw,
+                                   pipeline_outer_levels=budget.pipeline_outer_levels))
+             for p in plans]
+    cands.sort(key=lambda c: c.cost.total_s)
+    topk = cands[:budget.top_k]
+    if profile:
+        for c in topk:
+            c.sim = simulate(c.plan, hw)
+        topk.sort(key=lambda c: c.final_s)
+    best = topk[0]
+    dt = time.perf_counter() - t0
+    return PlanResult(kernel=program.name, hw_name=hw.name, best=best,
+                      topk=topk, n_candidates=len(cands),
+                      n_mappings=n_mappings, plan_seconds=dt)
+
+
+def plan_kernel_multi(programs: Sequence[TileProgram], hw: HardwareModel, *,
+                      budget: Optional[SearchBudget] = None,
+                      profile: bool = True,
+                      spatial_reuse: bool = True,
+                      temporal_reuse: bool = True) -> PlanResult:
+    """Front-end block-shape exploration (S2.1): plan every candidate program
+    (one per block shape) and keep the global best.  Ranking pools candidates
+    across programs before the top-k profiling cut, exactly as the paper's
+    front-end + planner interact."""
+    budget = budget or SearchBudget()
+    t0 = time.perf_counter()
+    all_c: List[Candidate] = []
+    n_mappings = 0
+    for prog in programs:
+        try:
+            plans, nm = enumerate_plans(prog, hw, budget)
+        except Exception:
+            continue
+        n_mappings += nm
+        plans = _apply_ablations(plans, spatial_reuse, temporal_reuse)
+        for p in plans:
+            all_c.append(Candidate(p, estimate(
+                p, hw, pipeline_outer_levels=budget.pipeline_outer_levels)))
+    if not all_c:
+        raise RuntimeError("no feasible plan across any block shape")
+    all_c.sort(key=lambda c: c.cost.total_s)
+    topk = all_c[:budget.top_k]
+    if profile:
+        for c in topk:
+            c.sim = simulate(c.plan, hw)
+        topk.sort(key=lambda c: c.final_s)
+    dt = time.perf_counter() - t0
+    return PlanResult(kernel=programs[0].name.split("_b")[0] if programs else "?",
+                      hw_name=hw.name, best=topk[0], topk=topk,
+                      n_candidates=len(all_c), n_mappings=n_mappings,
+                      plan_seconds=dt)
+
+
+def _apply_ablations(plans: List[DataflowPlan], spatial: bool,
+                     temporal: bool) -> List[DataflowPlan]:
+    out = []
+    for p in plans:
+        if not spatial and any(c.bcast_axes for c in p.loads):
+            continue
+        if not temporal:
+            n = len(p.mapping.temporal) + len(p.program.seq_dims)
+            if any(c.hoist.level != n for c in p.loads):
+                continue
+        out.append(p)
+    return out

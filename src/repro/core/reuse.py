@@ -1,0 +1,249 @@
+"""Data-reuse analysis and memory-operation mapping (paper S2.3).
+
+For a fixed spatiotemporal mapping the loop nest contains spatial loops
+(``affine.parallel`` over core indices), temporal wave loops (``affine.for``)
+and sequential loops (``scf.for``).  Every access is an affine function of
+these indices, so:
+
+* an access **independent of a spatial index** is *spatially reusable* along
+  that hardware dim -> candidate for a NoC broadcast instead of per-core
+  global loads;
+* an access **independent of a temporal/sequential loop** is *temporally
+  reusable* across it -> candidate for hoisting the load outward, buffering
+  the tile(s) locally.
+
+Hoisting rules (paper Listing 4): crossing a loop the access does *not*
+depend on increases reuse at no buffer cost; crossing a loop it *does* depend
+on multiplies the buffered footprint by that loop's extent.  Consequently the
+only *meaningful* hoist points are "just above the j-th dependent loop,
+maximally hoisted across independent loops" — crossing an independent loop is
+free and strictly reduces traffic, so we canonicalize to those points (this
+prunes plans that are dominated under the paper's own cost model, keeping the
+design space exact w.r.t. distinguishable costs).
+"""
+from __future__ import annotations
+
+import itertools
+import math
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .affine import AffineMap, footprint_tiles
+from .hw import HardwareModel
+from .mapping import Mapping
+from .program import TileAccess
+
+
+@dataclass(frozen=True)
+class ReuseInfo:
+    """Reuse annotations for one access under one mapping (the paper's
+    "reuse annotations on the memory operations")."""
+    access: TileAccess
+    rewritten: AffineMap
+    spatial_axes: Tuple[str, ...]       # hw dims along which tile is identical
+    temporal_loops: Tuple[str, ...]     # temporal/seq loops it is independent of
+
+
+@dataclass(frozen=True)
+class HoistOption:
+    """One canonical hoist point for a load.
+
+    ``level`` indexes the temporal+sequential loop nest (0 = outside all of
+    them, i.e. once per core; n = innermost).  ``footprint_tiles`` is the
+    number of distinct tiles that must be simultaneously live;
+    ``issues_per_core`` how many times the (bulk) load is issued per core;
+    ``tiles_per_issue`` tiles moved per issue.
+    """
+    level: int
+    footprint_tiles: int
+    issues_per_core: int
+    tiles_per_issue: int
+
+
+@dataclass(frozen=True)
+class MemOpChoice:
+    """A concrete realization of one load: broadcast pattern + hoist point.
+
+    ``bcast_axes`` is an *ordered* tuple of hw spatial dims (the order encodes
+    the multi-dim broadcast realization, paper S2.3 "several concrete ways");
+    empty tuple = direct per-core global load.  Annotations mirror Listing 5's
+    ``{type=..., resources=...}``.
+    """
+    access: TileAccess
+    bcast_axes: Tuple[str, ...]
+    hoist: HoistOption
+
+    @property
+    def load_type(self) -> str:
+        return "broadcast" if self.bcast_axes else "global"
+
+    def resources(self, hw: HardwareModel) -> Tuple[str, ...]:
+        res = ["dram"] if True else []
+        for a in self.bcast_axes:
+            ic = hw.interconnect_along(a)
+            if ic is not None:
+                res.append(ic.name)
+        res.append("l1")
+        return tuple(res)
+
+    def annotate(self, hw: HardwareModel) -> str:
+        res = ", ".join(f"%{r}" for r in self.resources(hw))
+        return (f"load_{self.access.tensor.name} "
+                f"{{type=\"{self.load_type}\", level={self.hoist.level}, "
+                f"footprint_tiles={self.hoist.footprint_tiles}, "
+                f"resources={{{res}}}}}")
+
+
+@dataclass(frozen=True)
+class StorePlacement:
+    access: TileAccess
+    level: int
+    issues_per_core: int
+
+
+# --------------------------------------------------------------------------
+# Analysis
+# --------------------------------------------------------------------------
+def analyze_reuse(mapping: Mapping, hw: HardwareModel) -> Tuple[ReuseInfo, ...]:
+    """Paper S2.3 "Reuse analysis on affine accesses"."""
+    infos = []
+    noc_axes = set(hw.noc_axes())
+    t_loops = [t.name for t in mapping.temporal] + \
+              [d.name for d in mapping.program.seq_dims]
+    for acc in mapping.program.loads + mapping.program.stores:
+        rewritten = mapping.rewrite_access(acc)
+        sp = tuple(b.hw_dim for b in mapping.spatial
+                   if not rewritten.depends_on(b.hw_dim) and b.hw_dim in noc_axes)
+        tp = tuple(l for l in t_loops if not rewritten.depends_on(l))
+        infos.append(ReuseInfo(acc, rewritten, sp, tp))
+    return tuple(infos)
+
+
+def _nest_loops(mapping: Mapping) -> List[Tuple[str, int]]:
+    """Temporal + sequential loops, outer -> inner (spatial excluded: those are
+    parallel, not schedulable time)."""
+    loops = [(t.name, t.extent) for t in mapping.temporal]
+    loops += [(d.name, d.extent) for d in mapping.program.seq_dims]
+    return loops
+
+
+def hoist_options(info: ReuseInfo, mapping: Mapping) -> Tuple[HoistOption, ...]:
+    """Canonical hoist points for one load (see module docstring).
+
+    Enumerates, for j = 0..#dependent-loops, the point just above the j-th
+    dependent loop counted from innermost, maximally hoisted across
+    independent loops.  Footprints computed by exact affine enumeration.
+    """
+    loops = _nest_loops(mapping)
+    n = len(loops)
+    env = mapping.extents_env()
+    dep = [info.rewritten.depends_on(name) for name, _ in loops]
+
+    # candidate raw levels: innermost (n) and just-above each loop
+    canonical: List[int] = []
+    level = n
+    while True:
+        # hoist maximally across independent loops
+        while level > 0 and not dep[level - 1]:
+            level -= 1
+        if level not in canonical:
+            canonical.append(level)
+        if level == 0:
+            break
+        level -= 1          # cross one dependent loop, then re-canonicalize
+
+    out = []
+    for lvl in canonical:
+        inner = [name for name, _ in loops[lvl:]]
+        fp = footprint_tiles(info.rewritten, env, inner)
+        issues = 1
+        for name, ext in loops[:lvl]:
+            issues *= ext
+        out.append(HoistOption(level=lvl, footprint_tiles=fp,
+                               issues_per_core=issues, tiles_per_issue=fp))
+    return tuple(out)
+
+
+def broadcast_options(info: ReuseInfo) -> Tuple[Tuple[str, ...], ...]:
+    """All legal broadcast patterns: every ordered arrangement of every subset
+    of the spatially-reusable axes (paper: "from direct per-core global loads
+    to one-dimensional and multi-dimensional broadcasts")."""
+    axes = info.spatial_axes
+    pats: List[Tuple[str, ...]] = [()]
+    for r in range(1, len(axes) + 1):
+        for sub in itertools.combinations(axes, r):
+            for perm in itertools.permutations(sub):
+                pats.append(perm)
+    return tuple(dict.fromkeys(pats))
+
+
+def store_placement(info: ReuseInfo, mapping: Mapping) -> StorePlacement:
+    """Stores are issued at the deepest level whose inner loops are all
+    independent of the store address (once per distinct output tile, after the
+    reduction loops complete)."""
+    loops = _nest_loops(mapping)
+    n = len(loops)
+    lvl = n
+    while lvl > 0 and not info.rewritten.depends_on(loops[lvl - 1][0]):
+        lvl -= 1
+    issues = 1
+    for name, ext in loops[:lvl]:
+        issues *= ext
+    return StorePlacement(info.access, lvl, issues)
+
+
+def buffer_footprint_bytes(choices: Sequence[MemOpChoice],
+                           stores: Sequence[StorePlacement],
+                           mapping: Mapping) -> int:
+    """Peak local-memory bytes implied by a set of choices: hoisted-load
+    buffers (double-buffered when streamed at the innermost level), store
+    staging tiles, and block accumulators."""
+    n = len(_nest_loops(mapping))
+    total = 0
+    for c in choices:
+        buf = c.hoist.footprint_tiles * c.access.tile_bytes
+        if c.hoist.level == n:      # streamed in the innermost loop
+            buf *= 2                # double buffering (paper Fig 4)
+        total += buf
+    for s in stores:
+        total += s.access.tile_bytes
+    total += mapping.program.accumulator_bytes()
+    return total
+
+
+def enumerate_memop_choices(
+        mapping: Mapping, hw: HardwareModel, *,
+        max_per_load: int = 12,
+        capacity_fraction: float = 1.0) -> Tuple[Tuple[MemOpChoice, ...], ...]:
+    """The per-mapping memory-operation design space: the cross product of
+    (broadcast pattern x hoist point) over all loads, pruned by local-memory
+    capacity (paper: "discards options whose footprint exceeds the capacity
+    of the hardware model")."""
+    infos = analyze_reuse(mapping, hw)
+    load_infos = [i for i in infos if i.access.kind == "load"]
+    store_infos = [i for i in infos if i.access.kind == "store"]
+    stores = [store_placement(i, mapping) for i in store_infos]
+    capacity = hw.local_capacity() * capacity_fraction
+
+    sizes = dict(mapping.hw_dims)
+    per_load: List[List[MemOpChoice]] = []
+    for info in load_infos:
+        opts = []
+        for pat in broadcast_options(info):
+            for h in hoist_options(info, mapping):
+                opts.append(MemOpChoice(info.access, pat, h))
+        # order by estimated per-core global traffic (issues x tiles, divided
+        # by the broadcast replication factor) so that capped/truncated
+        # enumeration explores the high-reuse region of the space first
+        def _traffic(c: MemOpChoice) -> float:
+            repl = math.prod(sizes[a] for a in c.bcast_axes) or 1
+            return (c.hoist.issues_per_core * c.hoist.tiles_per_issue
+                    * c.access.tile_bytes / repl)
+        opts.sort(key=lambda c: (_traffic(c), c.hoist.footprint_tiles))
+        per_load.append(opts[:max_per_load])
+
+    plans = []
+    for combo in itertools.product(*per_load):
+        if buffer_footprint_bytes(combo, stores, mapping) <= capacity:
+            plans.append(tuple(combo))
+    return tuple(plans)

@@ -1,0 +1,259 @@
+"""Wave-accurate machine simulator — the "profile on hardware" stage.
+
+The paper's two-step selection ranks candidates with the coarse analytic model
+and then *profiles the top-k on real hardware*.  This container has no
+Tenstorrent card, so the profiling stage is played by this simulator, which is
+deliberately **higher-fidelity than the ranking model** so the two-step flow
+stays non-circular (see DESIGN.md S4):
+
+analytic model (perfmodel.py)           simulator (this file)
+--------------------------------------  -----------------------------------------
+aggregate bandwidth pools               per-DRAM-channel and per-NoC-ring
+                                        contention, resolved per wave
+waves folded into closed-form loops     every wave executed; ragged final waves
+                                        and partially-active meshes cost real time
+no launch cost                          per-wave dispatch/barrier overhead
+                                        (reproduces the paper's small-shape
+                                        degradation, S3.2 / Fig 9)
+steady-state pipeline formula           explicit fill/drain per wave, barrier at
+                                        wave boundaries (no cross-wave overlap)
+
+The simulator consumes the same :class:`DataflowPlan` and df hardware
+description as the model.
+"""
+from __future__ import annotations
+
+import itertools
+import math
+from dataclasses import dataclass
+from typing import Dict, List, Sequence, Tuple
+
+from .hw import HardwareModel
+from .perfmodel import body_compute_seconds, pipelined_loop_time
+from .plan import DataflowPlan
+from .reuse import MemOpChoice, StorePlacement
+
+
+@dataclass(frozen=True)
+class SimResult:
+    total_s: float
+    dram_bytes: float
+    noc_bytes: float
+    flops: float
+    n_waves: int
+    wave_overhead_s: float
+
+    @property
+    def tflops(self) -> float:
+        return self.flops / self.total_s / 1e12 if self.total_s > 0 else 0.0
+
+
+def _core_coords(plan: DataflowPlan) -> List[Dict[str, int]]:
+    dims = [(b.hw_dim, b.hw_size) for b in plan.mapping.spatial]
+    if not dims:
+        return [{}]
+    names = [d for d, _ in dims]
+    return [dict(zip(names, pt))
+            for pt in itertools.product(*[range(s) for _, s in dims])]
+
+
+def _wave_envs(plan: DataflowPlan) -> List[Dict[str, int]]:
+    ts = plan.mapping.temporal
+    if not ts:
+        return [{}]
+    names = [t.name for t in ts]
+    return [dict(zip(names, pt))
+            for pt in itertools.product(*[range(t.extent) for t in ts])]
+
+
+def _is_active(plan: DataflowPlan, env: Dict[str, int]) -> bool:
+    """A (core, wave) slot is active iff every grid index is in range
+    (ragged final waves leave cores idle — real cost the model ignores)."""
+    m = plan.mapping
+    for d in m.program.grid_dims:
+        idx = m.grid_index_expr(d.name).evaluate(env)
+        if idx >= d.extent:
+            return False
+    return True
+
+
+def simulate(plan: DataflowPlan, hw: HardwareModel, *,
+             launch_overhead_s: float = 20e-6,
+             wave_overhead_s: float = 2e-6,
+             max_waves_exact: int = 4096) -> SimResult:
+    """Simulate plan execution wave by wave.
+
+    For each wave: per-core inner-loop time uses the double-buffered pipeline
+    with *per-channel* / *per-ring* effective bandwidths resolved from the set
+    of cores actually active in this wave; the wave completes at the max over
+    cores (barrier), plus a dispatch overhead.  Hoisted transfers are charged
+    at the wave where their enclosing temporal index changes.
+    """
+    m = plan.mapping
+    prog = m.program
+    t_body = body_compute_seconds(plan, hw)
+    coords = _core_coords(plan)
+    waves = _wave_envs(plan)
+    n_temporal = len(m.temporal)
+    n_loops = n_temporal + len(prog.seq_dims)
+    seq_extents = [d.extent for d in prog.seq_dims]
+    inner_I = seq_extents[-1] if seq_extents else 1
+    outer_seq = math.prod(seq_extents[:-1]) if len(seq_extents) > 1 else 1
+
+    # wave decimation for very large temporal spaces: simulate a stride-sample
+    # and scale (documented fidelity cut; exact below max_waves_exact)
+    stride = max(1, len(waves) // max_waves_exact)
+    sampled = waves[::stride]
+    scale = len(waves) / len(sampled)
+
+    dram_bw = hw.global_mem.bandwidth_gbps * 1e9
+    link_bw = {ic.name: ic.bandwidth_gbps * 1e9 for ic in hw.interconnects}
+    l1_bw = hw.local_mem.bandwidth_gbps * 1e9
+    sizes = dict(m.hw_dims)
+
+    total = 0.0
+    dram_bytes = 0.0
+    noc_bytes = 0.0
+    prev_env: Dict[str, int] = {}
+
+    # pre-split ops
+    inner_loads = [c for c in plan.loads if c.hoist.level == n_loops]
+    hoisted_loads = [c for c in plan.loads if c.hoist.level < n_loops]
+    inner_stores = [s for s in plan.stores if s.level == n_loops]
+    outer_stores = [s for s in plan.stores if s.level < n_loops]
+
+    for env in sampled:
+        active = [c for c in coords if _is_active(plan, {**c, **env})]
+        if not active:
+            total += wave_overhead_s
+            continue
+
+        # --- contention census for this wave -------------------------------
+        # DRAM channels: one user per fetching core per op.  NoC rings: one
+        # user per *multicast operation* per ring instance (a ring multicast
+        # carries the tile once regardless of receiver count).
+        chan_users: Dict[Tuple[int, ...], int] = {}
+        ring_users: Dict[Tuple[str, Tuple[Tuple[str, int], ...]], int] = {}
+
+        for c in inner_loads:
+            if not c.bcast_axes:
+                for core in active:
+                    ch = hw.channel_of_core(core)
+                    chan_users[ch] = chan_users.get(ch, 0) + 1
+            else:
+                seen_rings = set()
+                for core in active:
+                    # producer cores (coordinate 0 along every bcast axis)
+                    # fetch from DRAM once
+                    if all(core.get(a, 0) == 0 for a in c.bcast_axes):
+                        ch = hw.channel_of_core(core)
+                        chan_users[ch] = chan_users.get(ch, 0) + 1
+                    for a in c.bcast_axes:
+                        ic = hw.interconnect_along(a)
+                        if ic is None:
+                            continue
+                        other = tuple(sorted((k, v) for k, v in core.items()
+                                             if k != a))
+                        key = (id(c), ic.name, other)
+                        if key in seen_rings:
+                            continue
+                        seen_rings.add(key)
+                        rk = (ic.name, other)
+                        ring_users[rk] = ring_users.get(rk, 0) + 1
+
+        # --- per-core inner-loop time ---------------------------------------
+        wave_time = 0.0
+        for core in active:
+            t_load = 0.0
+            for c in inner_loads:
+                tb = c.access.tile_bytes
+                if not c.bcast_axes:
+                    ch = hw.channel_of_core(core)
+                    users = max(1, chan_users.get(ch, 1))
+                    t_load += tb / (dram_bw / users)
+                else:
+                    t_leg = 0.0
+                    if all(core.get(a, 0) == 0 for a in c.bcast_axes):
+                        ch = hw.channel_of_core(core)
+                        users = max(1, chan_users.get(ch, 1))
+                        t_leg = tb / (dram_bw / users)
+                    t_noc = 0.0
+                    for a in c.bcast_axes:
+                        ic = hw.interconnect_along(a)
+                        if ic is None:
+                            continue
+                        other = tuple(sorted((k, v) for k, v in core.items() if k != a))
+                        users = max(1, ring_users.get((ic.name, other), 1))
+                        t_noc += tb / (link_bw[ic.name] / users)
+                    t_load += max(t_leg, t_noc)       # cut-through pipelining
+                t_load += tb / l1_bw
+            t_store = 0.0
+            for s in inner_stores:
+                ch = hw.channel_of_core(core)
+                users = max(1, chan_users.get(ch, 1))
+                t_store += s.access.tile_bytes / (dram_bw / max(1, users))
+            core_t = pipelined_loop_time(inner_I, t_load, t_store, t_body)
+            core_t *= outer_seq
+            wave_time = max(wave_time, core_t)
+
+        # --- hoisted transfers at temporal boundaries ------------------------
+        t_hoist = 0.0
+        for c in hoisted_loads:
+            # reload when any temporal loop outer to the hoist level changed;
+            # loads hoisted *within* the sequential nest re-issue once per
+            # iteration of the seq loops outer to their level
+            changed = (not prev_env) or any(
+                env.get(t.name, 0) != prev_env.get(t.name, 0)
+                for t in m.temporal[:min(c.hoist.level, n_temporal)])
+            if changed:
+                seq_issues = (math.prod(seq_extents[:c.hoist.level - n_temporal])
+                              if c.hoist.level > n_temporal else 1)
+                tb = c.access.tile_bytes * c.hoist.tiles_per_issue * seq_issues
+                if c.bcast_axes:
+                    repl = math.prod(sizes[a] for a in c.bcast_axes)
+                    producers = max(1, len(active) // repl)
+                    t_dram = tb * producers / (dram_bw * hw.global_channels())
+                    slowest_ring = min((link_bw[hw.interconnect_along(a).name]
+                                        for a in c.bcast_axes
+                                        if hw.interconnect_along(a)), default=None)
+                    t_nc = tb / slowest_ring if slowest_ring else 0.0
+                    t_hoist += max(t_dram, t_nc)
+                    dram_bytes += tb * producers * scale
+                    planes = producers
+                    for a in c.bcast_axes:
+                        noc_bytes += tb * (sizes[a] - 1) * planes * scale
+                        planes *= sizes[a]
+                else:
+                    t_hoist += tb * len(active) / (dram_bw * hw.global_channels())
+                    dram_bytes += tb * len(active) * scale
+
+        # --- traffic bookkeeping for inner ops ------------------------------
+        iters = inner_I * outer_seq
+        for c in inner_loads:
+            tb = c.access.tile_bytes * iters
+            if c.bcast_axes:
+                repl = math.prod(sizes[a] for a in c.bcast_axes)
+                producers = max(1, len(active) // repl)
+                dram_bytes += tb * producers * scale
+                planes = producers
+                for a in c.bcast_axes:
+                    noc_bytes += tb * (sizes[a] - 1) * planes * scale
+                    planes *= sizes[a]
+            else:
+                dram_bytes += tb * len(active) * scale
+        for s in inner_stores:
+            dram_bytes += s.access.tile_bytes * iters * len(active) * scale
+        for s in outer_stores:
+            dram_bytes += s.access.tile_bytes * len(active) * scale
+            t_hoist += s.access.tile_bytes * len(active) / (dram_bw * hw.global_channels())
+
+        total += wave_time + t_hoist + wave_overhead_s
+        prev_env = env
+
+    total *= scale
+    total += launch_overhead_s        # per-kernel dispatch cost (paper S3.2:
+    #                                   small shapes dominated by overheads)
+    flops = prog.mat_flops()
+    return SimResult(total_s=total, dram_bytes=dram_bytes, noc_bytes=noc_bytes,
+                     flops=flops, n_waves=len(waves),
+                     wave_overhead_s=wave_overhead_s)

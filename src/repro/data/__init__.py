@@ -1,0 +1,1 @@
+from .pipeline import DataConfig, FileTokens, SyntheticLM, batches, host_batch_slice, make_source

@@ -1,0 +1,14 @@
+# Pallas TPU kernels for the compute hot-spots the paper optimizes
+# (GEMM and FlashAttention, paper S3.2) plus the model-zoo hot-spots the
+# TileLoom planner schedules (flash-decode, RWKV6 WKV scan, MoE grouped
+# matmul).  Each kernel has a pure-jnp oracle in ref.py; ops.py holds the
+# jit'd public wrappers with planner-chosen BlockSpecs.
+from . import ops, ref
+from .flash_attention import flash_attention
+from .flash_decode import combine_partials, flash_decode_partials
+from .gemm import gemm
+from .moe_gmm import grouped_matmul
+from .rwkv6 import wkv6
+
+__all__ = ["ops", "ref", "flash_attention", "flash_decode_partials",
+           "combine_partials", "gemm", "grouped_matmul", "wkv6"]

@@ -1,0 +1,102 @@
+"""FlashAttention forward Pallas kernel (TPU target; paper workload #2).
+
+Online-softmax tiling: grid = (batch*heads, Q-blocks, KV-blocks) with the KV
+axis innermost; running max / sum / output accumulator live in VMEM scratch
+that persists across the sequential KV grid iterations (the TPU "arbitrary"
+grid-dimension semantics; also honoured by interpret mode).  Block shapes
+``(bq, bkv)`` are chosen by the TileLoom intra-chip planner
+(``core/lower_jax.py``) against the VMEM capacity of the df chip description.
+
+Supports the non-causal variant the paper evaluates (S3.2: "we focus on the
+non-causal variant") and the causal variant for the model zoo.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_KV = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  n_kv: int, sm_scale: float, causal: bool,
+                  bq: int, bkv: int):
+    kv_idx = pl.program_id(2)
+
+    @pl.when(kv_idx == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]                       # (bq, d)
+    k = k_ref[0]                       # (bkv, d)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    s = s * sm_scale                   # (bq, bkv)
+
+    if causal:
+        q_idx = pl.program_id(1)
+        q_pos = q_idx * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+        k_pos = kv_idx * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+        s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+
+    m_prev = m_ref[...]                # (bq, 1)
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)             # (bq, bkv)
+    alpha = jnp.exp(m_prev - m_new)    # rescale factor for old stats
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p.astype(v_ref.dtype), v_ref[0], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(kv_idx == n_kv - 1)
+    def _store():
+        l = l_ref[...]
+        l = jnp.where(l == 0.0, 1.0, l)      # fully-masked rows -> zeros
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    sm_scale: Optional[float] = None,
+                    causal: bool = False,
+                    block_q: int = DEFAULT_BLOCK_Q,
+                    block_kv: int = DEFAULT_BLOCK_KV,
+                    interpret: bool = False) -> jax.Array:
+    """q: (BH, Sq, d), k/v: (BH, Skv, d) -> (BH, Sq, d)."""
+    BH, Sq, d = q.shape
+    _, Skv, _ = k.shape
+    bq = min(block_q, Sq)
+    bkv = min(block_kv, Skv)
+    assert Sq % bq == 0 and Skv % bkv == 0, (
+        f"seq lens {(Sq, Skv)} not divisible by blocks {(bq, bkv)}")
+    sm_scale = sm_scale if sm_scale is not None else d ** -0.5
+    n_kv = Skv // bkv
+    kernel = functools.partial(_flash_kernel, n_kv=n_kv, sm_scale=sm_scale,
+                               causal=causal, bq=bq, bkv=bkv)
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, Sq // bq, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, bkv, d), lambda h, i, j: (h, j, 0)),
+            pl.BlockSpec((1, bkv, d), lambda h, i, j: (h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda h, i, j: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),     # running max
+            pltpu.VMEM((bq, 1), jnp.float32),     # running denom
+            pltpu.VMEM((bq, d), jnp.float32),     # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

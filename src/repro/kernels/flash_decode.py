@@ -1,0 +1,111 @@
+"""Flash-decode Pallas kernel: one query token vs. a long KV cache.
+
+Decode shapes (``decode_32k``, ``long_500k``) are bandwidth-bound: a single
+query attends to a KV cache of up to 512k tokens.  The TPU-native adaptation
+of TileLoom's "split the reusable operand across cores" insight is to split
+the *KV sequence* across the grid, compute partial (max, sum-exp, weighted-V)
+statistics per split, and combine them with a log-sum-exp reduction — the
+intra-chip mirror of sequence-parallel flash decoding across the mesh
+(``parallel/planner_bridge.py`` plans the cross-chip version of the same
+dataflow).
+
+Grid = (batch*heads, kv_splits); each program reduces its KV strip
+sequentially in VMEM-sized blocks.  Outputs are per-split partials; the
+``ops.py`` wrapper performs the final combine in plain JAX (cheap:
+O(splits x d)).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+DEFAULT_BLOCK_KV = 512
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, om_ref, ol_ref, oacc_ref, *,
+                   sm_scale: float, block_kv: int, split_len: int):
+    q = q_ref[0]                            # (1, d)  single query row
+    n_blocks = split_len // block_kv
+
+    def body(i, carry):
+        m, l, acc = carry
+        k = k_ref[0, pl.dslice(i * block_kv, block_kv), :]
+        v = v_ref[0, pl.dslice(i * block_kv, block_kv), :]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s * sm_scale                     # (1, block_kv)
+        m_new = jnp.maximum(m, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc = acc * alpha + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        return m_new, l, acc
+
+    d = q.shape[-1]
+    m0 = jnp.full((1, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((1, 1), jnp.float32)
+    a0 = jnp.zeros((1, d), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, n_blocks, body, (m0, l0, a0))
+    om_ref[0, 0] = m
+    ol_ref[0, 0] = l
+    oacc_ref[0, 0] = acc
+
+
+def flash_decode_partials(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                          kv_splits: int = 8,
+                          block_kv: int = DEFAULT_BLOCK_KV,
+                          sm_scale: float | None = None,
+                          interpret: bool = False
+                          ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """q: (BH, 1, d); k/v: (BH, Skv, d) -> per-split (m, l, acc) partials of
+    shapes (BH, splits, 1, 1), (BH, splits, 1, 1), (BH, splits, 1, d)."""
+    BH, one, d = q.shape
+    assert one == 1, "decode kernel takes a single query token"
+    _, Skv, _ = k.shape
+    assert Skv % kv_splits == 0, (Skv, kv_splits)
+    split_len = Skv // kv_splits
+    block = min(block_kv, split_len)
+    assert split_len % block == 0
+    sm_scale = sm_scale if sm_scale is not None else d ** -0.5
+    kernel = functools.partial(_decode_kernel, sm_scale=sm_scale,
+                               block_kv=block, split_len=split_len)
+    m, l, acc = pl.pallas_call(
+        kernel,
+        grid=(BH, kv_splits),
+        in_specs=[
+            pl.BlockSpec((1, 1, d), lambda h, s: (h, 0, 0)),
+            pl.BlockSpec((1, split_len, d), lambda h, s: (h, s, 0)),
+            pl.BlockSpec((1, split_len, d), lambda h, s: (h, s, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, 1), lambda h, s: (h, s, 0, 0)),
+            pl.BlockSpec((1, 1, 1, 1), lambda h, s: (h, s, 0, 0)),
+            pl.BlockSpec((1, 1, 1, d), lambda h, s: (h, s, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, kv_splits, 1, 1), jnp.float32),
+            jax.ShapeDtypeStruct((BH, kv_splits, 1, 1), jnp.float32),
+            jax.ShapeDtypeStruct((BH, kv_splits, 1, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return m, l, acc
+
+
+def combine_partials(m: jax.Array, l: jax.Array, acc: jax.Array,
+                     out_dtype=jnp.float32) -> jax.Array:
+    """Log-sum-exp combine of per-split partials -> (BH, 1, d)."""
+    m_g = jnp.max(m, axis=1, keepdims=True)            # (BH, 1, 1, 1)
+    scale = jnp.exp(m - m_g)                           # (BH, S, 1, 1)
+    l_g = jnp.sum(l * scale, axis=1)                   # (BH, 1, 1)
+    acc_g = jnp.sum(acc * scale, axis=1)               # (BH, 1, d)
+    l_g = jnp.where(l_g == 0.0, 1.0, l_g)
+    return (acc_g / l_g).astype(out_dtype)

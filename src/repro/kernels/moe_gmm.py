@@ -1,0 +1,64 @@
+"""Grouped (per-expert) matmul Pallas kernel for MoE layers.
+
+Capacity-based MoE routing produces a dense (E, cap, d_in) activation tensor
+(tokens gathered per expert, padded to capacity); the expert FFN is then a
+batched-by-expert GEMM.  Grid = (E, cap/bm, d_out/bn, d_in/bk), contraction
+innermost with an f32 VMEM accumulator — the expert axis is the outermost
+grid dim so each expert's weight block streams through VMEM once per output
+tile (the TileLoom temporal-reuse hoist applied inside the chip).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK = (128, 128, 128)
+
+
+def _gmm_kernel(x_ref, w_ref, o_ref, acc_ref, *, n_k: int):
+    @pl.when(pl.program_id(3) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(x_ref[0], w_ref[0],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(3) == n_k - 1)
+    def _store():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+def grouped_matmul(x: jax.Array, w: jax.Array, *,
+                   block: Tuple[int, int, int] = DEFAULT_BLOCK,
+                   out_dtype: Optional[jnp.dtype] = None,
+                   interpret: bool = False) -> jax.Array:
+    """x: (E, cap, d_in), w: (E, d_in, d_out) -> (E, cap, d_out)."""
+    E, cap, d_in = x.shape
+    E2, d_in2, d_out = w.shape
+    assert E == E2 and d_in == d_in2, (x.shape, w.shape)
+    bm, bn, bk = block
+    bm = min(bm, cap)
+    bn = min(bn, d_out)
+    bk = min(bk, d_in)
+    assert cap % bm == 0 and d_out % bn == 0 and d_in % bk == 0, (
+        f"shape {(cap, d_out, d_in)} not divisible by block {(bm, bn, bk)}")
+    n_k = d_in // bk
+    out_dtype = out_dtype or x.dtype
+    kernel = functools.partial(_gmm_kernel, n_k=n_k)
+    return pl.pallas_call(
+        kernel,
+        grid=(E, cap // bm, d_out // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((1, bm, bk), lambda e, i, j, k: (e, i, k)),
+            pl.BlockSpec((1, bk, bn), lambda e, i, j, k: (e, k, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bn), lambda e, i, j, k: (e, i, j)),
+        out_shape=jax.ShapeDtypeStruct((E, cap, d_out), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, w)

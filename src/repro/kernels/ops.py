@@ -1,0 +1,153 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Responsibilities:
+* pad/fit shapes to legal block multiples (largest power-of-two divisor);
+* pick block shapes via the TileLoom intra-chip planner when not given
+  (``core/lower_jax.py`` sizes them against the TPU df chip description);
+* select interpret mode automatically off-TPU (kernels execute in Python on
+  CPU for correctness validation; real deployments run the compiled Mosaic
+  path).
+
+Model code calls these through ``repro.models.layers`` with a
+``kernels="pallas" | "xla"`` switch: "xla" (plain jnp, fused by XLA) is the
+default for CPU smoke tests and for the dry-run (whose roofline is derived
+from XLA HLO), "pallas" is the TPU fast path and the unit-test subject.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import flash_attention as _fa
+from . import flash_decode as _fd
+from . import gemm as _gemm
+from . import moe_gmm as _moe
+from . import ref as ref
+from . import rwkv6 as _rwkv
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _interpret(flag: Optional[bool]) -> bool:
+    return (not on_tpu()) if flag is None else flag
+
+
+def fit_block(n: int, desired: int, minimum: int = 8) -> int:
+    """Largest power-of-two divisor of ``n`` that is <= desired (>= minimum
+    when possible)."""
+    b = 1
+    while b * 2 <= desired and n % (b * 2) == 0:
+        b *= 2
+    return max(b, min(n, 1)) if b >= 1 else 1
+
+
+@functools.partial(jax.jit, static_argnames=("block", "out_dtype", "interpret"))
+def _matmul_impl(a, b, block, out_dtype, interpret):
+    return _gemm.gemm(a, b, block=block, out_dtype=out_dtype,
+                      interpret=interpret)
+
+
+def matmul(a: jax.Array, b: jax.Array, *,
+           block: Optional[Tuple[int, int, int]] = None,
+           out_dtype=None, interpret: Optional[bool] = None) -> jax.Array:
+    """Planner-blocked GEMM.  Fits blocks to the shape when not given."""
+    M, K = a.shape
+    _, N = b.shape
+    if block is None:
+        from repro.core.lower_jax import plan_gemm_blocks
+        block = plan_gemm_blocks(M, N, K, a.dtype)
+    bm = fit_block(M, block[0])
+    bn = fit_block(N, block[1])
+    bk = fit_block(K, block[2])
+    return _matmul_impl(a, b, (bm, bn, bk), out_dtype, _interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_kv",
+                                             "interpret", "sm_scale"))
+def _attn_impl(q, k, v, sm_scale, causal, block_q, block_kv, interpret):
+    return _fa.flash_attention(q, k, v, sm_scale=sm_scale, causal=causal,
+                               block_q=block_q, block_kv=block_kv,
+                               interpret=interpret)
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              sm_scale: Optional[float] = None, causal: bool = False,
+              block_q: Optional[int] = None, block_kv: Optional[int] = None,
+              interpret: Optional[bool] = None) -> jax.Array:
+    """FlashAttention fwd.  q: (BH, Sq, d); k/v: (BH, Skv, d)."""
+    BH, Sq, d = q.shape
+    Skv = k.shape[1]
+    if block_q is None or block_kv is None:
+        from repro.core.lower_jax import plan_flash_blocks
+        pq, pkv = plan_flash_blocks(Sq, Skv, d, q.dtype)
+        block_q = block_q or pq
+        block_kv = block_kv or pkv
+    bq = fit_block(Sq, block_q)
+    bkv = fit_block(Skv, block_kv)
+    scale = sm_scale if sm_scale is not None else d ** -0.5
+    return _attn_impl(q, k, v, scale, causal, bq, bkv, _interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("kv_splits", "block_kv",
+                                             "interpret", "sm_scale"))
+def _decode_impl(q, k, v, sm_scale, kv_splits, block_kv, interpret):
+    m, l, acc = _fd.flash_decode_partials(q, k, v, kv_splits=kv_splits,
+                                          block_kv=block_kv,
+                                          sm_scale=sm_scale,
+                                          interpret=interpret)
+    return _fd.combine_partials(m, l, acc, out_dtype=q.dtype)
+
+
+def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                 sm_scale: Optional[float] = None, kv_splits: int = 8,
+                 block_kv: Optional[int] = None,
+                 interpret: Optional[bool] = None) -> jax.Array:
+    """Decode attention: q: (BH, 1, d) vs. k/v: (BH, Skv, d)."""
+    BH, _, d = q.shape
+    Skv = k.shape[1]
+    splits = fit_block(Skv, kv_splits)
+    split_len = Skv // splits
+    bkv = fit_block(split_len, block_kv or _fd.DEFAULT_BLOCK_KV)
+    scale = sm_scale if sm_scale is not None else d ** -0.5
+    return _decode_impl(q, k, v, scale, splits, bkv, _interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def _wkv6_impl(r, k, v, log_w, u, chunk, interpret):
+    return _rwkv.wkv6(r, k, v, log_w, u, chunk=chunk, interpret=interpret)
+
+
+def wkv6(r: jax.Array, k: jax.Array, v: jax.Array, log_w: jax.Array,
+         u: jax.Array, *, chunk: int = _rwkv.DEFAULT_CHUNK,
+         interpret: Optional[bool] = None) -> jax.Array:
+    """RWKV6 WKV scan.  r/k/v/log_w: (BH, T, d); u: (BH, d)."""
+    T = r.shape[1]
+    c = fit_block(T, chunk)
+    return _wkv6_impl(r, k, v, log_w, u, c, _interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("block", "out_dtype", "interpret"))
+def _gmm_impl(x, w, block, out_dtype, interpret):
+    return _moe.grouped_matmul(x, w, block=block, out_dtype=out_dtype,
+                               interpret=interpret)
+
+
+def grouped_matmul(x: jax.Array, w: jax.Array, *,
+                   block: Optional[Tuple[int, int, int]] = None,
+                   out_dtype=None,
+                   interpret: Optional[bool] = None) -> jax.Array:
+    """Per-expert GEMM.  x: (E, cap, d_in), w: (E, d_in, d_out)."""
+    E, cap, d_in = x.shape
+    d_out = w.shape[-1]
+    if block is None:
+        from repro.core.lower_jax import plan_gemm_blocks
+        block = plan_gemm_blocks(cap, d_out, d_in, x.dtype)
+    bm = fit_block(cap, block[0])
+    bn = fit_block(d_out, block[1])
+    bk = fit_block(d_in, block[2])
+    return _gmm_impl(x, w, (bm, bn, bk), out_dtype, _interpret(interpret))

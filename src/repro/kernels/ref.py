@@ -1,0 +1,69 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def gemm_ref(a: jax.Array, b: jax.Array,
+             out_dtype: Optional[jnp.dtype] = None) -> jax.Array:
+    out_dtype = out_dtype or a.dtype
+    return jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32)).astype(out_dtype)
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  sm_scale: Optional[float] = None,
+                  causal: bool = False) -> jax.Array:
+    """Dense softmax attention.  q: (BH, Sq, d), k/v: (BH, Skv, d)."""
+    d = q.shape[-1]
+    sm_scale = sm_scale if sm_scale is not None else d ** -0.5
+    s = jnp.einsum("hqd,hkd->hqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * sm_scale
+    if causal:
+        Sq, Skv = s.shape[-2], s.shape[-1]
+        qi = jnp.arange(Sq)[:, None]
+        ki = jnp.arange(Skv)[None, :]
+        s = jnp.where(qi >= ki, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("hqk,hkd->hqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def decode_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+               sm_scale: Optional[float] = None) -> jax.Array:
+    """Single-token decode: q: (BH, 1, d)."""
+    return attention_ref(q, k, v, sm_scale=sm_scale, causal=False)
+
+
+def wkv6_ref(r: jax.Array, k: jax.Array, v: jax.Array, log_w: jax.Array,
+             u: jax.Array) -> jax.Array:
+    """Token-level RWKV6 recurrence (the chunked kernel's oracle).
+
+    o_t = r_t . (S_{t-1} + u (.) k_t v_t^T);  S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    r/k/v/log_w: (BH, T, d); u: (BH, d).
+    """
+    BH, T, d = r.shape
+    w = jnp.exp(jnp.clip(log_w.astype(jnp.float32), -1e9, 0.0))
+
+    def head_scan(rh, kh, vh, wh, uh):
+        def step(S, inputs):
+            rt, kt, vt, wt = inputs
+            kv = kt[:, None] * vt[None, :]                 # (d, d)
+            o = rt @ (S + uh[:, None] * kv)                # (d,)
+            S = wt[:, None] * S + kv
+            return S, o
+        S0 = jnp.zeros((d, d), jnp.float32)
+        _, o = jax.lax.scan(step, S0, (rh, kh, vh, wh))
+        return o
+
+    o = jax.vmap(head_scan)(r.astype(jnp.float32), k.astype(jnp.float32),
+                            v.astype(jnp.float32), w, u.astype(jnp.float32))
+    return o.astype(r.dtype)
+
+
+def grouped_matmul_ref(x: jax.Array, w: jax.Array,
+                       out_dtype: Optional[jnp.dtype] = None) -> jax.Array:
+    out_dtype = out_dtype or x.dtype
+    return jnp.einsum("eci,eio->eco", x.astype(jnp.float32),
+                      w.astype(jnp.float32)).astype(out_dtype)

@@ -1,0 +1,251 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+# ^ MUST precede any jax import: jax locks the device count on first init.
+"""Multi-pod dry-run: prove the distribution config is coherent.
+
+For every (architecture x input-shape x mesh) cell:
+
+    with mesh:
+        lowered  = jax.jit(step, in_shardings=..., out_shardings=...) \\
+                       .lower(*input_specs)
+        compiled = lowered.compile()
+        print(compiled.memory_analysis())    # proves it fits
+        print(compiled.cost_analysis())      # FLOPs/bytes for SRoofline
+
+Shardings come from the TileLoom mesh planner (``--plan auto``, the default)
+or a named fixed plan.  Results (memory/cost/collective bytes + roofline
+terms) are dumped as JSON under ``reports/dryrun/`` for EXPERIMENTS.md.
+
+Run one cell:     python -m repro.launch.dryrun --arch qwen2.5-3b \\
+                      --shape train_4k --mesh single
+Run all cells:    python -m repro.launch.dryrun --all   (spawns subprocesses
+                  so each cell gets a fresh XLA runtime)
+"""
+import argparse
+import json
+import math
+import subprocess
+import sys
+import time
+import traceback
+from pathlib import Path
+
+REPORT_DIR = Path(__file__).resolve().parents[3] / "reports" / "dryrun"
+
+
+def _train_cfg(arch: str):
+    from repro.configs.base import TrainConfig
+    if arch in ("llama3-405b",):
+        return TrainConfig(optimizer="adafactor", opt_state_dtype="bfloat16",
+                           microbatches=64)
+    if arch in ("deepseek-67b",):
+        return TrainConfig(opt_state_dtype="bfloat16", microbatches=8)
+    return TrainConfig(microbatches=4)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             plan_name: str = "auto", out_dir: Path = REPORT_DIR,
+             *, microbatches: int = 0, grad_compression: str = "",
+             remat: str = "", tag: str = "") -> dict:
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.configs import get_config, get_shape, cell_skip_reason
+    from repro.models import build_model
+    from repro.parallel import sharding as SH
+    from repro.parallel.planner_bridge import plan_mesh, tileloom_view
+    from repro.train import serve_step as SS, train_step as TS
+    from . import roofline as RL
+    from .mesh import make_production_mesh
+
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    skip = cell_skip_reason(cfg, shape)
+    if skip:
+        return {"arch": arch, "shape": shape_name, "skipped": skip}
+
+    tcfg = _train_cfg(arch)
+    if microbatches:
+        import dataclasses
+        tcfg = dataclasses.replace(tcfg, microbatches=microbatches)
+    if grad_compression:
+        import dataclasses
+        tcfg = dataclasses.replace(tcfg, grad_compression=grad_compression)
+    if remat:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, remat=(remat != "off"))
+    api = build_model(cfg)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    chips = math.prod(mesh.devices.shape)
+
+    # ---- plan selection (TileLoom step 1) --------------------------------
+    ranked = plan_mesh(api, shape, tcfg, multi_pod=multi_pod)
+    if plan_name == "auto":
+        chosen = ranked[0]
+        if not chosen.cost.feasible:
+            raise RuntimeError(
+                f"no feasible plan for {arch}/{shape_name}: "
+                + "; ".join(f"{r.plan.name}:{r.notes}" for r in ranked))
+        plan = chosen.plan
+    else:
+        plan = dict(SH.FIXED_PLANS, zero3=None)[plan_name]() \
+            if plan_name in SH.FIXED_PLANS else \
+            next(r.plan for r in ranked if r.plan.name == plan_name)
+
+    t0 = time.perf_counter()
+    is_train = shape.kind == "train"
+    with mesh:
+        if shape.kind == "train":
+            specs = api.input_specs(shape)
+            state_abs = TS.abstract_state(api, tcfg)
+            jitted = TS.jit_train_step(api, tcfg, plan, mesh, specs)
+            lowered = jitted.lower(state_abs, specs)
+        elif shape.kind == "prefill":
+            specs = api.input_specs(shape)
+
+            def prefill_step(params, batch):
+                with SH.use_plan(plan, mesh):
+                    return api.logits_fn(params, batch)
+
+            p_sh = SS.param_shardings(api, plan, mesh)
+            b_sh = TS.batch_shardings(specs, plan, mesh)
+            lowered = jax.jit(prefill_step, in_shardings=(p_sh, b_sh)) \
+                .lower(api.abstract_params(), specs)
+        else:  # decode
+            specs = api.input_specs(shape)
+            jitted = SS.jit_serve_step(api, plan, mesh, specs["cache"],
+                                       tokens_shape=tuple(
+                                           specs["tokens"].shape))
+            lowered = jitted.lower(api.abstract_params(), specs["tokens"],
+                                   specs["cache"])
+        compiled = lowered.compile()
+    compile_s = time.perf_counter() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    tokens = shape.global_batch * (shape.seq_len
+                                   if shape.kind != "decode" else 1)
+    mf = RL.model_flops_estimate(api.n_active_params(), tokens, is_train)
+    trips = RL.trips_by_depth_for(cfg, shape.kind, tcfg.microbatches,
+                                  shape.seq_len)
+    report = RL.from_compiled(arch, shape_name, mesh_name, chips,
+                              dict(cost) if cost else {}, hlo, mf,
+                              trips_by_depth=trips)
+
+    mem_row = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes",
+              "alias_size_in_bytes"):
+        mem_row[k] = getattr(mem, k, None)
+    args_b = mem_row.get("argument_size_in_bytes") or 0
+    temp_b = mem_row.get("temp_size_in_bytes") or 0
+    alias_b = mem_row.get("alias_size_in_bytes") or 0
+    per_device_bytes = args_b + temp_b - alias_b
+
+    row = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name, "chips": chips,
+        "plan": plan.name, "compile_s": round(compile_s, 2),
+        "memory_analysis": mem_row,
+        "per_device_bytes": per_device_bytes,
+        "fits_hbm": per_device_bytes <= 16e9,
+        "planner_ranking": [
+            {"plan": r.plan.name, "total_s": r.cost.total_s,
+             "dominant": r.cost.dominant, "feasible": r.cost.feasible,
+             "hbm_gb": round(r.cost.hbm_bytes_per_chip / 1e9, 2),
+             "notes": r.notes}
+            for r in ranked],
+        "tileloom_view": tileloom_view(plan, cfg),
+        "roofline": report.row(),
+    }
+    # decode cells are bandwidth-bound by design: also report the structural
+    # minimum HBM traffic (params + cache read once) vs the HLO traffic
+    if shape.kind == "decode":
+        import numpy as _np
+        pbytes = sum(_np.prod(l.shape) * jnp.dtype(l.dtype).itemsize
+                     for l in jax.tree.leaves(api.abstract_params()))
+        cbytes = sum(_np.prod(l.shape) * jnp.dtype(l.dtype).itemsize
+                     for l in jax.tree.leaves(specs["cache"]))
+        row["roofline"]["min_stream_bytes"] = float(pbytes + cbytes)
+        row["roofline"]["bw_fraction"] = float(
+            (pbytes + cbytes) / max(report.hlo_bytes, 1.0))
+    out_dir.mkdir(parents=True, exist_ok=True)
+    suffix = f"_{tag}" if tag else ""
+    out = out_dir / f"{arch}_{shape_name}_{mesh_name}{suffix}.json"
+    out.write_text(json.dumps(row, indent=2, default=str))
+    print(f"[dryrun] {arch} {shape_name} {mesh_name} plan={plan.name} "
+          f"compile={compile_s:.1f}s per_device="
+          f"{per_device_bytes / 1e9:.2f}GB "
+          f"dominant={report.dominant} "
+          f"roofline_frac={report.roofline_fraction:.3f}")
+    print(f"  memory_analysis: {mem_row}")
+    print(f"  cost_analysis: flops={report.hlo_flops / chips:.3e} "
+          f"bytes={report.hlo_bytes / chips:.3e} (per device)")
+    print(f"  collectives: { {k: f'{v/1e6:.1f}MB' for k, v in report.coll_by_kind.items() if k != '_counts' and v} }")
+    return row
+
+
+def run_all(meshes=("single", "multi"), archs=None, shapes=None,
+            timeout: int = 1800) -> int:
+    from repro.configs import cells
+    failures = []
+    todo = []
+    for cfg, shape, _ in cells():
+        if archs and cfg.name not in archs:
+            continue
+        if shapes and shape.name not in shapes:
+            continue
+        for m in meshes:
+            todo.append((cfg.name, shape.name, m))
+    print(f"[dryrun] {len(todo)} cells to compile")
+    for arch, shp, m in todo:
+        cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+               "--shape", shp, "--mesh", m]
+        r = subprocess.run(cmd, capture_output=True, text=True,
+                           timeout=timeout)
+        tail = (r.stdout + r.stderr).strip().splitlines()
+        if r.returncode != 0:
+            failures.append((arch, shp, m, "\n".join(tail[-15:])))
+            print(f"FAIL {arch} {shp} {m}")
+        else:
+            for line in tail:
+                if line.startswith("[dryrun]"):
+                    print(line)
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for arch, shp, m, msg in failures:
+            print(f"--- {arch} {shp} {m}\n{msg}\n")
+    else:
+        print("\nALL CELLS COMPILED")
+    return len(failures)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=("single", "multi"), default="single")
+    ap.add_argument("--plan", default="auto")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=0)
+    ap.add_argument("--grad-compression", default="")
+    ap.add_argument("--remat", default="")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--archs", nargs="*")
+    ap.add_argument("--shapes", nargs="*")
+    args = ap.parse_args()
+    if args.all:
+        sys.exit(run_all(archs=args.archs, shapes=args.shapes))
+    row = run_cell(args.arch, args.shape, args.mesh == "multi", args.plan,
+                   microbatches=args.microbatches,
+                   grad_compression=args.grad_compression,
+                   remat=args.remat, tag=args.tag)
+    if row.get("skipped"):
+        print(f"[dryrun] SKIP {args.arch} {args.shape}: {row['skipped']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,357 @@
+"""Roofline-term extraction from a compiled XLA artifact.
+
+Three terms per (arch x shape x mesh) cell, with the assignment's hardware
+constants (TPU v5e): 197 TFLOP/s bf16 per chip, 819 GB/s HBM, ~50 GB/s/link
+ICI (25 GB/s DCN for the 'pod' axis):
+
+    compute term    = HLO_FLOPs / (chips x peak)
+    memory term     = HLO_bytes / (chips x HBM_bw)
+    collective term = collective_bytes / (chips x link_bw)
+
+``cost_analysis()`` provides FLOPs and bytes accessed; collective bytes are
+NOT in cost_analysis, so we parse the optimized HLO text and sum operand
+sizes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute op (deduplicating by instruction name).
+"""
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Sequence, Tuple
+
+PEAK_FLOPS = 197e12
+HBM_GBPS = 819.0
+ICI_GBPS = 50.0
+DCN_GBPS = 25.0
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  %ag = bf16[16,1024,512]{2,1,0} all-gather(%x), replica_groups=...
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|[\w\[\],{}\s]+?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\(", re.M)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+# -- while-loop-aware accounting -------------------------------------------
+# XLA's module-level cost_analysis and a flat scan of the HLO text count each
+# while-loop *body once*, but scan-over-layers / microbatch / chunk loops
+# execute their bodies many times.  The dry-run KNOWS the loop structure it
+# lowered (microbatches x layers x chunks), so we reconstruct the while
+# *nesting* from the HLO text and assign trip counts by nesting depth
+# (``trips_by_depth``), then weight every computation by the product of its
+# enclosing trips.
+
+_WHILE_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+
+
+def _split_computations(hlo_text: str) -> Tuple[Dict[str, str], Optional[str]]:
+    """computation name -> body text, plus the ENTRY computation name.
+    Line-based brace-depth scanner (HLO instruction lines have balanced
+    braces; computation headers end with '{' at depth 0)."""
+    comps: Dict[str, str] = {}
+    entry = None
+    current = None
+    depth = 0
+    buf: list = []
+    head_re = re.compile(r"^\s*(ENTRY\s+)?%?([\w.\-]+)\s*\(")
+    for line in hlo_text.splitlines():
+        if current is None:
+            m = head_re.match(line)
+            if m and line.rstrip().endswith("{"):
+                current = m.group(2)
+                if m.group(1):
+                    entry = current
+                buf = [line]
+                depth = line.count("{") - line.count("}")
+                if depth <= 0:
+                    comps[current] = line
+                    current = None
+            continue
+        buf.append(line)
+        depth += line.count("{") - line.count("}")
+        if depth <= 0:
+            comps[current] = "\n".join(buf)
+            current = None
+    return comps, entry
+
+
+def _tuple_lead_dims(comp_text: str) -> Tuple[list, list]:
+    """(leading dims > 1 of every array, lengths of 1-D integer arrays) in a
+    while body's parameter tuple (first line of the computation).  A 1-D
+    s32/u32 array is almost always the ``jnp.arange(n)`` xs of a lax.scan —
+    the strongest trip-count signal."""
+    header = comp_text.split("\n", 1)[0]
+    dims, iotas = [], []
+    for m in _SHAPE_RE.finditer(header):
+        ds = [int(d) for d in m.group(2).split(",") if d]
+        if ds and ds[0] > 1:
+            dims.append(ds[0])
+            if len(ds) == 1 and m.group(1) in ("s32", "u32", "s64", "u64"):
+                iotas.append(ds[0])
+    return dims, iotas
+
+
+def computation_multipliers(hlo_text: str,
+                            trips_by_depth: Sequence[int] = ()
+                            ) -> Dict[str, int]:
+    """name -> product of enclosing while trip counts.
+
+    Trip assignment per while body: the depth-matched provided trip if it
+    appears among the body tuple's leading dims; else any provided trip that
+    appears (sibling scans shift depths); else the smallest observed leading
+    dim (a lax.scan body always carries an s32[n] iota or an n-stacked xs).
+    Fusions / reducers called from a body inherit its multiplier.
+    """
+    comps, entry = _split_computations(hlo_text)
+    mult: Dict[str, int] = {}
+    body_of: Dict[str, list] = {name: _WHILE_BODY_RE.findall(text)
+                                for name, text in comps.items()}
+    provided = [int(t) for t in trips_by_depth]
+
+    def trip_for(body_name: str, depth: int) -> int:
+        dims, iotas = _tuple_lead_dims(comps.get(body_name, ""))
+        if iotas:                       # explicit jnp.arange(n) xs: exact
+            return min(iotas)
+        if depth < len(provided) and provided[depth] in dims:
+            return provided[depth]
+        for p in provided:
+            if p in dims:
+                return p
+        return min(dims) if dims else 1
+
+    def visit(name: str, m: int, depth: int, seen):
+        if name in seen:
+            return
+        seen = seen | {name}
+        mult[name] = max(mult.get(name, 1), m)
+        for child in body_of.get(name, []):
+            if child in comps:
+                visit(child, m * max(1, trip_for(child, depth)), depth + 1,
+                      seen)
+
+    if entry:
+        visit(entry, 1, 0, frozenset())
+    # computations called from while bodies (fusions, reducers) inherit the
+    # caller's multiplier
+    call_re = re.compile(r"(?:calls=|to_apply=|condition=)%?([\w.\-]+)")
+    for _ in range(4):
+        changed = False
+        for name, text in comps.items():
+            w = mult.get(name, 1)
+            for callee in call_re.findall(text):
+                if callee in comps and mult.get(callee, 1) < w:
+                    mult[callee] = w
+                    changed = True
+        if not changed:
+            break
+    return mult
+
+
+_DEF_RE = re.compile(r"%([\w.\-]+)\s*=\s*(\w+\[[\d,]*\])")
+_PARAM_RE = re.compile(r"([\w.\-]+)\s*:\s*(\w+\[[\d,]*\])")
+_DOT_RE = re.compile(
+    r"%[\w.\-]+\s*=\s*(\w+\[[\d,]*\])[^\n]*?\bdot\(\s*%?([\w.\-]+)"
+    r"[^\n]*?lhs_contracting_dims=\{([\d,]+)\}")
+
+
+def _dims(shape_text: str) -> list:
+    m = _SHAPE_RE.search(shape_text)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+def dot_flops(hlo_text: str, trips_by_depth: Sequence[int] = ()
+              ) -> Tuple[float, float]:
+    """(loop-weighted, flat) total dot FLOPs, computed exactly per dot op:
+    2 * prod(output dims) * prod(lhs contracting dims)."""
+    comps, _ = _split_computations(hlo_text)
+    mult = computation_multipliers(hlo_text, trips_by_depth)
+    weighted = flat = 0.0
+    for name, text in comps.items():
+        shapes: Dict[str, str] = {}
+        for dm in _DEF_RE.finditer(text):
+            shapes.setdefault(dm.group(1), dm.group(2))
+        header = text.split("\n", 1)[0]
+        for pm in _PARAM_RE.finditer(header):
+            shapes.setdefault(pm.group(1), pm.group(2))
+        for m in _DOT_RE.finditer(text):
+            out_dims = _dims(m.group(1))
+            lhs = shapes.get(m.group(2))
+            if lhs is None:
+                continue
+            lhs_dims = _dims(lhs)
+            contract = 1
+            for c in (int(x) for x in m.group(3).split(",") if x):
+                if c < len(lhs_dims):
+                    contract *= lhs_dims[c]
+            f = 2.0 * math.prod(out_dims or [1]) * contract
+            flat += f
+            weighted += f * mult.get(name, 1)
+    return weighted, flat
+
+
+def loop_weighted_flops_scale(hlo_text: str,
+                              trips_by_depth: Sequence[int] = ()) -> float:
+    """Ratio (loop-weighted flops) / (flat flops), with per-dot exact flops
+    as the weights (a count proxy mis-scales when the largest single dots —
+    embedding/vocab — sit outside the loops)."""
+    weighted, flat = dot_flops(hlo_text, trips_by_depth)
+    return (weighted / flat) if flat else 1.0
+
+
+def collective_bytes(hlo_text: str,
+                     trips_by_depth: Sequence[int] = ()
+                     ) -> Dict[str, float]:
+    """Sum output-shape bytes of every collective op, by kind — each weighted
+    by its computation's enclosing-loop trip product, so per-layer TP
+    collectives inside the layer scan count n_layers (x microbatches) times
+    while the once-per-step DP all-reduce counts once.  '-start' ops counted,
+    '-done' skipped (async pairs share the buffer)."""
+    comps, _ = _split_computations(hlo_text)
+    if not comps:
+        comps = {"_all": hlo_text}
+    mult = computation_multipliers(hlo_text, trips_by_depth)
+    out: Dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    counts: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for name, text in comps.items():
+        w = mult.get(name, 1)
+        for m in _INSTR_RE.finditer(text):
+            shape_text, kind, suffix = m.group(1), m.group(2), m.group(3)
+            if suffix == "-done":
+                continue
+            out[kind] += _shape_bytes(shape_text) * w
+            counts[kind] += w
+    out["_counts"] = counts  # type: ignore[assignment]
+    return out
+
+
+@dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    coll_bytes: float
+    coll_by_kind: Dict[str, float]
+    model_flops: float
+    compute_s: float = field(init=False)
+    memory_s: float = field(init=False)
+    collective_s: float = field(init=False)
+
+    def __post_init__(self):
+        self.compute_s = self.hlo_flops / (self.chips * PEAK_FLOPS)
+        self.memory_s = self.hlo_bytes / (self.chips * HBM_GBPS * 1e9)
+        self.collective_s = self.coll_bytes / (self.chips * ICI_GBPS * 1e9)
+
+    @property
+    def dominant(self) -> str:
+        terms = self.terms()
+        return max(terms, key=terms.get)
+
+    def terms(self) -> Dict[str, float]:
+        return {"compute": self.compute_s, "memory": self.memory_s,
+                "collective": self.collective_s}
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.terms().values())
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs — how much compiled compute is useful
+        (catches remat recompute and padding waste).  HLO_FLOPs here are
+        per-device, so scale by chips."""
+        total_hlo = self.hlo_flops
+        return self.model_flops / total_hlo if total_hlo else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """useful-compute time as a fraction of the bound (the score)."""
+        useful_s = self.model_flops / (self.chips * PEAK_FLOPS)
+        total = max(self.bound_s, 1e-30)
+        return useful_s / total
+
+    def row(self) -> Dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "hlo_flops": self.hlo_flops, "hlo_bytes": self.hlo_bytes,
+            "coll_bytes": self.coll_bytes,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "model_flops": self.model_flops,
+            "useful_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "coll_by_kind": {k: v for k, v in self.coll_by_kind.items()
+                             if k != "_counts" and v},
+            "coll_counts": self.coll_by_kind.get("_counts", {}),
+        }
+
+
+def model_flops_estimate(n_params_active: int, tokens: int,
+                         is_train: bool) -> float:
+    """MODEL_FLOPS = 6*N*D (train) or 2*N*D (inference), N = active params."""
+    return (6.0 if is_train else 2.0) * n_params_active * tokens
+
+
+def trips_by_depth_for(cfg, shape_kind: str, microbatches: int = 1,
+                       seq_len: int = 0) -> Tuple[int, ...]:
+    """The known loop-nest trip counts of the program the dry-run lowered,
+    outermost first (used to re-weight XLA's body-counted-once costs)."""
+    chunks = []
+    if cfg.family == "ssm" and shape_kind != "decode":
+        chunks = [max(1, seq_len // 16)]          # WKV chunk scan
+    if cfg.family == "hybrid" and shape_kind != "decode":
+        chunks = [max(1, seq_len // 32)]          # SSD chunk scan
+    if cfg.family == "hybrid":
+        a = cfg.attn_every or cfg.n_layers
+        layers = [cfg.n_layers // a, a]
+    elif cfg.family == "audio":
+        layers = [max(cfg.n_layers, cfg.n_encoder_layers or 0)]
+    else:
+        layers = [cfg.n_layers]
+    if shape_kind == "train" and microbatches > 1:
+        return tuple([microbatches] + layers + chunks)
+    return tuple(layers + chunks)
+
+
+def from_compiled(arch: str, shape: str, mesh_name: str, chips: int,
+                  cost: Dict, hlo_text: str, model_flops: float,
+                  trips_by_depth: Tuple[int, ...] = ()) -> RooflineReport:
+    # cost_analysis counts while bodies once; re-weight by the loop structure
+    scale = loop_weighted_flops_scale(hlo_text, trips_by_depth)
+    flops = float(cost.get("flops", 0.0)) * scale
+    byts = float(cost.get("bytes accessed", 0.0)) * scale
+    coll = collective_bytes(hlo_text, trips_by_depth)
+    total_coll = sum(v for k, v in coll.items() if k != "_counts")
+    return RooflineReport(arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+                          hlo_flops=flops * chips, hlo_bytes=byts * chips,
+                          coll_bytes=total_coll * chips,
+                          coll_by_kind=coll, model_flops=model_flops)

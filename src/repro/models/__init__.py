@@ -1,0 +1,4 @@
+# Model zoo: the 10 assigned architectures as composable JAX modules.
+from .api import ModelAPI, build_model
+
+__all__ = ["ModelAPI", "build_model"]

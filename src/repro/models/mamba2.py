@@ -1,0 +1,153 @@
+"""Mamba2 (SSD) block — the state-space component of zamba2-1.2b.
+
+Chunked SSD scan (jnp; same dataflow the TileLoom WKV kernel uses — the
+recurrence admits only temporal reuse, DESIGN.md S5):
+
+    h_t = exp(A dt_t) h_{t-1} + dt_t * (x_t (x) B_t)
+    y_t = C_t . h_t + D * x_t
+
+with per-head scalar decay A (n_groups = 1 simplification, documented).
+Decode carries (ssd_state, conv_state) per layer — O(1) per token.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.parallel.sharding import constrain
+from .param import LeafSpec
+
+Params = Dict[str, Any]
+SSD_HEAD_DIM = 64
+
+
+def dims(cfg: ModelConfig) -> Tuple[int, int, int, int]:
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n_heads = cfg.ssm_heads or d_inner // SSD_HEAD_DIM
+    dh = d_inner // n_heads
+    return d_inner, n_heads, dh, cfg.ssm_state
+
+
+def mamba2_spec(cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    d_inner, H, dh, ds = dims(cfg)
+    conv_dim = d_inner + 2 * ds
+    return {
+        "in_proj": LeafSpec((d, 2 * d_inner + 2 * ds + H), ("embed", "ffn")),
+        "conv_w": LeafSpec((cfg.conv_kernel, conv_dim), ("conv", "ffn"),
+                           init="scaled", scale=0.1),
+        "conv_b": LeafSpec((conv_dim,), ("ffn",), init="zeros"),
+        "A_log": LeafSpec((H,), ("ssm_heads",), init="scaled", scale=0.5),
+        "D": LeafSpec((H,), ("ssm_heads",), init="ones"),
+        "dt_bias": LeafSpec((H,), ("ssm_heads",), init="zeros"),
+        "norm_scale": LeafSpec((d_inner,), ("ffn",), init="ones"),
+        "out_proj": LeafSpec((d_inner, d), ("ffn", "embed")),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: Optional[jax.Array] = None):
+    """Depthwise causal conv.  x: (B, T, C); w: (K, C).  Returns (y, new_state)
+    where state is the last K-1 inputs (for decode)."""
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)          # (B, T+K-1, C)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i][None, None, :] for i in range(K))
+    new_state = xp[:, -(K - 1):] if K > 1 else jnp.zeros(
+        (x.shape[0], 0, x.shape[2]), x.dtype)
+    return jax.nn.silu(y + b[None, None, :]), new_state
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array, Bmat: jax.Array,
+                Cmat: jax.Array, h0: Optional[jax.Array] = None,
+                chunk: int = 32):
+    """x: (B,T,H,dh); dt: (B,T,H); A: (H,) (negative); B/C: (B,T,ds).
+    Returns (y, h_final) with h: (B,H,dh,ds)."""
+    Bsz, T, H, dh = x.shape
+    ds = Bmat.shape[-1]
+    c = min(chunk, T)
+    assert T % c == 0
+    n = T // c
+    da = (dt * A[None, None, :]).astype(jnp.float32)     # (B,T,H) <= 0
+    xr = (x * dt[..., None]).astype(jnp.float32)         # dt-weighted input
+    # chunked views, scanned over chunk index
+    da_c = da.reshape(Bsz, n, c, H).transpose(1, 0, 2, 3)
+    x_c = xr.reshape(Bsz, n, c, H, dh).transpose(1, 0, 2, 3, 4)
+    B_c = Bmat.astype(jnp.float32).reshape(Bsz, n, c, ds).transpose(1, 0, 2, 3)
+    C_c = Cmat.astype(jnp.float32).reshape(Bsz, n, c, ds).transpose(1, 0, 2, 3)
+    t_i = jnp.arange(c)[:, None]
+    s_i = jnp.arange(c)[None, :]
+    mask = (t_i >= s_i).astype(jnp.float32)
+
+    def step(h, xs):
+        dac, xc, bc, cc = xs
+        cum = jnp.cumsum(dac, axis=1)                    # (B,c,H) inclusive
+        # intra-chunk: scores[t,s] = e^{cum[t]-cum[s]} (C_t . B_s), s <= t.
+        # valid (t >= s) differences are <= 0; clamping before exp keeps the
+        # masked upper triangle from overflowing to inf (inf*0 = nan)
+        diff = jnp.minimum(cum[:, :, None, :] - cum[:, None, :, :], 0.0)
+        seg = jnp.exp(diff)                              # (B,c,c,H)
+        cb = jnp.einsum("btd,bsd->bts", cc, bc)
+        scores = seg * cb[..., None] * mask[None, :, :, None]
+        y = jnp.einsum("btsh,bshd->bthd", scores, xc)
+        # inter-chunk: read of carried state with decay e^{cum[t]}
+        y = y + jnp.einsum("btd,bhed,bth->bthe", cc, h, jnp.exp(cum))
+        # state update
+        decay_all = jnp.exp(cum[:, -1])                  # (B,H)
+        k_carry = jnp.exp(cum[:, -1][:, None, :] - cum)  # (B,c,H)
+        h = (h * decay_all[:, :, None, None]
+             + jnp.einsum("bthd,bth,bts->bhds", xc, k_carry, bc))
+        return h, y
+
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, H, dh, ds), jnp.float32)
+    h, y = jax.lax.scan(step, h0, (da_c, x_c, B_c, C_c))
+    y = y.transpose(1, 0, 2, 3, 4).reshape(Bsz, T, H, dh)
+    return y, h
+
+
+def mamba2_apply(p: Params, x: jax.Array, cfg: ModelConfig, *,
+                 ssd_state: Optional[jax.Array] = None,
+                 conv_state: Optional[jax.Array] = None):
+    """Returns (out, (new_ssd_state, new_conv_state)); states are None during
+    training (chunked scan starts from zero)."""
+    B, T, d = x.shape
+    d_inner, H, dh, ds = dims(cfg)
+    proj = x @ p["in_proj"].astype(x.dtype)
+    z, xin, Bm, Cm, dt = jnp.split(
+        proj, [d_inner, 2 * d_inner, 2 * d_inner + ds, 2 * d_inner + 2 * ds],
+        axis=-1)
+    conv_in = jnp.concatenate([xin, Bm, Cm], axis=-1)
+    conv_out, new_conv = _causal_conv(conv_in, p["conv_w"].astype(x.dtype),
+                                      p["conv_b"].astype(x.dtype), conv_state)
+    xin, Bm, Cm = jnp.split(conv_out, [d_inner, d_inner + ds], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32)[None, None, :])
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xh = xin.reshape(B, T, H, dh)
+    xh = constrain(xh, ("batch", "seq", "ssm_heads", None))
+    if ssd_state is None:
+        y, new_state = ssd_chunked(xh, dt, A, Bm, Cm)
+    else:
+        # single-token recurrence (decode)
+        da = jnp.exp(dt[:, 0] * A[None, :])              # (B,H)
+        xr = (xh[:, 0] * dt[:, 0][..., None]).astype(jnp.float32)
+        upd = jnp.einsum("bhd,bs->bhds", xr, Bm[:, 0].astype(jnp.float32))
+        new_state = ssd_state * da[:, :, None, None] + upd
+        y = jnp.einsum("bs,bhds->bhd", Cm[:, 0].astype(jnp.float32),
+                       new_state)[:, None]
+    y = y.astype(x.dtype).reshape(B, T, d_inner) \
+        + xin * jnp.repeat(p["D"].astype(x.dtype), dh)[None, None, :]
+    # gated RMS norm
+    y32 = (y * jax.nn.silu(z)).astype(jnp.float32)
+    var = jnp.mean(jnp.square(y32), axis=-1, keepdims=True)
+    y = (y32 * jax.lax.rsqrt(var + cfg.norm_eps)
+         * p["norm_scale"].astype(jnp.float32)).astype(x.dtype)
+    out = y @ p["out_proj"].astype(x.dtype)
+    return constrain(out, ("batch", "seq", "embed")), (new_state, new_conv)

@@ -1,0 +1,97 @@
+"""Parameter-spec infrastructure for the model zoo.
+
+Every module declares its parameters once as a nested dict of
+:class:`LeafSpec` (shape + init + *logical sharding axes*); from that single
+source of truth we derive:
+
+* ``materialize(rng, spec)``    — real initialized params (smoke tests/training)
+* ``abstract(spec)``            — ShapeDtypeStructs (dry-run: **no allocation**)
+* ``axes_of(spec)``             — a matching pytree of logical-axis tuples that
+                                  ``parallel/sharding.py`` maps onto the mesh
+* ``count_params(spec)``        — exact parameter counts for the roofline's
+                                  MODEL_FLOPS = 6*N*D term.
+
+Logical axis vocabulary (mapped to mesh axes by a ShardingPlan):
+``batch seq embed q_heads kv_heads head_dim ffn vocab experts layers conv
+state frames patches``.  ``layers`` is the stacked scan dimension.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Axes = Tuple[Optional[str], ...]
+
+
+@dataclass(frozen=True)
+class LeafSpec:
+    shape: Tuple[int, ...]
+    axes: Axes
+    init: str = "normal"          # "normal" | "zeros" | "ones" | "scaled"
+    scale: float = 1.0
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _init_leaf(rng: jax.Array, spec: LeafSpec) -> jax.Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    if spec.init == "normal":
+        # fan-in = first non-stacked dim (stacked "layers" dims are batch-like)
+        dims = [s for s, a in zip(spec.shape, spec.axes) if a != "layers"]
+        fan_in = dims[0] if len(dims) >= 2 else max(dims[-1] if dims else 1, 1)
+        std = spec.scale / math.sqrt(max(fan_in, 1))
+        return (jax.random.normal(rng, spec.shape, jnp.float32) * std
+                ).astype(spec.dtype)
+    if spec.init == "scaled":
+        return (jax.random.normal(rng, spec.shape, jnp.float32) * spec.scale
+                ).astype(spec.dtype)
+    raise ValueError(spec.init)
+
+
+def is_leaf_spec(x) -> bool:
+    return isinstance(x, LeafSpec)
+
+
+def materialize(rng: jax.Array, spec) -> Any:
+    leaves, treedef = jax.tree.flatten(spec, is_leaf=is_leaf_spec)
+    rngs = jax.random.split(rng, len(leaves))
+    vals = [_init_leaf(r, s) for r, s in zip(rngs, leaves)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def abstract(spec) -> Any:
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), spec,
+        is_leaf=is_leaf_spec)
+
+
+def axes_of(spec) -> Any:
+    return jax.tree.map(lambda s: s.axes, spec, is_leaf=is_leaf_spec)
+
+
+def count_params(spec) -> int:
+    leaves = jax.tree.leaves(spec, is_leaf=is_leaf_spec)
+    return sum(math.prod(s.shape) for s in leaves)
+
+
+def cast_spec_dtype(spec, dtype) -> Any:
+    return jax.tree.map(
+        lambda s: LeafSpec(s.shape, s.axes, s.init, s.scale, dtype), spec,
+        is_leaf=is_leaf_spec)
+
+
+def stack_specs(spec, n: int, axis_name: str = "layers") -> Any:
+    """Prepend a stacked (scan) dimension to every leaf."""
+    return jax.tree.map(
+        lambda s: LeafSpec((n,) + s.shape, (axis_name,) + s.axes, s.init,
+                           s.scale, s.dtype),
+        spec, is_leaf=is_leaf_spec)

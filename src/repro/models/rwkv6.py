@@ -1,0 +1,301 @@
+"""RWKV6 "Finch" (attention-free, data-dependent decay) — rwkv6-3b.
+
+Block = time-mix (token shift -> r/k/v/g projections + the RWKV6 signature
+*data-dependent decay* ``w = exp(-exp(w0 + tanh(x A) B))`` via a LoRA -> WKV
+linear-recurrence core -> group-norm -> gated output) followed by channel-mix
+(token shift -> squared-ReLU FFN gated by sigmoid receptance).
+
+The WKV core runs chunked (``kernels.rwkv6`` on the pallas path; an identical
+jnp chunk-scan on the xla path) — O(T) time, O(d^2) state, which is what makes
+``long_500k`` decode eligible (DESIGN.md S5).  Decode carries the per-layer
+state (S, shift buffers) instead of a KV cache.
+
+Simplification vs. the released checkpoints (documented): token-shift
+interpolation uses per-channel static mixes (RWKV5-style) rather than the full
+5-way data-dependent lerp; the decay LoRA — the paper-relevant part — is kept
+faithful.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.parallel.sharding import constrain
+from . import layers as L
+from .param import LeafSpec, stack_specs
+
+Params = Dict[str, Any]
+LORA_DIM = 64
+# chunk x decay-floor must stay below log(f32_max)/2 ~ 44 per side:
+# 16 * 4 / 2 = 32 -> every pairwise score exponent <= 64 < 88 (finite).
+WKV_CHUNK = 16
+
+
+def _head_dim(cfg: ModelConfig) -> int:
+    return cfg.head_dim or 64
+
+
+def _n_heads(cfg: ModelConfig) -> int:
+    return cfg.d_model // _head_dim(cfg)
+
+
+def time_mix_spec(cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    H, hd = _n_heads(cfg), _head_dim(cfg)
+    lora = min(LORA_DIM, d)
+    return {
+        "mix_r": LeafSpec((d,), ("embed",), init="zeros"),
+        "mix_k": LeafSpec((d,), ("embed",), init="zeros"),
+        "mix_v": LeafSpec((d,), ("embed",), init="zeros"),
+        "mix_w": LeafSpec((d,), ("embed",), init="zeros"),
+        "mix_g": LeafSpec((d,), ("embed",), init="zeros"),
+        "wr": LeafSpec((d, d), ("embed", "q_heads")),
+        "wk": LeafSpec((d, d), ("embed", "q_heads")),
+        "wv": LeafSpec((d, d), ("embed", "q_heads")),
+        "wg": LeafSpec((d, d), ("embed", "q_heads")),
+        "wo": LeafSpec((d, d), ("q_heads", "embed")),
+        # data-dependent decay LoRA (RWKV6 signature)
+        "w0": LeafSpec((d,), ("embed",), init="scaled", scale=0.5),
+        "wA": LeafSpec((d, lora), ("embed", None)),
+        "wB": LeafSpec((lora, d), (None, "embed")),
+        "u": LeafSpec((H, hd), ("q_heads", "head_dim"), init="scaled",
+                      scale=0.5),
+        "ln_x": LeafSpec((d,), ("embed",), init="ones"),
+    }
+
+
+def channel_mix_spec(cfg: ModelConfig) -> Params:
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "mix_k": LeafSpec((d,), ("embed",), init="zeros"),
+        "mix_r": LeafSpec((d,), ("embed",), init="zeros"),
+        "wk": LeafSpec((d, f), ("embed", "ffn")),
+        "wv": LeafSpec((f, d), ("ffn", "embed")),
+        "wr": LeafSpec((d, d), ("embed", "q_heads")),
+    }
+
+
+def block_spec(cfg: ModelConfig) -> Params:
+    return {
+        "ln1": L.rmsnorm_spec(cfg.d_model),
+        "tm": time_mix_spec(cfg),
+        "ln2": L.rmsnorm_spec(cfg.d_model),
+        "cm": channel_mix_spec(cfg),
+    }
+
+
+def rwkv6_spec(cfg: ModelConfig) -> Params:
+    return {
+        "embed": L.embedding_spec(cfg),
+        "blocks": stack_specs(block_spec(cfg), cfg.n_layers),
+        "final_norm": L.rmsnorm_spec(cfg.d_model),
+        "lm_head": L.lm_head_spec(cfg),
+    }
+
+
+# ------------------------------------------------------------- WKV core
+def wkv6_chunked_jnp(r, k, v, log_w, u, chunk: int = WKV_CHUNK) -> jax.Array:
+    """jnp mirror of the pallas kernel (same chunked math).  Shapes as in
+    kernels.rwkv6.wkv6: r/k/v/log_w (BH, T, d); u (BH, d)."""
+    BH, T, d = r.shape
+    c = min(chunk, T)
+    assert T % c == 0
+    n = T // c
+    rc = r.reshape(BH, n, c, d).astype(jnp.float32)
+    kc = k.reshape(BH, n, c, d).astype(jnp.float32)
+    vc = v.reshape(BH, n, c, d).astype(jnp.float32)
+    lw = log_w.reshape(BH, n, c, d).astype(jnp.float32)
+    uu = u.astype(jnp.float32)
+
+    t_idx = jnp.arange(c)[:, None]
+    s_idx = jnp.arange(c)[None, :]
+    mask = (t_idx > s_idx).astype(jnp.float32)
+
+    def chunk_step(S, xs):
+        rr, kk, vv, ww = xs                      # (BH, c, d)
+        cum = jnp.cumsum(ww, axis=1)
+        cum_excl = cum - ww
+        r_decay = rr * jnp.exp(cum_excl)
+        o = jnp.einsum("bcd,bde->bce", r_decay, S)
+        c_off = 0.5 * cum[:, -1]
+        r_sc = rr * jnp.exp(cum_excl - c_off[:, None, :])
+        k_sc = kk * jnp.exp(c_off[:, None, :] - cum)
+        scores = jnp.einsum("btd,bsd->bts", r_sc, k_sc) * mask
+        diag = jnp.sum(rr * uu[:, None, :] * kk, axis=-1)
+        o = o + jnp.einsum("bts,bsd->btd", scores, vv) + diag[..., None] * vv
+        decay_all = jnp.exp(cum[:, -1])
+        k_carry = kk * jnp.exp(cum[:, -1][:, None, :] - cum)
+        S = S * decay_all[:, :, None] + jnp.einsum("bcd,bce->bde", k_carry, vv)
+        return S, o
+
+    S0 = jnp.zeros((BH, d, d), jnp.float32)
+    _, o = jax.lax.scan(chunk_step, S0,
+                        (rc.transpose(1, 0, 2, 3), kc.transpose(1, 0, 2, 3),
+                         vc.transpose(1, 0, 2, 3), lw.transpose(1, 0, 2, 3)))
+    return o.transpose(1, 0, 2, 3).reshape(BH, T, d).astype(r.dtype)
+
+
+def _token_shift(x: jax.Array, prev: Optional[jax.Array] = None) -> jax.Array:
+    """Shift sequence right by one; ``prev`` supplies the carry for decode."""
+    if prev is None:
+        return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    return jnp.concatenate([prev[:, None, :].astype(x.dtype), x[:, :-1]],
+                           axis=1)
+
+
+def time_mix(p: Params, x: jax.Array, cfg: ModelConfig, *,
+             shift_prev=None, state=None):
+    """Returns (out, (new_shift, new_state)).  ``state``: (B,H,hd,hd) for
+    single-token decode; None for chunked training/prefill."""
+    B, T, d = x.shape
+    H, hd = _n_heads(cfg), _head_dim(cfg)
+    xp = _token_shift(x, shift_prev)
+
+    def mixed(name):
+        mu = p[f"mix_{name}"].astype(x.dtype)
+        return x + (xp - x) * mu
+
+    xr, xk, xv, xw, xg = (mixed(n) for n in "rkvwg")
+    r = xr @ p["wr"].astype(x.dtype)
+    k = xk @ p["wk"].astype(x.dtype)
+    v = xv @ p["wv"].astype(x.dtype)
+    g = xg @ p["wg"].astype(x.dtype)
+    lw = -jnp.exp(p["w0"].astype(jnp.float32)
+                  + jnp.tanh(xw.astype(jnp.float32) @ p["wA"].astype(jnp.float32))
+                  @ p["wB"].astype(jnp.float32))
+    # decay floor: e^-4 per step ~ full forget within 2 steps; guarantees the
+    # chunked kernels' midpoint-offset factors stay in f32 range
+    # (chunk 16 * 4 = 64 < log(f32_max) ~ 88 pairwise).  Applied at the source so
+    # the pallas kernel, the jnp chunk scan, and the decode recurrence all see
+    # identical decays.
+    lw = jnp.maximum(lw, -4.0)
+
+    def to_heads(t):                    # (B,T,d) -> (B*H, T, hd)
+        return (t.reshape(B, T, H, hd).transpose(0, 2, 1, 3)
+                .reshape(B * H, T, hd))
+
+    u = jnp.broadcast_to(p["u"].astype(jnp.float32)[None], (B, H, hd)
+                         ).reshape(B * H, hd)
+    if state is None:
+        if cfg.kernels == "pallas":
+            from repro.kernels import ops
+            o = ops.wkv6(to_heads(r), to_heads(k), to_heads(v),
+                         to_heads(lw.astype(x.dtype)), u.astype(x.dtype),
+                         chunk=WKV_CHUNK)
+        else:
+            o = wkv6_chunked_jnp(to_heads(r), to_heads(k), to_heads(v),
+                                 to_heads(lw), u)
+        new_state = None
+    else:
+        # single-token recurrence (decode): T == 1
+        rh = to_heads(r)[:, 0].astype(jnp.float32)      # (BH, hd)
+        kh = to_heads(k)[:, 0].astype(jnp.float32)
+        vh = to_heads(v)[:, 0].astype(jnp.float32)
+        wh = jnp.exp(to_heads(lw)[:, 0])
+        S = state.reshape(B * H, hd, hd)
+        kv = kh[:, :, None] * vh[:, None, :]
+        o = jnp.einsum("bi,bij->bj", rh, S + u[:, :, None] * kv)[:, None, :]
+        new_state = (wh[:, :, None] * S + kv).reshape(B, H, hd, hd)
+        o = o.astype(x.dtype)
+    o = (o.reshape(B, H, T, hd).transpose(0, 2, 1, 3).reshape(B, T, d))
+    # per-head group norm
+    oh = o.reshape(B, T, H, hd).astype(jnp.float32)
+    mean = jnp.mean(oh, axis=-1, keepdims=True)
+    var = jnp.var(oh, axis=-1, keepdims=True)
+    oh = (oh - mean) * jax.lax.rsqrt(var + 64e-5)
+    o = (oh.reshape(B, T, d) * p["ln_x"].astype(jnp.float32)).astype(x.dtype)
+    o = o * jax.nn.silu(g)
+    out = o @ p["wo"].astype(x.dtype)
+    return constrain(out, ("batch", "seq", "embed")), (x[:, -1], new_state)
+
+
+def channel_mix(p: Params, x: jax.Array, cfg: ModelConfig, *, shift_prev=None):
+    xp = _token_shift(x, shift_prev)
+    xk = x + (xp - x) * p["mix_k"].astype(x.dtype)
+    xr = x + (xp - x) * p["mix_r"].astype(x.dtype)
+    kk = jnp.square(jax.nn.relu(xk @ p["wk"].astype(x.dtype)))
+    kk = constrain(kk, ("batch", "seq", "ffn"))
+    out = jax.nn.sigmoid(xr @ p["wr"].astype(x.dtype)) \
+        * (kk @ p["wv"].astype(x.dtype))
+    return constrain(out, ("batch", "seq", "embed")), x[:, -1]
+
+
+def block_apply(p: Params, x: jax.Array, cfg: ModelConfig, *,
+                shift_tm=None, state=None, shift_cm=None):
+    h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    o, (new_shift_tm, new_state) = time_mix(p["tm"], h, cfg,
+                                            shift_prev=shift_tm, state=state)
+    x = x + o
+    h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+    o, new_shift_cm = channel_mix(p["cm"], h, cfg, shift_prev=shift_cm)
+    return x + o, (new_shift_tm, new_state, new_shift_cm)
+
+
+# ------------------------------------------------------------------- model
+def forward(params: Params, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
+    x = L.embed(params["embed"], tokens, cfg)
+
+    def body(h, layer_params):
+        h2, _ = block_apply(layer_params, h, cfg)
+        return h2, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(body, x, params["blocks"])
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return L.lm_head(params.get("lm_head", {}), x, cfg,
+                     embed_params=params["embed"])
+
+
+def loss_fn(params: Params, batch: Dict[str, jax.Array], cfg: ModelConfig):
+    logits = forward(params, batch["tokens"], cfg)
+    loss = L.softmax_xent(logits, batch["labels"])
+    return loss, {"loss": loss}
+
+
+# ----------------------------------------------------------------- serving
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> Dict[str, jax.Array]:
+    H, hd = _n_heads(cfg), _head_dim(cfg)
+    Lh = cfg.n_layers
+    cdt = jnp.dtype(cfg.compute_dtype)
+    return {
+        "state": jnp.zeros((Lh, batch, H, hd, hd), jnp.float32),
+        "shift_tm": jnp.zeros((Lh, batch, cfg.d_model), cdt),
+        "shift_cm": jnp.zeros((Lh, batch, cfg.d_model), cdt),
+        "index": jnp.zeros((), jnp.int32),
+    }
+
+
+def cache_logical_axes() -> Dict[str, Tuple[Optional[str], ...]]:
+    return {
+        "state": ("layers", "batch", "q_heads", "head_dim", None),
+        "shift_tm": ("layers", "batch", "embed"),
+        "shift_cm": ("layers", "batch", "embed"),
+        "index": (),
+    }
+
+
+def decode_step(params: Params, tokens: jax.Array,
+                cache: Dict[str, jax.Array], cfg: ModelConfig):
+    """O(1)-per-token decode: no KV cache, just the recurrent state."""
+    x = L.embed(params["embed"], tokens, cfg)
+
+    def body(h, xs):
+        layer_params, st, s_tm, s_cm = xs
+        h2, (new_tm, new_st, new_cm) = block_apply(
+            layer_params, h, cfg, shift_tm=s_tm, state=st, shift_cm=s_cm)
+        return h2, (new_st, new_tm, new_cm)
+
+    x, (new_state, new_tm, new_cm) = jax.lax.scan(
+        body, x, (params["blocks"], cache["state"], cache["shift_tm"],
+                  cache["shift_cm"]))
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.lm_head(params.get("lm_head", {}), x, cfg,
+                       embed_params=params["embed"])
+    return logits, {"state": new_state, "shift_tm": new_tm,
+                    "shift_cm": new_cm, "index": cache["index"] + 1}

@@ -1,0 +1,65 @@
+"""InternVL2-1b backbone: InternLM2-style LM consuming stubbed ViT patches.
+
+Per the assignment, the modality frontend is a STUB: ``input_specs()``
+provides precomputed patch embeddings (B, n_patches, frontend_dim); a linear
+connector projects them into the LM embedding space and they are prepended to
+the token embeddings (the InternVL "LLM-as-decoder" wiring).  Loss is over
+text positions only.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.parallel.sharding import constrain
+from . import layers as L
+from . import transformer as TF
+from .param import LeafSpec
+
+Params = Dict[str, Any]
+
+
+def vlm_spec(cfg: ModelConfig) -> Params:
+    spec = TF.transformer_spec(cfg)
+    spec["connector"] = {
+        "w": LeafSpec((cfg.frontend_dim, cfg.d_model), ("patches", "embed")),
+        "b": LeafSpec((cfg.d_model,), ("embed",), init="zeros"),
+    }
+    return spec
+
+
+def forward(params: Params, tokens: jax.Array, patches: jax.Array,
+            cfg: ModelConfig) -> jax.Array:
+    """tokens: (B, S_text); patches: (B, P, frontend_dim) ->
+    logits over text positions (B, S_text, V)."""
+    B, P, _ = patches.shape
+    vis = patches.astype(L.cdtype(cfg)) @ params["connector"]["w"].astype(
+        L.cdtype(cfg)) + params["connector"]["b"].astype(L.cdtype(cfg))
+    vis = constrain(vis, ("batch", "seq", "embed"))
+    txt = L.embed(params["embed"], tokens, cfg)
+    x = jnp.concatenate([vis, txt], axis=1)
+    x = TF._scan_blocks(params, x, cfg)
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    x = x[:, P:]                      # text positions only
+    return L.lm_head(params.get("lm_head", {}), x, cfg,
+                     embed_params=params["embed"])
+
+
+def loss_fn(params: Params, batch: Dict[str, jax.Array], cfg: ModelConfig):
+    logits = forward(params, batch["tokens"], batch["patches"], cfg)
+    loss = L.softmax_xent(logits, batch["labels"])
+    return loss, {"loss": loss}
+
+
+# ----------------------------------------------------------------- serving
+init_cache = TF.init_cache
+cache_logical_axes = TF.cache_logical_axes
+
+
+def decode_step(params: Params, tokens: jax.Array,
+                cache: Dict[str, jax.Array], cfg: ModelConfig):
+    """Text-token decode (the image prefix was consumed during prefill)."""
+    return TF.decode_step(params, tokens, cache, cfg)

@@ -1,0 +1,154 @@
+"""Zamba2 hybrid: a Mamba2 backbone with a *shared* attention block applied
+every ``attn_every`` SSM layers (zamba2-1.2b).
+
+Weight sharing is the architecture's point: one attention block's parameters
+are reused at every application site, so the scan is structured as
+
+    outer scan over groups (n_layers / attn_every of them):
+        inner scan over ``attn_every`` Mamba2 layers
+        one application of the shared attention block
+
+which keeps HLO depth-independent while giving each application its own KV
+cache slot during decode ((G, B, T, nkv, hd)).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from . import layers as L
+from .mamba2 import dims as mamba_dims, mamba2_apply, mamba2_spec
+from .param import LeafSpec, stack_specs
+
+Params = Dict[str, Any]
+
+
+def _groups(cfg: ModelConfig) -> Tuple[int, int]:
+    a = cfg.attn_every or cfg.n_layers
+    assert cfg.n_layers % a == 0, (
+        f"{cfg.name}: n_layers={cfg.n_layers} must be divisible by "
+        f"attn_every={a}")
+    return cfg.n_layers // a, a
+
+
+def zamba2_spec(cfg: ModelConfig) -> Params:
+    G, A = _groups(cfg)
+    mamba_block = {
+        "norm": L.rmsnorm_spec(cfg.d_model),
+        "mamba": mamba2_spec(cfg),
+    }
+    return {
+        "embed": L.embedding_spec(cfg),
+        # stacked (G, A, ...) for the nested scan
+        "blocks": stack_specs(stack_specs(mamba_block, A, "layers"), G,
+                              "layers"),
+        "shared_attn": {
+            "norm": L.rmsnorm_spec(cfg.d_model),
+            "attn": L.attention_spec(cfg),
+            "mlp_norm": L.rmsnorm_spec(cfg.d_model),
+            "mlp": L.mlp_spec(cfg),
+        },
+        "final_norm": L.rmsnorm_spec(cfg.d_model),
+        "lm_head": L.lm_head_spec(cfg),
+    }
+
+
+def _shared_attn_apply(p: Params, x: jax.Array, cfg: ModelConfig, *,
+                       kv_cache=None, cache_index=None):
+    h = L.rmsnorm(p["norm"], x, cfg.norm_eps)
+    o, new_cache = L.attention(p["attn"], h, cfg, causal=True,
+                               kv_cache=kv_cache, cache_index=cache_index)
+    x = x + o
+    h = L.rmsnorm(p["mlp_norm"], x, cfg.norm_eps)
+    return x + L.mlp(p["mlp"], h, cfg), new_cache
+
+
+def forward(params: Params, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
+    x = L.embed(params["embed"], tokens, cfg)
+    shared = params["shared_attn"]
+
+    def mamba_body(h, layer_params):
+        hn = L.rmsnorm(layer_params["norm"], h, cfg.norm_eps)
+        o, _ = mamba2_apply(layer_params["mamba"], hn, cfg)
+        return h + o, None
+
+    def group_body(h, group_params):
+        h, _ = jax.lax.scan(mamba_body, h, group_params)
+        h, _ = _shared_attn_apply(shared, h, cfg)
+        return h, None
+
+    if cfg.remat:
+        group_body = jax.checkpoint(
+            group_body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(group_body, x, params["blocks"])
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return L.lm_head(params.get("lm_head", {}), x, cfg,
+                     embed_params=params["embed"])
+
+
+def loss_fn(params: Params, batch: Dict[str, jax.Array], cfg: ModelConfig):
+    logits = forward(params, batch["tokens"], cfg)
+    loss = L.softmax_xent(logits, batch["labels"])
+    return loss, {"loss": loss}
+
+
+# ----------------------------------------------------------------- serving
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> Dict[str, jax.Array]:
+    G, A = _groups(cfg)
+    d_inner, H, dh, ds = mamba_dims(cfg)
+    conv_dim = d_inner + 2 * ds
+    return {
+        "ssd": jnp.zeros((G, A, batch, H, dh, ds), jnp.float32),
+        "conv": jnp.zeros((G, A, batch, cfg.conv_kernel - 1, conv_dim), dtype),
+        "attn_k": jnp.zeros((G, batch, max_len, cfg.n_kv_heads,
+                             cfg.head_dim_), dtype),
+        "attn_v": jnp.zeros((G, batch, max_len, cfg.n_kv_heads,
+                             cfg.head_dim_), dtype),
+        "index": jnp.zeros((), jnp.int32),
+    }
+
+
+def cache_logical_axes() -> Dict[str, Tuple[Optional[str], ...]]:
+    return {
+        "ssd": ("layers", None, "batch", "ssm_heads", None, None),
+        "conv": ("layers", None, "batch", None, "ffn"),
+        "attn_k": ("layers", "batch", "kv_seq", "kv_heads", "head_dim"),
+        "attn_v": ("layers", "batch", "kv_seq", "kv_heads", "head_dim"),
+        "index": (),
+    }
+
+
+def decode_step(params: Params, tokens: jax.Array,
+                cache: Dict[str, jax.Array], cfg: ModelConfig):
+    x = L.embed(params["embed"], tokens, cfg)
+    shared = params["shared_attn"]
+    idx = cache["index"]
+
+    def mamba_body(h, xs):
+        layer_params, ssd, conv = xs
+        hn = L.rmsnorm(layer_params["norm"], h, cfg.norm_eps)
+        o, (new_ssd, new_conv) = mamba2_apply(layer_params["mamba"], hn, cfg,
+                                              ssd_state=ssd, conv_state=conv)
+        return h + o, (new_ssd, new_conv)
+
+    def group_body(h, xs):
+        group_params, ssd, conv, ck, cv = xs
+        h, (new_ssd, new_conv) = jax.lax.scan(mamba_body, h,
+                                              (group_params, ssd, conv))
+        h, new_kv = _shared_attn_apply(shared, h, cfg, kv_cache=(ck, cv),
+                                       cache_index=idx)
+        return h, (new_ssd, new_conv, new_kv[0], new_kv[1])
+
+    x, (new_ssd, new_conv, new_k, new_v) = jax.lax.scan(
+        group_body, x,
+        (params["blocks"], cache["ssd"], cache["conv"],
+         cache["attn_k"], cache["attn_v"]))
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.lm_head(params.get("lm_head", {}), x, cfg,
+                       embed_params=params["embed"])
+    return logits, {"ssd": new_ssd, "conv": new_conv, "attn_k": new_k,
+                    "attn_v": new_v, "index": idx + tokens.shape[1]}

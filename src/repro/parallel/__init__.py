@@ -1,0 +1,6 @@
+# Distribution layer: logical-axis sharding + the TileLoom mesh planner bridge.
+from .sharding import (FIXED_PLANS, ShardingPlan, constrain, current_plan,
+                       tree_shardings, use_plan)
+
+__all__ = ["FIXED_PLANS", "ShardingPlan", "constrain", "current_plan",
+           "tree_shardings", "use_plan"]

@@ -1,0 +1,325 @@
+"""TileLoom mesh planning: choose the sharding layout like the paper chooses
+dataflows.
+
+The pod is described in the same df dialect (``core.hw.tpu_v5e_pod``); a
+candidate :class:`ShardingPlan` corresponds 1:1 to a TileLoom spatiotemporal
+mapping + memory-op choice of the model's dominant tile program:
+
+==============================  ==============================================
+ShardingPlan                    TileLoom plan on C[tokens,ffn]=X[tokens,d]W[d,ffn]
+==============================  ==============================================
+megatron_tp                     tokens->data, ffn->model; X broadcast along
+                                'model' (the TP all-gather); W broadcast along
+                                'data' hoisted to level 0 (weights resident)
+pure_dp                         tokens->(data,model) flattened; W broadcast to
+                                the whole array hoisted to level 0 (replicated)
+zero3 (fsdp)                    tokens->(data,model); W broadcast *inside* the
+                                layer loop (per-use weight gather = ZeRO-3)
+sequence_parallel               seq->model (ring dataflow); per-chip full W
+expert_parallel                 experts->model; token tiles all-to-all (the a2a
+                                is the EP analogue of the paper's broadcasts)
+==============================  ==============================================
+
+Two-step selection, exactly as the paper: (1) the analytic model below ranks
+candidates — compute / HBM / per-axis ICI terms with the paper's contention
+rule (demand over df-declared link bandwidth) and capacity pruning (candidate
+whose per-chip params+optimizer+activations exceed HBM is discarded);
+(2) the surviving top-k are validated by ``launch/dryrun.py``'s
+``.lower().compile()`` + cost analysis (the "profile on hardware" stage).
+
+``tileloom_view()`` renders the chosen plan back as the corresponding df tile
+program mapping for the reports.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig, TrainConfig
+from repro.core.hw import (HardwareModel, TPU_V5E_HBM_BYTES, TPU_V5E_HBM_GBPS,
+                           TPU_V5E_ICI_GBPS, TPU_V5E_PEAK_BF16, tpu_v5e_pod)
+from repro.models.api import ModelAPI, build_model
+from .sharding import (ShardingPlan, expert_parallel_plan, megatron_tp_plan,
+                       pure_dp_plan, sequence_parallel_plan)
+
+DCN_GBPS = 25.0          # cross-pod links (df 'pod' axis interconnect)
+
+
+def is_train_or_prefill(shape: ShapeConfig) -> bool:
+    return shape.kind in ("train", "prefill")
+
+
+# small helper since ShardingPlan is frozen
+def _rename(plan: ShardingPlan, name: str) -> ShardingPlan:
+    return ShardingPlan(name=name, rules=plan.rules,
+                        description=plan.description)
+
+
+def _tp2d() -> ShardingPlan:
+    """2D tensor parallelism for 100B+ models: activations' embed dim sharded
+    over 'data' (contraction-parallel partial matmuls + all-reduce), sequence
+    over 'model'.  No weight gather at all — the only layout where the
+    405B-class weights never move (XLA hoists ZeRO-3's per-layer gather to a
+    whole-stack gather, 50 GB/device; measured in the dry-run)."""
+    return ShardingPlan(
+        name="tp2d",
+        rules=(
+            ("batch", ("pod",)),
+            ("seq", "model"),
+            ("kv_seq", "model"),
+            ("embed", "data"),
+            ("ffn", "model"),
+            ("q_heads", "model"),
+            ("kv_heads", "model"),
+            ("vocab", "model"),
+            ("experts", "model"),
+        ),
+        description="2D TP: embed over data (psum matmuls), seq over model")
+
+
+def _zero3() -> ShardingPlan:
+    """megatron-TP + ZeRO-3: the params' 'embed' axis is sharded over 'data'
+    (activations are unaffected: their 'batch' axis already occupies 'data',
+    and ShardingPlan.spec never reuses a mesh axis)."""
+    return _rename(megatron_tp_plan().with_rule("embed", "data"), "zero3")
+
+
+@dataclass
+class MeshPlanCost:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    hbm_bytes_per_chip: float
+    collective_bytes: float
+    feasible: bool
+    dominant: str
+
+    @property
+    def total_s(self) -> float:
+        # paper's overlap model at steady state: compute overlaps transfers
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+
+@dataclass
+class MeshPlanResult:
+    plan: ShardingPlan
+    cost: MeshPlanCost
+    notes: str = ""
+
+
+def _mesh_sizes(multi_pod: bool) -> Dict[str, int]:
+    return ({"pod": 2, "data": 16, "model": 16} if multi_pod
+            else {"data": 16, "model": 16})
+
+
+def _shard_factor(plan: ShardingPlan, logical: str, sizes: Dict[str, int]
+                  ) -> int:
+    m = plan.mesh_axes(logical)
+    if m is None:
+        return 1
+    axes = (m,) if isinstance(m, str) else m
+    return math.prod(sizes.get(a, 1) for a in axes)
+
+
+def estimate_plan(api: ModelAPI, shape: ShapeConfig, plan: ShardingPlan,
+                  tcfg: TrainConfig, *, multi_pod: bool = False
+                  ) -> MeshPlanCost:
+    """Analytic three-term cost of one (plan, arch, shape) cell on the pod df
+    model.  Mirrors core/perfmodel.py at mesh granularity."""
+    cfg = api.cfg
+    sizes = _mesh_sizes(multi_pod)
+    chips = math.prod(sizes.values())
+    B, S = shape.global_batch, shape.seq_len
+    dt = 2  # bf16 activations
+
+    n_params = api.n_params()
+    n_active = api.n_active_params()
+    is_train = shape.kind == "train"
+    tokens = B * (S if shape.kind != "decode" else 1)
+
+    # ---- compute term ----------------------------------------------------
+    flops = (6.0 if is_train else 2.0) * n_active * tokens
+    if cfg.family in ("dense", "moe", "vlm", "audio") and shape.kind != "decode":
+        flops += 2.0 * (3.0 if is_train else 1.0) * B * S * S * \
+            cfg.n_heads * cfg.head_dim_ * cfg.n_layers * 0.5
+    compute_s = flops / (chips * TPU_V5E_PEAK_BF16)
+
+    # ---- memory (HBM) term -------------------------------------------------
+    p_bytes = jnp.dtype(cfg.param_dtype).itemsize
+    tp = _shard_factor(plan, "ffn", sizes)
+    zero = _shard_factor(plan, "embed", sizes)
+    ep = _shard_factor(plan, "experts", sizes) if cfg.n_experts else 1
+    if cfg.n_experts and ep > tp:
+        tp = ep              # expert sharding dominates the FFN weights
+    params_per_chip = n_params * p_bytes / (tp * zero)
+    if tcfg.optimizer == "adafactor":
+        opt_mult = 0.05          # factored second moments: ~N/d per matrix
+    else:
+        opt_mult = {"float32": 8, "bfloat16": 4}.get(tcfg.opt_state_dtype, 8)
+    opt_per_chip = (n_params * opt_mult / (tp * zero)) if is_train else 0.0
+    grad_per_chip = (n_params * 4 / (tp * zero)) if is_train else 0.0
+    dp = _shard_factor(plan, "batch", sizes)
+    sp = _shard_factor(plan, "seq", sizes)
+    # activations carry the embed dim sharded only when 'batch' does not
+    # already occupy the same mesh axis (ShardingPlan.spec drops reuses)
+    b_ax = str(plan.mesh_axes("batch"))
+    e_ax = plan.mesh_axes("embed")
+    act_emb = _shard_factor(plan, "embed", sizes) if (
+        e_ax and str(e_ax) not in b_ax) else 1
+    mb = max(1, tcfg.microbatches) if is_train else 1
+    tokens_chip = tokens / max(1, dp * sp * act_emb) / mb
+    if is_train:
+        # scan-over-layers remat: one carry (layer input) saved per layer,
+        # x2 for backward temporaries (calibrated against dry-run
+        # memory_analysis on qwen2.5-3b: 30 GB at mb=1 -> 9.4 GB at mb=4)
+        act_per_chip = 2 * cfg.n_layers * tokens_chip * cfg.d_model * dt \
+            + 8 * tokens_chip * cfg.d_model * dt
+    else:
+        act_per_chip = 2 * tokens_chip * cfg.d_model * dt
+    if shape.kind == "decode":
+        # KV cache / recurrent state resident in HBM
+        if cfg.family == "ssm":
+            cache = cfg.n_layers * B * cfg.d_model * 64 * 4
+        else:
+            cache = (cfg.n_layers * B * S * cfg.n_kv_heads * cfg.head_dim_
+                     * 2 * 2)
+        kvh = min(_shard_factor(plan, "kv_heads", sizes),
+                  max(1, cfg.n_kv_heads))
+        kvs = _shard_factor(plan, "kv_seq", sizes) * kvh
+        act_per_chip += cache / max(1, min(dp, B) * kvs)
+    hbm_per_chip = params_per_chip + opt_per_chip + grad_per_chip \
+        + act_per_chip
+    if zero > 1 and act_emb == 1 and is_train_or_prefill(shape) \
+           :
+        # ZeRO-3 via GSPMD: XLA hoists the per-layer weight all-gather into a
+        # whole-stack gather (measured: llama3-405b 50 GB/device), so the
+        # gathered stack is transiently resident sharded only by TP.  Decode
+        # is exempt: its activations are MBs, XLA reshards those instead.
+        hbm_per_chip += n_params * p_bytes / tp
+    # bytes actually streamed per step: weights once (+grad/opt traffic when
+    # training) + activations
+    hbm_traffic = ((params_per_chip * (3 if is_train else 1)
+                    + opt_per_chip) * (mb if zero > 1 else 1)
+                   + act_per_chip * 2 * mb)
+    memory_s = hbm_traffic / (TPU_V5E_HBM_GBPS * 1e9)
+
+    # ---- collective term (per-axis df interconnects, paper contention rule)
+    ici = TPU_V5E_ICI_GBPS * 1e9
+    dcn = DCN_GBPS * 1e9
+    busy: Dict[str, float] = {"data": 0.0, "model": 0.0, "pod": 0.0}
+    act_bytes = tokens * cfg.d_model * dt
+    if tp > 1:
+        # TP all-gather + reduce-scatter per layer, fwd (+2x bwd in training)
+        n_coll = 2 * cfg.n_layers * (3 if is_train else 1)
+        busy["model"] += n_coll * (act_bytes / max(1, dp)) * (tp - 1) / tp
+    if zero > 1:
+        # ZeRO-3 weight all-gather per step (fwd + bwd re-gather)
+        busy["data"] += (n_params * p_bytes / tp) * (2 if is_train else 1)
+    if is_train and dp > 1:
+        g_bytes = n_params * 4 / (tp * zero)
+        if tcfg.grad_compression == "int8":
+            g_bytes /= 4
+        busy["data"] += 2 * g_bytes * (min(dp, sizes["data"]) - 1) / dp
+        if multi_pod and plan.mesh_axes("batch") and \
+                "pod" in str(plan.mesh_axes("batch")):
+            busy["pod"] += 2 * g_bytes / max(1, sizes.get("pod", 1))
+    if cfg.n_experts and _shard_factor(plan, "experts", sizes) > 1:
+        # EP all-to-all: k-routed token activations, there and back
+        k = cfg.experts_per_token or 1
+        busy["model"] += 2 * cfg.n_layers * (3 if is_train else 1) * \
+            (tokens / max(1, dp)) * k * cfg.d_model * dt
+    if sp > 1:
+        # ring attention: K/V blocks circulate around the 'model' ring
+        busy["model"] += (3 if is_train else 1) * cfg.n_layers * \
+            2 * (tokens / sp) * cfg.n_kv_heads * cfg.head_dim_ * dt * (sp - 1)
+    coll_terms = []
+    for axis, b in busy.items():
+        if b <= 0:
+            continue
+        bw = dcn if axis == "pod" else ici
+        links = chips  # one link per chip per axis direction (torus)
+        # aggregate pool: one link per chip along the axis ring; demand is
+        # time-shared per the paper's contention rule
+        coll_terms.append(b / (bw * chips / sizes.get(axis, 1)))
+    collective_s = max(coll_terms) if coll_terms else 0.0
+    coll_bytes = sum(busy.values())
+
+    feasible = hbm_per_chip <= TPU_V5E_HBM_BYTES * 0.95
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    return MeshPlanCost(compute_s, memory_s, collective_s, hbm_per_chip,
+                        coll_bytes, feasible, dominant)
+
+
+def candidate_plans(cfg: ModelConfig, shape: ShapeConfig
+                    ) -> List[ShardingPlan]:
+    cands = [megatron_tp_plan(), _zero3(), pure_dp_plan()]
+    if shape.kind == "train":
+        # ZeRO-3 + sequence-parallel activations
+        cands.insert(1, _rename(
+            _zero3().with_rule("seq", "model").with_rule("kv_seq", "model"),
+            "zero3_sp"))
+        # 2D TP: required for the 100B+ archs (see module docstring)
+        cands.insert(2, _tp2d())
+    if shape.kind == "prefill":
+        cands.insert(1, _tp2d())     # same reasoning for 32k prefill
+    if cfg.n_experts:
+        cands.insert(0, expert_parallel_plan())
+        cands.append(_rename(expert_parallel_plan().with_rule(
+            "embed", "data"), "expert_parallel_zero3"))
+    if shape.kind != "train" and shape.seq_len >= 32768:
+        cands.append(sequence_parallel_plan())
+    if shape.kind == "decode":
+        # sequence-split KV attention (flash-decode across the mesh): shard
+        # the cache sequence over 'model' — essential when n_kv_heads < 16
+        kv_split = megatron_tp_plan().with_rule("kv_seq", "model") \
+            .with_rule("kv_heads", None).with_rule("q_heads", None)
+        cands.insert(0, _rename(kv_split, "kv_sequence_split"))
+        cands.insert(1, _rename(kv_split.with_rule("embed", "data"),
+                                "kv_split_zero3"))
+
+    return cands
+
+
+def plan_mesh(api: ModelAPI, shape: ShapeConfig, tcfg: TrainConfig, *,
+              multi_pod: bool = False, top_k: int = 3
+              ) -> List[MeshPlanResult]:
+    """Rank candidate plans (paper step 1).  The dry-run compiles the top-k
+    (paper step 2) and EXPERIMENTS.md records both."""
+    out = []
+    for plan in candidate_plans(api.cfg, shape):
+        cost = estimate_plan(api, shape, plan, tcfg, multi_pod=multi_pod)
+        out.append(MeshPlanResult(plan, cost))
+    feasible = [r for r in out if r.cost.feasible]
+    infeasible = [r for r in out if not r.cost.feasible]
+    feasible.sort(key=lambda r: r.cost.total_s)
+    for r in infeasible:
+        r.notes = (f"pruned: {r.cost.hbm_bytes_per_chip / 1e9:.1f} GB/chip "
+                   f"exceeds HBM (paper capacity rule)")
+    return feasible[:top_k] + infeasible
+
+
+def tileloom_view(plan: ShardingPlan, cfg: ModelConfig) -> str:
+    """Render the plan as its TileLoom tile-program mapping (for reports)."""
+    batch = plan.mesh_axes("batch") or "-"
+    ffn = plan.mesh_axes("ffn") or plan.mesh_axes("experts") or "-"
+    zero = plan.mesh_axes("embed")
+    lines = [
+        f"// TileLoom mapping of C[tokens,ffn] = X[tokens,d] @ W[d,ffn] "
+        f"({plan.name})",
+        f"tokens -> %{batch}; ffn -> %{ffn}",
+        f"load_X {{type=\"broadcast\", resources={{%ici_model}}}}"
+        if ffn != "-" else "load_X {type=\"local\"}",
+    ]
+    if zero:
+        lines.append("load_W {type=\"broadcast\", level=inner, "
+                     "resources={%ici_data}}  // ZeRO-3 per-use gather")
+
+    else:
+        lines.append("load_W {type=\"broadcast\", level=0, "
+                     "resources={%ici_data}}  // weights resident")
+    return "\n".join(lines)

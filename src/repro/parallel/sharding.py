@@ -1,0 +1,199 @@
+"""Logical-axis sharding: the bridge between model code and the mesh.
+
+Model code annotates activations with *logical* axes (``constrain(x,
+("batch", "seq", "embed"))``) and parameters carry logical axes from their
+LeafSpecs.  A :class:`ShardingPlan` maps logical axes -> mesh axes; the
+TileLoom planner bridge (``planner_bridge.py``) *produces* these plans by
+planning the model's dominant tile programs on the pod-level df description —
+fixed plans (pure-DP, megatron-TP, ...) are also provided as the vendor-style
+baselines.
+
+Divisibility-safe: a mesh axis that does not divide the corresponding dim is
+dropped from the spec (GSPMD would pad; we prefer explicit replication so the
+dry-run memory analysis stays honest).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from dataclasses import dataclass, field, replace
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+
+@dataclass(frozen=True)
+class ShardingPlan:
+    """logical axis -> mesh axis (or axes) mapping + plan metadata."""
+    name: str
+    rules: Tuple[Tuple[str, MeshAxes], ...]
+    description: str = ""
+
+    def mesh_axes(self, logical: Optional[str]) -> MeshAxes:
+        if logical is None:
+            return None
+        for k, v in self.rules:
+            if k == logical:
+                return v
+        return None
+
+    def with_rule(self, logical: str, axes: MeshAxes) -> "ShardingPlan":
+        rules = tuple((k, v) for k, v in self.rules if k != logical)
+        return replace(self, rules=rules + ((logical, axes),))
+
+    def spec(self, axes: Sequence[Optional[str]],
+             shape: Optional[Tuple[int, ...]] = None,
+             mesh: Optional[Mesh] = None) -> P:
+        """PartitionSpec for a tensor with the given logical axes; drops mesh
+        axes that do not divide the dim or are already used."""
+        used: set = set()
+        parts = []
+        for i, ax in enumerate(axes):
+            m = self.mesh_axes(ax)
+            if m is None:
+                parts.append(None)
+                continue
+            ms = (m,) if isinstance(m, str) else tuple(m)
+            ms = tuple(a for a in ms if a not in used)
+            if mesh is not None:
+                ok = []
+                size = 1
+                for a in ms:
+                    if a not in mesh.shape:
+                        continue
+                    size *= mesh.shape[a]
+                    ok.append(a)
+                ms = tuple(ok)
+                if shape is not None and ms:
+                    total = int(np.prod([mesh.shape[a] for a in ms]))
+                    if shape[i] % total != 0:
+                        # try the prefix that divides
+                        ms2 = []
+                        tot = 1
+                        for a in ms:
+                            if shape[i] % (tot * mesh.shape[a]) == 0:
+                                ms2.append(a)
+                                tot *= mesh.shape[a]
+                        ms = tuple(ms2)
+            if not ms:
+                parts.append(None)
+            else:
+                used.update(ms)
+                parts.append(ms[0] if len(ms) == 1 else ms)
+        return P(*parts)
+
+
+# ---------------------------------------------------------------- context
+class _Ctx(threading.local):
+    def __init__(self):
+        self.plan: Optional[ShardingPlan] = None
+        self.mesh: Optional[Mesh] = None
+
+
+_CTX = _Ctx()
+
+
+@contextlib.contextmanager
+def use_plan(plan: ShardingPlan, mesh: Mesh):
+    prev = (_CTX.plan, _CTX.mesh)
+    _CTX.plan, _CTX.mesh = plan, mesh
+    try:
+        yield
+    finally:
+        _CTX.plan, _CTX.mesh = prev
+
+
+def current_plan() -> Optional[ShardingPlan]:
+    return _CTX.plan
+
+
+def constrain(x: jax.Array, axes: Sequence[Optional[str]]) -> jax.Array:
+    """with_sharding_constraint by logical axes; no-op outside a plan."""
+    plan, mesh = _CTX.plan, _CTX.mesh
+    if plan is None or mesh is None:
+        return x
+    if len(axes) != x.ndim:
+        return x
+    spec = plan.spec(tuple(axes), tuple(x.shape), mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# -------------------------------------------------------- pytree helpers
+def tree_shardings(axes_tree: Any, shapes_tree: Any, plan: ShardingPlan,
+                   mesh: Mesh) -> Any:
+    """NamedSharding pytree for params/opt-state given their logical axes."""
+    def one(axes, shaped):
+        return NamedSharding(mesh, plan.spec(axes, tuple(shaped.shape), mesh))
+    return jax.tree.map(one, axes_tree, shapes_tree,
+                        is_leaf=lambda x: isinstance(x, tuple) and all(
+                            a is None or isinstance(a, str) for a in x))
+
+
+# ------------------------------------------------------------ fixed plans
+def pure_dp_plan() -> ShardingPlan:
+    """Everything replicated, batch over all mesh axes — the 'TT-1D-like'
+    trivial baseline at mesh level."""
+    return ShardingPlan(
+        name="pure_dp",
+        rules=(("batch", ("pod", "data", "model")),),
+        description="data parallel only; parameters replicated")
+
+
+def megatron_tp_plan() -> ShardingPlan:
+    """The fixed vendor-style template: DP over (pod,data), megatron TP over
+    'model' for heads/ffn/vocab/experts."""
+    return ShardingPlan(
+        name="megatron_tp",
+        rules=(
+            ("batch", ("pod", "data")),
+            ("q_heads", "model"),
+            ("kv_heads", "model"),
+            ("ffn", "model"),
+            ("vocab", "model"),
+            ("experts", "model"),
+            ("ssm_heads", "model"),
+        ),
+        description="DP x megatron-TP template")
+
+
+def sequence_parallel_plan() -> ShardingPlan:
+    """Long-context plan: sequence sharded over 'model' (ring-attention
+    style), used for 32k prefill / 500k decode when batch is tiny."""
+    return ShardingPlan(
+        name="sequence_parallel",
+        rules=(
+            ("batch", ("pod", "data")),
+            ("seq", "model"),
+            ("kv_seq", "model"),
+            ("ffn", None),
+            ("q_heads", None),
+        ),
+        description="DP x sequence-parallel (ring) template")
+
+
+def expert_parallel_plan() -> ShardingPlan:
+    """MoE plan: experts over 'model', batch over (pod,data); dense layers
+    megatron-TP."""
+    return ShardingPlan(
+        name="expert_parallel",
+        rules=(
+            ("batch", ("pod", "data")),
+            ("experts", "model"),
+            ("q_heads", "model"),
+            ("kv_heads", "model"),
+            ("ffn", "model"),
+            ("vocab", "model"),
+        ),
+        description="DP x EP(+TP) template")
+
+
+FIXED_PLANS = {
+    "pure_dp": pure_dp_plan,
+    "megatron_tp": megatron_tp_plan,
+    "sequence_parallel": sequence_parallel_plan,
+    "expert_parallel": expert_parallel_plan,
+}

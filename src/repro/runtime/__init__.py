@@ -1,0 +1,3 @@
+from .elastic import RescalePlan, apply_rescale, plan_rescale, viable_mesh_shapes
+from .fault_tolerance import (HeartbeatRegistry, RecoveryEvent, ResilientDriver,
+                              StragglerTracker)

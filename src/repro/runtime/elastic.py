@@ -1,0 +1,77 @@
+"""Elastic scaling: re-plan + reshard when the device set changes.
+
+The TileLoom thesis applied to cluster operations: a mapping is a *compiled
+decision*, so losing a pod (or gaining one) is handled by (1) re-running the
+mesh planner for the surviving device set, (2) restoring the latest
+checkpoint resharded onto the new mesh (checkpoints are stored fully
+gathered, so any mesh shape can load them), (3) resuming — the data pipeline
+is deterministic in (seed, step) so no input state moves.
+
+``plan_rescale`` is pure (testable without devices); ``apply_rescale``
+performs the device_put resharding.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+
+from repro.configs.base import ShapeConfig, TrainConfig
+from repro.models.api import ModelAPI
+from repro.parallel.planner_bridge import MeshPlanResult, plan_mesh
+
+
+@dataclass
+class RescalePlan:
+    old_devices: int
+    new_devices: int
+    mesh_shape: Tuple[int, ...]
+    mesh_axes: Tuple[str, ...]
+    plan_name: str
+    batch_note: str
+    ranking: List[MeshPlanResult]
+
+
+def viable_mesh_shapes(n_devices: int) -> List[Tuple[int, int]]:
+    """(data, model) factorizations, squarest first."""
+    out = []
+    for d in range(1, n_devices + 1):
+        if n_devices % d == 0:
+            out.append((d, n_devices // d))
+    out.sort(key=lambda dm: abs(math.log(dm[0] / dm[1])))
+    return out
+
+
+def plan_rescale(api: ModelAPI, shape: ShapeConfig, tcfg: TrainConfig, *,
+                 old_devices: int, new_devices: int) -> RescalePlan:
+    """Choose mesh shape + sharding plan for the new device count.  Keeps the
+    global batch when divisible; otherwise documents the adjustment (exact
+    reproducibility of the loss curve requires fixed global batch)."""
+    shapes = viable_mesh_shapes(new_devices)
+    best = shapes[0]
+    note = ""
+    if shape.global_batch % best[0] != 0:
+        for cand in shapes:
+            if shape.global_batch % cand[0] == 0:
+                best = cand
+                break
+        else:
+            note = (f"global_batch {shape.global_batch} not divisible by any "
+                    f"data-axis choice of {new_devices} devices; batch "
+                    f"padding required")
+    ranking = plan_mesh(api, shape, tcfg, multi_pod=False)
+    return RescalePlan(
+        old_devices=old_devices, new_devices=new_devices,
+        mesh_shape=best, mesh_axes=("data", "model"),
+        plan_name=ranking[0].plan.name if ranking else "megatron_tp",
+        batch_note=note, ranking=ranking)
+
+
+def apply_rescale(tree, shardings) -> Any:
+    """Reshard a (restored, host-resident) pytree onto the new mesh."""
+    def one(x, s):
+        return jax.device_put(x, s) if s is not None else x
+    return jax.tree.map(one, tree, shardings,
+                        is_leaf=lambda x: x is None)

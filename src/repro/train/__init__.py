@@ -1,0 +1,3 @@
+# Training substrate: optimizers, microbatched train step, serve step,
+# gradient compression.
+from . import grad_compress, optimizer, serve_step, train_step

@@ -1,0 +1,62 @@
+"""Int8 error-feedback gradient compression.
+
+Purpose at cluster scale: the DP/pod gradient reduction is the dominant
+cross-pod collective (params x 4 bytes per step over DCN).  Quantizing the
+reduced tensor to int8 with an error-feedback residual cuts the wire format
+4x with negligible convergence impact (1-bit Adam / PowerSGD lineage).
+
+Placement in this framework (documented in DESIGN.md S8): XLA does not expose
+a compressed all-reduce primitive, so compression is applied (a) at the
+microbatch gradient-accumulation boundary — the accumulator is held in int8 +
+f32 scale + residual, which is also a real memory win — and (b) modeled as a
+4x reduction of the collective roofline term when enabled (launch/roofline).
+On a real cluster the same quantizer wraps a shard_map psum over the 'pod'
+axis.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+class CompressedGrads(NamedTuple):
+    q: Params            # int8 payload
+    scale: Params        # per-tensor f32 scale
+    residual: Params     # error-feedback carry (f32)
+
+
+def init_residual(params: Params) -> Params:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress(grads: Params, residual: Params
+             ) -> Tuple[CompressedGrads, Params]:
+    """Quantize grads+residual to int8; return compressed + new residual."""
+    def one(g, r):
+        g32 = g.astype(jnp.float32) + r
+        scale = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+        deq = q.astype(jnp.float32) * scale
+        return q, scale, g32 - deq
+
+    out = jax.tree.map(one, grads, residual)
+    pick = lambda i: jax.tree.map(lambda t: t[i], out,
+                                  is_leaf=lambda t: isinstance(t, tuple))
+    q, scale, new_res = pick(0), pick(1), pick(2)
+    return CompressedGrads(q, scale, new_res), new_res
+
+
+def decompress(c: CompressedGrads) -> Params:
+    return jax.tree.map(
+        lambda q, s: q.astype(jnp.float32) * s, c.q, c.scale)
+
+
+def roundtrip(grads: Params, residual: Params) -> Tuple[Params, Params]:
+    """compress -> decompress, carrying the error-feedback residual.  This is
+    the exact arithmetic a compressed all-reduce applies to the summands."""
+    c, new_res = compress(grads, residual)
+    return decompress(c), new_res

@@ -1,0 +1,176 @@
+"""Optimizers (pure JAX — no optax offline): AdamW and Adafactor, with
+warmup+cosine schedule, global-norm clipping, and configurable state dtype
+(bf16 moments for the 405B-class configs so optimizer state fits HBM —
+see configs/llama3_405b.py).
+
+Optimizer state mirrors the param tree, so the same logical-axis sharding
+rules apply (ZeRO-style sharding falls out of the ShardingPlan mapping the
+'layers'/'embed'/'ffn' axes — no separate partitioner needed).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+Params = Any
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: Params
+    nu: Params
+
+
+class AdafactorState(NamedTuple):
+    step: jax.Array
+    vr: Params          # row second-moment factors
+    vc: Params          # col second-moment factors
+    v: Params           # full second moment for <2D params
+
+
+def lr_schedule(tcfg: TrainConfig) -> Callable[[jax.Array], jax.Array]:
+    def lr(step):
+        warm = jnp.minimum(1.0, (step + 1) / max(1, tcfg.warmup_steps))
+        prog = jnp.clip((step - tcfg.warmup_steps)
+                        / max(1, tcfg.total_steps - tcfg.warmup_steps), 0.0, 1.0)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return tcfg.learning_rate * warm * (0.1 + 0.9 * cos)
+    return lr
+
+
+def clip_by_global_norm(grads: Params, max_norm: float
+                        ) -> Tuple[Params, jax.Array]:
+    leaves = jax.tree.leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / (gnorm + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), gnorm
+
+
+# ------------------------------------------------------------------ AdamW
+def adamw_init(params: Params, tcfg: TrainConfig) -> AdamWState:
+    dt = jnp.dtype(tcfg.opt_state_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return AdamWState(step=jnp.zeros((), jnp.int32),
+                      mu=jax.tree.map(zeros, params),
+                      nu=jax.tree.map(zeros, params))
+
+
+def adamw_update(grads: Params, state: AdamWState, params: Params,
+                 tcfg: TrainConfig) -> Tuple[Params, AdamWState, Dict]:
+    lr = lr_schedule(tcfg)(state.step)
+    grads, gnorm = clip_by_global_norm(grads, tcfg.grad_clip)
+    b1, b2 = tcfg.b1, tcfg.b2
+    step = state.step + 1
+    c1 = 1 - b1 ** step.astype(jnp.float32)
+    c2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g32 = g.astype(jnp.float32)
+        m32 = m.astype(jnp.float32) * b1 + g32 * (1 - b1)
+        v32 = v.astype(jnp.float32) * b2 + jnp.square(g32) * (1 - b2)
+        update = (m32 / c1) / (jnp.sqrt(v32 / c2) + tcfg.eps)
+        new_p = p.astype(jnp.float32) - lr * (update
+                                              + tcfg.weight_decay
+                                              * p.astype(jnp.float32))
+        return new_p.astype(p.dtype), m32.astype(m.dtype), v32.astype(v.dtype)
+
+    out = jax.tree.map(upd, grads, state.mu, state.nu, params)
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_mu = jax.tree.map(lambda t: t[1], out,
+                          is_leaf=lambda t: isinstance(t, tuple))
+    new_nu = jax.tree.map(lambda t: t[2], out,
+                          is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, AdamWState(step, new_mu, new_nu), \
+        {"grad_norm": gnorm, "lr": lr}
+
+
+# --------------------------------------------------------------- Adafactor
+def adafactor_init(params: Params, tcfg: TrainConfig) -> AdafactorState:
+    dt = jnp.dtype(tcfg.opt_state_dtype)
+
+    def vr(p):
+        return (jnp.zeros(p.shape[:-1], dt) if p.ndim >= 2
+                else jnp.zeros((), dt))
+
+    def vc(p):
+        return (jnp.zeros(p.shape[:-2] + p.shape[-1:], dt) if p.ndim >= 2
+                else jnp.zeros((), dt))
+
+    def v(p):
+        return jnp.zeros(p.shape, dt) if p.ndim < 2 else jnp.zeros((), dt)
+
+    return AdafactorState(step=jnp.zeros((), jnp.int32),
+                          vr=jax.tree.map(vr, params),
+                          vc=jax.tree.map(vc, params),
+                          v=jax.tree.map(v, params))
+
+
+def adafactor_update(grads: Params, state: AdafactorState, params: Params,
+                     tcfg: TrainConfig) -> Tuple[Params, AdafactorState, Dict]:
+    lr = lr_schedule(tcfg)(state.step)
+    grads, gnorm = clip_by_global_norm(grads, tcfg.grad_clip)
+    step = state.step + 1
+    b2 = 1.0 - (step.astype(jnp.float32) + 1.0) ** -0.8
+
+    def upd(g, vr, vc, v, p):
+        g32 = jnp.square(g.astype(jnp.float32)) + 1e-30
+        if p.ndim >= 2:
+            vr32 = vr.astype(jnp.float32) * b2 + jnp.mean(g32, -1) * (1 - b2)
+            vc32 = vc.astype(jnp.float32) * b2 + jnp.mean(g32, -2) * (1 - b2)
+            denom = (vr32[..., None] * vc32[..., None, :]
+                     / (jnp.mean(vr32, -1)[..., None, None] + 1e-30))
+            update = g.astype(jnp.float32) * jax.lax.rsqrt(denom + 1e-30)
+            v32 = v
+        else:
+            v32 = v.astype(jnp.float32) * b2 + g32 * (1 - b2)
+            update = g.astype(jnp.float32) * jax.lax.rsqrt(v32 + 1e-30)
+            vr32, vc32 = vr, vc
+        update = update / jnp.maximum(1.0, jnp.sqrt(jnp.mean(
+            jnp.square(update))))
+        new_p = (p.astype(jnp.float32) - lr * update
+                 - lr * tcfg.weight_decay * p.astype(jnp.float32))
+        cast = lambda a, ref: a.astype(ref.dtype) if hasattr(a, "astype") else a
+        return (new_p.astype(p.dtype), cast(vr32, vr), cast(vc32, vc),
+                cast(v32, v))
+
+    out = jax.tree.map(upd, grads, state.vr, state.vc, state.v, params)
+    pick = lambda i: jax.tree.map(lambda t: t[i], out,
+                                  is_leaf=lambda t: isinstance(t, tuple))
+    return pick(0), AdafactorState(step, pick(1), pick(2), pick(3)), \
+        {"grad_norm": gnorm, "lr": lr}
+
+
+# ------------------------------------------------------------------ facade
+def opt_init(params: Params, tcfg: TrainConfig):
+    return (adafactor_init if tcfg.optimizer == "adafactor"
+            else adamw_init)(params, tcfg)
+
+
+def opt_update(grads: Params, state, params: Params, tcfg: TrainConfig):
+    return (adafactor_update if tcfg.optimizer == "adafactor"
+            else adamw_update)(grads, state, params, tcfg)
+
+
+def opt_state_axes(param_axes: Params, tcfg: TrainConfig):
+    """Logical axes for the optimizer state (mirrors param axes)."""
+    if tcfg.optimizer == "adafactor":
+        drop_last = jax.tree.map(
+            lambda a: a[:-1] if len(a) >= 2 else (),
+            param_axes, is_leaf=lambda x: isinstance(x, tuple))
+        drop_row = jax.tree.map(
+            lambda a: a[:-2] + a[-1:] if len(a) >= 2 else (),
+            param_axes, is_leaf=lambda x: isinstance(x, tuple))
+        scalars = jax.tree.map(
+            lambda a: a if len(a) < 2 else (),
+            param_axes, is_leaf=lambda x: isinstance(x, tuple))
+        return AdafactorState(step=(), vr=drop_last, vc=drop_row, v=scalars)
+    return AdamWState(step=(), mu=param_axes, nu=param_axes)

@@ -1,0 +1,72 @@
+"""Serve-step builder: batched single-token decode with a sharded KV cache
+(or recurrent state), jit-compiled with plan-derived shardings and cache
+donation — the object the ``decode_*`` dry-run cells lower.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.api import ModelAPI
+from repro.parallel.sharding import ShardingPlan, use_plan
+
+Params = Any
+
+
+def make_serve_step(api: ModelAPI, plan: Optional[ShardingPlan] = None,
+                    mesh: Optional[Mesh] = None) -> Callable:
+    """Returns ``serve_step(params, tokens, cache) -> (logits, cache)``."""
+
+    def serve_step(params, tokens, cache):
+        return api.decode_step(params, tokens, cache)
+
+    if plan is not None and mesh is not None:
+        def planned(params, tokens, cache):
+            with use_plan(plan, mesh):
+                return serve_step(params, tokens, cache)
+        return planned
+    return serve_step
+
+
+def cache_shardings(api: ModelAPI, cache_abstract: Dict[str, Any],
+                    plan: ShardingPlan, mesh: Mesh) -> Dict[str, Any]:
+    axes = api.cache_axes()
+
+    def one(ax, shaped):
+        if len(ax) != len(shaped.shape):
+            return NamedSharding(mesh, P())
+        return NamedSharding(mesh, plan.spec(ax, tuple(shaped.shape), mesh))
+
+    return jax.tree.map(one, axes, cache_abstract,
+                        is_leaf=lambda x: isinstance(x, tuple) and all(
+                            a is None or isinstance(a, str) for a in x))
+
+
+def param_shardings(api: ModelAPI, plan: ShardingPlan, mesh: Mesh):
+    axes = api.param_axes()
+    shapes = api.abstract_params()
+
+    def one(ax, shaped):
+        return NamedSharding(mesh, plan.spec(ax, tuple(shaped.shape), mesh))
+
+    return jax.tree.map(one, axes, shapes,
+                        is_leaf=lambda x: isinstance(x, tuple) and all(
+                            a is None or isinstance(a, str) for a in x))
+
+
+def jit_serve_step(api: ModelAPI, plan: ShardingPlan, mesh: Mesh,
+                   cache_abstract: Dict[str, Any],
+                   tokens_shape: Optional[Tuple[int, int]] = None):
+    step = make_serve_step(api, plan, mesh)
+    p_sh = param_shardings(api, plan, mesh)
+    c_sh = cache_shardings(api, cache_abstract, plan, mesh)
+    tok_sh = NamedSharding(mesh, plan.spec(("batch", None), tokens_shape,
+                                           mesh))
+    return jax.jit(step, in_shardings=(p_sh, tok_sh, c_sh),
+                   out_shardings=(None, c_sh),
+                   donate_argnums=(2,))

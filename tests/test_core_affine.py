@@ -1,0 +1,59 @@
+"""Unit tests for the affine algebra underlying reuse analysis."""
+import pytest
+
+from repro.core.affine import (AffineExpr, AffineMap, _is_mixed_radix,
+                               distinct_points, footprint_tiles)
+
+
+def test_linear_algebra():
+    a = AffineExpr.var("i")
+    b = AffineExpr.var("j", 2)
+    c = a + b + AffineExpr.const_expr(3)
+    assert c.evaluate({"i": 1, "j": 2}) == 1 + 4 + 3
+    assert c.depends_on("i") and c.depends_on("j") and not c.depends_on("k")
+    assert (c * 2).evaluate({"i": 1, "j": 2}) == 16
+
+
+def test_mod_floordiv():
+    e = (AffineExpr.var("x") + AffineExpr.const_expr(1)).with_mod(8)
+    assert e.evaluate({"x": 7}) == 0
+    f = AffineExpr.var("x").with_floordiv(4)
+    assert f.evaluate({"x": 7}) == 1
+    with pytest.raises(ValueError):
+        _ = e + f                     # non-linear exprs cannot be added
+
+
+def test_substitute_mixed_radix():
+    # g := 16*t + 2*x + y  (grid-index reconstruction)
+    g = AffineExpr.linear({"t": 16, "x": 2, "y": 1})
+    m = AffineMap.from_terms({"g": 1}, {"k": 1})
+    m2 = m.substitute("g", g)
+    assert m2.depends_on("t") and m2.depends_on("x") and m2.depends_on("k")
+    assert m2.evaluate({"t": 1, "x": 1, "y": 1, "k": 5}) == (19, 5)
+
+
+def test_distinct_points_product_rule_matches_enumeration():
+    m = AffineMap.from_terms({"t": 4, "x": 1}, {"k": 1})
+    extents = {"t": 3, "x": 4, "k": 5}
+    # mixed radix: x stride 1 extent 4, t stride 4 -> all distinct
+    exact = distinct_points(m, extents, ["t", "x", "k"])
+    assert exact == 3 * 4 * 5
+    assert _is_mixed_radix(m, extents, ["t", "x", "k"])
+
+
+def test_distinct_points_non_injective_fallback():
+    # overlapping strides: t stride 2 but x extent 4 -> collisions
+    m = AffineMap.from_terms({"t": 2, "x": 1})
+    extents = {"t": 2, "x": 4}
+    assert not _is_mixed_radix(m, extents, ["t", "x"])
+    # values: 2t + x for t in {0,1}, x in {0..3} -> {0..5} = 6 distinct, not 8
+    assert distinct_points(m, extents, ["t", "x"]) == 6
+
+
+def test_footprint_independent_dims_free():
+    # access independent of "n": ranging n does not grow the footprint
+    m = AffineMap.from_terms({"m": 1}, {"k": 1})
+    extents = {"m": 4, "n": 7, "k": 3}
+    assert footprint_tiles(m, extents, ["n"]) == 1
+    assert footprint_tiles(m, extents, ["n", "k"]) == 3
+    assert footprint_tiles(m, extents, ["m", "n", "k"]) == 12

@@ -1,0 +1,195 @@
+"""System-behaviour tests for the TileLoom planner (paper S2.2-S2.5)."""
+import math
+
+import pytest
+
+from repro.core import (SearchBudget, analyze_reuse, enumerate_mappings,
+                        estimate, get_hw, hoist_options, make_plan,
+                        matmul_program, flash_attention_program, plan_kernel,
+                        simulate, templates)
+from repro.core.reuse import enumerate_memop_choices, buffer_footprint_bytes
+from repro.core.perfmodel import pipelined_loop_time
+
+
+@pytest.fixture(scope="module")
+def hw():
+    return get_hw("wormhole_8x8")
+
+
+@pytest.fixture(scope="module")
+def prog():
+    return matmul_program(1024, 1024, 1024, bm=64, bn=64, bk=64)
+
+
+def test_df_text_matches_paper_structure(hw):
+    text = hw.df_text()
+    for op in ("df.spatial_dim", "df.core", "df.memory", "df.mux",
+               "df.interconnects", "df.mat", "df.vec"):
+        assert op in text
+    assert "mod 8" in text            # wrap-around ring links (Listing 6)
+
+
+def test_mapping_enumeration_contains_canonical_dataflows(hw, prog):
+    maps = enumerate_mappings(prog, hw)
+    descs = [m.describe() for m in maps]
+    # the 2D output-stationary mapping (gx->x, gy->y) must be in the space
+    assert any("gx->%x(8)" in d and "gy->%y(8)" in d for d in descs)
+    # the 1D flattened mapping (gx over both axes) must be in the space
+    assert any("gx->%x(8)" in d and "gx->%y(8)" in d for d in descs)
+    # tiling order matters: both orders of the flattened mapping exist
+    assert any("gx->%y(8), gx->%x(8)" in d for d in descs)
+
+
+def test_mapping_grid_index_reconstruction(hw, prog):
+    maps = enumerate_mappings(prog, hw)
+    m = next(m for m in maps if len(m.spatial_for("gx")) == 2)
+    expr = m.grid_index_expr("gx")
+    s2 = m.spatial[1].hw_size
+    # mixed radix: outer digit stride = inner size
+    env = {m.spatial[0].hw_dim: 1, m.spatial[1].hw_dim: 2, "t_gx": 0}
+    assert expr.evaluate(env) == s2 + 2
+
+
+def test_reuse_analysis_gemm(hw, prog):
+    maps = enumerate_mappings(prog, hw)
+    m2d = next(m for m in maps
+               if m.spatial_for("gx") and m.spatial_for("gy")
+               and m.spatial_for("gx")[0].hw_dim == "x")
+    infos = {i.access.tensor.name: i for i in analyze_reuse(m2d, hw)}
+    # A[gx,k] is identical along the y axis; B[k,gy] along x (paper Listing 3)
+    assert "y" in infos["A"].spatial_axes and "x" not in infos["A"].spatial_axes
+    assert "x" in infos["B"].spatial_axes and "y" not in infos["B"].spatial_axes
+    # C store depends on both spatial dims -> no spatial reuse
+    assert infos["C"].spatial_axes == ()
+
+
+def test_hoisting_footprint_rules(hw, prog):
+    """Paper Listing 4: hoisting across a dependent loop multiplies the
+    footprint by its extent; across an independent loop it does not."""
+    maps = enumerate_mappings(prog, hw)
+    m2d = next(m for m in maps
+               if m.spatial_for("gx") and m.spatial_for("gy") and m.temporal)
+    infos = {i.access.tensor.name: i for i in analyze_reuse(m2d, hw)}
+    opts = hoist_options(infos["A"], m2d)
+    # innermost option: 1 tile; crossing k multiplies by K_tiles
+    assert opts[0].footprint_tiles == 1
+    k_tiles = prog.dim("k").extent
+    assert any(o.footprint_tiles == k_tiles for o in opts)
+    # traffic = issues x tiles_per_issue is monotonically non-increasing as
+    # we hoist outward
+    traffic = [o.issues_per_core * o.tiles_per_issue for o in opts]
+    assert all(a >= b for a, b in zip(traffic, traffic[1:]))
+
+
+def test_capacity_pruning(hw):
+    # enormous blocks: no memory-op combination fits the 1.5MB L1
+    big = matmul_program(8192, 8192, 8192, bm=1024, bn=1024, bk=1024)
+    maps = enumerate_mappings(big, hw)
+    assert all(len(enumerate_memop_choices(m, hw)) == 0 for m in maps[:8])
+
+
+def test_pipelined_loop_formula():
+    # I=1: no overlap possible
+    assert pipelined_loop_time(1, 2.0, 3.0, 5.0) == 10.0
+    # steady state limited by compute when compute dominates
+    t = pipelined_loop_time(10, 1.0, 1.0, 5.0)
+    assert t == 8 * 5.0 + 5.0 + 5.0 + 1.0 + 1.0
+    # limited by load+store when memory dominates
+    t = pipelined_loop_time(10, 3.0, 3.0, 1.0)
+    assert t == 8 * 6.0 + 3.0 + 3.0 + 3.0 + 3.0
+
+
+def test_planner_beats_or_matches_vendor_templates(hw):
+    """The searched space includes both templates, so TL's model-best must be
+    no worse than the better template under the model (paper S3.2) when
+    planning at the template's own block shape."""
+    M = N = K = 2048
+    tpl = templates.tt2d_matmul_plan(M, N, K, hw)
+    bm, _ = tpl.loads[0].access.tile_shape
+    _, bn = tpl.loads[1].access.tile_shape
+    bk = tpl.loads[0].access.tile_shape[1]
+    res = plan_kernel(matmul_program(M, N, K, bm=bm, bn=bn, bk=bk), hw,
+                      budget=SearchBudget(top_k=3))
+    t2d = estimate(tpl, hw)
+    assert res.topk[0].cost.total_s <= t2d.total_s * 1.001
+
+
+def test_spatial_reuse_reduces_dram_traffic(hw):
+    """Paper Table 1: spatial reuse cuts DRAM accesses (avg -70%)."""
+    M = N = K = 2048
+    with_reuse = plan_kernel(matmul_program(M, N, K, bm=128, bn=128, bk=64),
+                             hw, profile=False)
+    without = plan_kernel(matmul_program(M, N, K, bm=128, bn=128, bk=64),
+                          hw, profile=False, spatial_reuse=False)
+    assert with_reuse.best.cost.dram_bytes < 0.5 * without.best.cost.dram_bytes
+
+
+def test_two_step_selection_runs_simulator(hw):
+    res = plan_kernel(matmul_program(512, 512, 512, bm=64, bn=64, bk=64), hw,
+                      budget=SearchBudget(top_k=2))
+    assert all(c.sim is not None for c in res.topk)
+    assert res.best.final_s > 0
+
+
+def test_flash_attention_planning(hw):
+    """TL exploits K/V reuse across query tiles (paper S3.2): the best plan
+    must not reload K/V per-core from DRAM at the innermost level."""
+    prog = flash_attention_program(64, 1024, 1024, 64, bq=64, bkv=64)
+    res = plan_kernel(prog, hw, budget=SearchBudget(top_k=3))
+    kv_choices = [c for c in res.best.plan.loads
+                  if c.access.tensor.name in ("K", "V")]
+    assert any(c.bcast_axes or c.hoist.level < 3 for c in kv_choices)
+    ttnn = templates.ttnn_flash_plan(64, 1024, 1024, 64, hw)
+    assert simulate(res.best.plan, hw).total_s < simulate(ttnn, hw).total_s
+
+
+def test_simulator_traffic_consistency(hw):
+    """Simulator and analytic model must agree on DRAM traffic for a plan
+    with no broadcasts and no hoisting (both count every per-core load)."""
+    res = plan_kernel(matmul_program(1024, 1024, 1024, bm=128, bn=128, bk=64),
+                      hw, profile=False, spatial_reuse=False,
+                      temporal_reuse=False)
+    plan = res.best.plan
+    sim = simulate(plan, hw)
+    model = estimate(plan, hw)
+    assert sim.dram_bytes == pytest.approx(model.dram_bytes, rel=0.05)
+
+
+def test_tpu_pod_presets():
+    pod = get_hw("tpu_v5e_pod")
+    assert pod.n_cores == 256
+    assert pod.peak_flops_per_core() == pytest.approx(197e12, rel=0.01)
+    two = get_hw("tpu_v5e_2pod")
+    assert two.n_cores == 512
+    assert {a for a, _ in two.mesh_dims} == {"pod", "data", "model"}
+
+
+def test_roofline_loop_weighting_sibling_scans():
+    """Trip inference must distinguish sibling scans at one nesting depth
+    (EXPERIMENTS.md SPerf B4): weights validated against scan-tuple dims."""
+    import jax
+    import jax.numpy as jnp
+    from repro.launch import roofline as RL
+
+    def f(w, x):
+        def layer(h, wi):                      # "layer scan": 6 trips
+            return jnp.tanh(h @ wi), None
+        h, _ = jax.lax.scan(layer, x, w)
+
+        def chunk(acc, i):                     # sibling "chunk scan": 2 trips
+            xs = jax.lax.dynamic_slice_in_dim(h, i * 8, 8, axis=0)
+            return acc + jnp.sum(xs @ w[0]), None
+        out, _ = jax.lax.scan(chunk, jnp.zeros(()), jnp.arange(2))
+        return out
+
+    compiled = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((6, 32, 32), jnp.float32),
+        jax.ShapeDtypeStruct((16, 32), jnp.float32)).compile()
+    hlo = compiled.as_text()
+    weighted, flat = RL.dot_flops(hlo, trips_by_depth=(6,))
+    # layer dots (6x) dominate; chunk dots get 2x, never 6x:
+    # flat = layer_dot + chunk_dot; weighted = 6*layer + 2*chunk
+    layer_dot = 2 * 16 * 32 * 32
+    chunk_dot = 2 * 8 * 32 * 32
+    assert abs(weighted - (6 * layer_dot + 2 * chunk_dot)) <= \
+        0.2 * weighted

@@ -1,0 +1,153 @@
+"""Hypothesis property tests on the system's invariants."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from repro.core import (enumerate_mappings, estimate, get_hw, make_plan,
+                        matmul_program, pipelined_loop_time)
+from repro.core.affine import AffineExpr, AffineMap, distinct_points
+from repro.core.reuse import (analyze_reuse, enumerate_memop_choices,
+                              hoist_options)
+from repro.train.grad_compress import init_residual, roundtrip
+
+HW = get_hw("wormhole_8x8")
+SETTINGS = settings(max_examples=25, deadline=None,
+                    suppress_health_check=[HealthCheck.too_slow])
+
+
+# ------------------------------------------------------------ affine algebra
+@given(st.integers(1, 6), st.integers(1, 6), st.integers(1, 6))
+@SETTINGS
+def test_distinct_points_product_bound(a, b, c):
+    """Distinct points never exceed the product of extents, and the
+    mixed-radix fast path agrees with exact enumeration."""
+    m = AffineMap.from_terms({"t": b, "x": 1})
+    extents = {"t": a, "x": b, "k": c}
+    n = distinct_points(m, extents, ["t", "x"])
+    assert 1 <= n <= a * b
+    # mixed radix (stride b, extent of x = b) -> exactly a*b distinct
+    assert n == a * b
+
+
+@given(st.integers(0, 50), st.integers(0, 50), st.integers(2, 64))
+@SETTINGS
+def test_affine_substitution_is_evaluation_consistent(t, x, s):
+    g = AffineExpr.linear({"t": s, "x": 1})
+    m = AffineMap.from_terms({"g": 2}, {"k": 1}).substitute("g", g)
+    direct = (2 * (t * s + x), 0)
+    assert m.evaluate({"t": t, "x": x, "k": 0}) == direct
+
+
+# ------------------------------------------------------- mapping invariants
+@given(st.sampled_from([256, 512, 1024, 2048]),
+       st.sampled_from([256, 512, 1024, 2048]),
+       st.sampled_from([256, 1024]))
+@SETTINGS
+def test_mapping_covers_grid(M, N, K):
+    """Every mapping covers the full logical grid: spatial_factor x
+    wave_extent >= extent per grid dim, with utilization in (0, 1]."""
+    prog = matmul_program(M, N, K, bm=64, bn=64, bk=64)
+    for m in enumerate_mappings(prog, HW)[:32]:
+        for d in prog.grid_dims:
+            assert m.spatial_factor(d.name) * m.wave_extent(d.name) >= d.extent
+        assert 0.0 < m.utilization() <= 1.0
+
+
+@given(st.sampled_from([512, 1024, 4096]), st.sampled_from([512, 2048]))
+@SETTINGS
+def test_hoisting_traffic_monotone(M, K):
+    """Hoisting outward never increases per-core traffic, and footprints
+    stay within enumerated-capacity plans."""
+    prog = matmul_program(M, M, K, bm=64, bn=64, bk=64)
+    for m in enumerate_mappings(prog, HW)[:16]:
+        for info in analyze_reuse(m, HW):
+            if info.access.kind != "load":
+                continue
+            opts = hoist_options(info, m)
+            traffic = [o.issues_per_core * o.tiles_per_issue for o in opts]
+            assert all(a >= b for a, b in zip(traffic, traffic[1:]))
+
+
+@given(st.sampled_from([1024, 2048]), st.sampled_from([1024, 2048]))
+@SETTINGS
+def test_capacity_pruning_invariant(M, N):
+    """Every enumerated plan's buffer footprint fits L1."""
+    prog = matmul_program(M, N, 1024, bm=128, bn=128, bk=64)
+    for m in enumerate_mappings(prog, HW)[:8]:
+        for loads in enumerate_memop_choices(m, HW)[:16]:
+            plan = make_plan(m, loads, HW)
+            assert plan.buffer_bytes() <= HW.local_capacity()
+
+
+# --------------------------------------------------------- perf model sanity
+@given(st.integers(1, 64), st.floats(1e-7, 1e-3), st.floats(1e-7, 1e-3),
+       st.floats(1e-7, 1e-3))
+@SETTINGS
+def test_pipeline_formula_bounds(I, tl, ts, tc):
+    """Pipelined time is within [max-term lower bound, serial upper bound]."""
+    t = pipelined_loop_time(I, tl, ts, tc)
+    serial = I * (tl + tc + ts)
+    lower = max(I * tc, I * (tl + ts)) if I >= 2 else tl + tc + ts
+    assert t <= serial + 1e-12
+    assert t >= lower * 0.5            # steady-state dominance
+
+
+@given(st.sampled_from([512, 1024, 2048]))
+@SETTINGS
+def test_estimate_positive_and_flops_exact(n):
+    prog = matmul_program(n, n, n, bm=64, bn=64, bk=64)
+    m = enumerate_mappings(prog, HW)[0]
+    loads = enumerate_memop_choices(m, HW)[0]
+    cost = estimate(make_plan(m, loads, HW), HW)
+    assert cost.total_s > 0
+    # padded grids may overcount, never undercount
+    assert cost.flops >= 2 * n ** 3 * 0.999
+
+
+# ------------------------------------------------------ gradient compression
+@given(st.lists(st.floats(-100, 100, allow_nan=False), min_size=4,
+                max_size=32))
+@SETTINGS
+def test_compression_bounded_error(vals):
+    g = {"w": jnp.asarray(np.array(vals, np.float32))}
+    res = init_residual(g)
+    deq, new_res = roundtrip(g, res)
+    scale = max(abs(v) for v in vals) / 127.0 if any(vals) else 0.0
+    err = np.abs(np.asarray(deq["w"]) - np.array(vals, np.float32))
+    assert (err <= scale * 0.5 + 1e-6).all()       # within half a quantum
+    # residual carries exactly the quantization error
+    np.testing.assert_allclose(np.asarray(new_res["w"]),
+                               np.array(vals, np.float32) - np.asarray(deq["w"]),
+                               rtol=1e-5, atol=1e-6)
+
+
+# ------------------------------------------------------------- sharding spec
+@given(st.sampled_from([(8, 16), (16, 16), (12, 16)]),
+       st.sampled_from([(256, 512), (100, 512), (256, 300)]))
+@SETTINGS
+def test_sharding_spec_divisibility(mesh_shape, tensor_shape):
+    """ShardingPlan.spec never produces a spec whose mesh axes do not divide
+    the tensor dim, and never reuses a mesh axis."""
+    import jax
+    from repro.parallel.sharding import megatron_tp_plan
+    devs = np.array(jax.devices() * math.prod(mesh_shape))[
+        :math.prod(mesh_shape)].reshape(mesh_shape)
+    from jax.sharding import Mesh
+    mesh = Mesh(devs, ("data", "model"))
+    plan = megatron_tp_plan()
+    spec = plan.spec(("batch", "ffn"), tensor_shape, mesh)
+    used = []
+    for i, part in enumerate(spec):
+        if part is None:
+            continue
+        axes = (part,) if isinstance(part, str) else part
+        total = 1
+        for a in axes:
+            assert a not in used
+            used.append(a)
+            total *= mesh.shape[a]
+        assert tensor_shape[i] % total == 0
