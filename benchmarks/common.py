@@ -22,10 +22,14 @@ def geomean(xs: Iterable[float]) -> float:
     return math.exp(sum(math.log(x) for x in xs) / len(xs))
 
 
-def tl_gemm(M: int, N: int, K: int, hw, budget=DEFAULT_BUDGET, **kw):
+def tl_gemm(M: int, N: int, K: int, hw, budget=DEFAULT_BUDGET, cache=None,
+            **kw):
+    """Plan a GEMM with full block-shape exploration.  ``cache`` is an
+    optional :class:`repro.plancache.PlanCache`: hits skip the search, and
+    ``python -m repro.plancache warm --wormhole`` pre-populates it."""
     progs = [matmul_program(M, N, K, bm=bm, bn=bn, bk=bk)
              for bm, bn, bk in block_shape_candidates(M, N, K)]
-    return plan_kernel_multi(progs, hw, budget=budget, **kw)
+    return plan_kernel_multi(progs, hw, budget=budget, cache=cache, **kw)
 
 
 def sim_time(plan, hw) -> float:

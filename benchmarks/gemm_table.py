@@ -14,31 +14,37 @@ from repro.core import estimate, get_hw, simulate, templates
 from .common import DEFAULT_BUDGET, HW_CONFIGS, geomean, row, tl_gemm
 
 
-def sweep(full: bool = False):
+def shape_table(full: bool = False):
+    """The Fig-5 (M, N, K) grid; also consumed by the plancache AOT warmer
+    (``python -m repro.plancache warm --wormhole``)."""
     Ms = (256, 1024, 4096, 16384) if full else (1024, 4096, 16384)
-    Ns = Ms
     Ks = (1024, 4096) if full else (4096,)
+    return tuple((M, N, K) for K in Ks for M in Ms for N in Ms)
+
+
+def sweep(full: bool = False, cache=None):
+    """``cache`` (a ``repro.plancache.PlanCache``) lets a pre-warmed plan
+    registry (``python -m repro.plancache warm --wormhole``) skip the
+    searches; by default each shape is planned fresh."""
     lines = []
     summary = {}
     for hw_name in HW_CONFIGS:
         hw = get_hw(hw_name)
         ratios, r1d, r2d = [], [], []
-        for K in Ks:
-            for M in Ms:
-                for N in Ns:
-                    res = tl_gemm(M, N, K, hw)
-                    tl_t = res.best.sim.total_s
-                    tt1 = simulate(templates.tt1d_matmul_plan(M, N, K, hw), hw).total_s
-                    tt2 = simulate(templates.tt2d_matmul_plan(M, N, K, hw), hw).total_s
-                    ttnn = simulate(templates.ttnn_matmul_plan(M, N, K, hw), hw).total_s
-                    ratios.append(ttnn / tl_t)
-                    r1d.append(tt1 / tl_t)
-                    r2d.append(tt2 / tl_t)
-                    lines.append(row(
-                        f"gemm_fig5/{hw_name}/M{M}_N{N}_K{K}", tl_t * 1e6,
-                        f"vs_ttnn={ttnn / tl_t:.3f};vs_tt1d={tt1 / tl_t:.3f};"
-                        f"vs_tt2d={tt2 / tl_t:.3f};"
-                        f"tflops={res.best.sim.tflops:.1f}"))
+        for (M, N, K) in shape_table(full):
+            res = tl_gemm(M, N, K, hw, cache=cache)
+            tl_t = res.best.sim.total_s
+            tt1 = simulate(templates.tt1d_matmul_plan(M, N, K, hw), hw).total_s
+            tt2 = simulate(templates.tt2d_matmul_plan(M, N, K, hw), hw).total_s
+            ttnn = simulate(templates.ttnn_matmul_plan(M, N, K, hw), hw).total_s
+            ratios.append(ttnn / tl_t)
+            r1d.append(tt1 / tl_t)
+            r2d.append(tt2 / tl_t)
+            lines.append(row(
+                f"gemm_fig5/{hw_name}/M{M}_N{N}_K{K}", tl_t * 1e6,
+                f"vs_ttnn={ttnn / tl_t:.3f};vs_tt1d={tt1 / tl_t:.3f};"
+                f"vs_tt2d={tt2 / tl_t:.3f};"
+                f"tflops={res.best.sim.tflops:.1f}"))
         win = sum(1 for r in ratios if r >= 1.0) / len(ratios)
         within10 = sum(1 for r in ratios if r >= 0.9) / len(ratios)
         summary[hw_name] = (geomean(ratios), win, within10,
@@ -51,8 +57,8 @@ def sweep(full: bool = False):
     return lines, summary
 
 
-def main(full: bool = False):
-    lines, summary = sweep(full)
+def main(full: bool = False, cache=None):
+    lines, summary = sweep(full, cache=cache)
     for ln in lines:
         print(ln)
     return summary

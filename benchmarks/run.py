@@ -14,15 +14,24 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", nargs="*", default=None)
+    ap.add_argument("--plan-cache", action="store_true",
+                    help="resolve plans from the persistent registry "
+                         "(pre-warm with `python -m repro.plancache warm "
+                         "--wormhole`); off by default so suites that "
+                         "measure planning time stay honest")
     args = ap.parse_args()
 
     from . import (ablation_spatial, ablation_temporal, flash_table,
                    gemm_irregular, gemm_table, perfmodel_validation,
                    topk_table)
+    cache = None
+    if args.plan_cache:
+        from repro.plancache import PlanCache
+        cache = PlanCache()
     suites = {
-        "gemm_fig5": lambda: gemm_table.main(full=args.full),
+        "gemm_fig5": lambda: gemm_table.main(full=args.full, cache=cache),
         "gemm_fig6": gemm_irregular.main,
-        "flash_fig7": flash_table.main,
+        "flash_fig7": lambda: flash_table.main(cache=cache),
         "spatial_tbl1": ablation_spatial.main,
         "temporal_fig8": ablation_temporal.main,
         "perfmodel_fig9": perfmodel_validation.main,
@@ -35,6 +44,11 @@ def main() -> None:
         t0 = time.perf_counter()
         fn()
         print(f"suite/{name},{(time.perf_counter() - t0) * 1e6:.0f},done",
+              file=sys.stderr)
+    if cache is not None:
+        s = cache.store
+        s.flush_stats()
+        print(f"plancache,{0:.0f},hits={s.stats.hits};misses={s.stats.misses}",
               file=sys.stderr)
 
 

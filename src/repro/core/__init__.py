@@ -11,8 +11,8 @@ from .hw import (HardwareModel, MatUnit, Memory, VecUnit, get_hw, tpu_v5e_chip,
 from .mapping import Mapping, SpatialBind, TemporalLoop, enumerate_mappings
 from .perfmodel import PlanCost, body_compute_seconds, estimate, pipelined_loop_time
 from .plan import DataflowPlan, make_plan
-from .planner import (Candidate, PlanResult, SearchBudget, plan_kernel,
-                      plan_kernel_multi)
+from .planner import (Candidate, PlanResult, SearchBudget, effective_budget,
+                      fast_search_enabled, plan_kernel, plan_kernel_multi)
 from .program import (LoopDim, TensorSpec, TileAccess, TileOp, TileProgram,
                       block_shape_candidates, flash_attention_program,
                       fused_matmul_program, matmul_program)
@@ -28,7 +28,8 @@ __all__ = [
     "Mapping", "SpatialBind", "TemporalLoop", "enumerate_mappings",
     "PlanCost", "body_compute_seconds", "estimate", "pipelined_loop_time",
     "DataflowPlan", "make_plan",
-    "Candidate", "PlanResult", "SearchBudget", "plan_kernel", "plan_kernel_multi",
+    "Candidate", "PlanResult", "SearchBudget", "effective_budget",
+    "fast_search_enabled", "plan_kernel", "plan_kernel_multi",
     "LoopDim", "TensorSpec", "TileAccess", "TileOp", "TileProgram",
     "block_shape_candidates", "flash_attention_program", "fused_matmul_program",
     "matmul_program",

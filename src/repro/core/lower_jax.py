@@ -11,6 +11,11 @@ vendor backend (TT-Metalium).  On TPU the hand-off has two levels
 * **cross-chip** (``parallel/planner_bridge.py``): the planner runs on the
   pod-level df model to choose sharding layouts, whose "broadcasts" lower to
   XLA collectives.
+
+Block choices are memoized at three tiers: ``functools.lru_cache``
+(in-process), the plancache memory LRU, and the on-disk plan registry —
+so a fresh process (or a pre-warmed AOT cache, ``python -m repro.plancache
+warm``) resolves repeat shapes without invoking the planner at all.
 """
 from __future__ import annotations
 
@@ -19,8 +24,12 @@ from typing import Tuple
 
 import jax.numpy as jnp
 
+from repro import plancache
+from repro.plancache import warmstart
+
 from .hw import tpu_v5e_chip
-from .planner import SearchBudget, plan_kernel_multi
+from .planner import (SearchBudget, effective_budget, fast_search_enabled,
+                      plan_kernel_multi)
 from .program import flash_attention_program, matmul_program
 
 MXU_GRANULE = 128          # MXU systolic dimension: blocks must be multiples
@@ -37,7 +46,59 @@ def _pow2_options(limit: int, lo: int = MXU_GRANULE, hi: int = 1024):
     return out or [lo]
 
 
-@functools.lru_cache(maxsize=512)
+@functools.lru_cache(maxsize=1)
+def _chip():
+    """The single-chip df model and its content digest.  ``tpu_v5e_chip``
+    already places VMEM as the planner's local memory and the chip's HBM as
+    its global memory, so block sizing is VMEM-capacity-pruned by
+    construction — no model rewriting needed here."""
+    hw = tpu_v5e_chip()
+    return hw, plancache.hw_digest(hw)
+
+
+def _cached_blocks(template: str, params: dict, shape: Tuple[int, ...],
+                   progs, fallback: Tuple[int, ...], pick) -> Tuple[int, ...]:
+    """Shared request-level cache path for the block-shape tables.
+
+    On a key hit the stored block tuple is returned without touching the
+    planner.  On a miss the search is warm-started from the nearest cached
+    shape of the same template, then the winning blocks (plus the full
+    serialized :class:`PlanResult`) are persisted.
+    """
+    hw, hw_dig = _chip()
+    budget = effective_budget(_CHIP_BUDGET)
+    store = plancache.get_store()
+    key = plancache.request_key(template, params, hw, budget)
+    ent = store.get(key)
+    if ent is not None:
+        try:
+            return tuple(int(b) for b in ent["payload"]["blocks"])
+        except (KeyError, TypeError, ValueError):
+            pass                     # malformed entry: fall through and re-plan
+    if not progs:
+        return fallback
+    # warm-start ordering; plan_kernel_multi itself applies the
+    # budget.max_programs trim to the reordered list
+    progs = warmstart.warm_order_from_store(store, template, hw_dig, shape,
+                                            progs)
+    try:
+        res = plan_kernel_multi(progs, hw, budget=budget, profile=False)
+    except RuntimeError:
+        return fallback
+    blocks = pick(res)
+    best_prog = res.best.plan.program
+    # only the block tuple + the warm-start tile hint are persisted: the
+    # hit path reads payload["blocks"] and nothing re-reads the full
+    # PlanResult at this request-level tier (kernel-level PlanCache entries
+    # carry the serialized result; these stay small so meta scans stay fast)
+    store.put(key, {"blocks": list(blocks)},
+              meta={"template": template, "shape": list(shape),
+                    "hw": hw_dig, "hw_name": hw.name,
+                    "blocks": list(blocks),
+                    "tiles": warmstart.tile_signature(best_prog)})
+    return blocks
+
+
 def plan_gemm_blocks(M: int, N: int, K: int, dtype=jnp.bfloat16
                      ) -> Tuple[int, int, int]:
     """Choose (bm, bn, bk) for the GEMM kernel on one TPU chip.
@@ -47,6 +108,15 @@ def plan_gemm_blocks(M: int, N: int, K: int, dtype=jnp.bfloat16
     (VMEM capacity pruning included).  Falls back to (128,128,128) when the
     problem is smaller than one MXU tile.
     """
+    # the in-process memo must key on the fast-search env too (the disk key
+    # covers it via the effective budget; an env flip mid-process would
+    # otherwise serve blocks computed under the other budget)
+    return _gemm_blocks_memo(M, N, K, dtype, fast_search_enabled())
+
+
+@functools.lru_cache(maxsize=512)
+def _gemm_blocks_memo(M: int, N: int, K: int, dtype, _fast: bool
+                      ) -> Tuple[int, int, int]:
     dbytes = jnp.dtype(dtype).itemsize
     progs = []
     for bm in _pow2_options(M, hi=512):
@@ -55,25 +125,27 @@ def plan_gemm_blocks(M: int, N: int, K: int, dtype=jnp.bfloat16
                 progs.append(matmul_program(max(M, bm), max(N, bn), max(K, bk),
                                             bm=bm, bn=bn, bk=bk,
                                             dtype_bytes=dbytes))
-    if not progs:
-        return (MXU_GRANULE,) * 3
-    hw = tpu_v5e_chip()
-    # size blocks against VMEM (scratch) rather than HBM: swap local memory
-    hw = _with_vmem_as_local(hw)
-    try:
-        res = plan_kernel_multi(progs, hw, budget=_CHIP_BUDGET, profile=False)
-    except RuntimeError:
-        return (MXU_GRANULE,) * 3
-    loads = {c.access.tensor.name: c for c in res.best.plan.loads}
-    bm, bk = loads["A"].access.tile_shape
-    _, bn = loads["B"].access.tile_shape
-    return (bm, bn, bk)
+
+    def pick(res) -> Tuple[int, int, int]:
+        loads = {c.access.tensor.name: c for c in res.best.plan.loads}
+        bm, bk = loads["A"].access.tile_shape
+        _, bn = loads["B"].access.tile_shape
+        return (bm, bn, bk)
+
+    return _cached_blocks("gemm_blocks",
+                          {"M": M, "N": N, "K": K, "dbytes": dbytes},
+                          (M, N, K), progs, (MXU_GRANULE,) * 3, pick)
 
 
-@functools.lru_cache(maxsize=512)
 def plan_flash_blocks(Sq: int, Skv: int, d: int, dtype=jnp.bfloat16
                       ) -> Tuple[int, int]:
     """Choose (block_q, block_kv) for the FlashAttention kernel."""
+    return _flash_blocks_memo(Sq, Skv, d, dtype, fast_search_enabled())
+
+
+@functools.lru_cache(maxsize=512)
+def _flash_blocks_memo(Sq: int, Skv: int, d: int, dtype, _fast: bool
+                       ) -> Tuple[int, int]:
     dbytes = jnp.dtype(dtype).itemsize
     progs = []
     for bq in _pow2_options(Sq, lo=128, hi=512):
@@ -81,18 +153,20 @@ def plan_flash_blocks(Sq: int, Skv: int, d: int, dtype=jnp.bfloat16
             progs.append(flash_attention_program(
                 8, max(Sq, bq), max(Skv, bkv), d, bq=bq, bkv=bkv,
                 dtype_bytes=dbytes))
-    hw = _with_vmem_as_local(tpu_v5e_chip())
-    try:
-        res = plan_kernel_multi(progs, hw, budget=_CHIP_BUDGET, profile=False)
-    except RuntimeError:
-        return (128, 128)
-    loads = {c.access.tensor.name: c for c in res.best.plan.loads}
-    bq = loads["Q"].access.tile_shape[1]
-    bkv = loads["K"].access.tile_shape[1]
-    return (bq, bkv)
+
+    def pick(res) -> Tuple[int, int]:
+        loads = {c.access.tensor.name: c for c in res.best.plan.loads}
+        bq = loads["Q"].access.tile_shape[1]
+        bkv = loads["K"].access.tile_shape[1]
+        return (bq, bkv)
+
+    return _cached_blocks("flash_blocks",
+                          {"Sq": Sq, "Skv": Skv, "d": d, "dbytes": dbytes},
+                          (Sq, Skv, d), progs, (128, 128), pick)
 
 
-def _with_vmem_as_local(hw):
-    """The chip model's planning 'local memory' is VMEM; its 'global' memory
-    is the chip's HBM (already set up by tpu_v5e_chip)."""
-    return hw
+def clear_block_caches() -> None:
+    """Drop the in-process memo tiers (tests use this to emulate a fresh
+    process against a warm disk cache)."""
+    _gemm_blocks_memo.cache_clear()
+    _flash_blocks_memo.cache_clear()

@@ -17,9 +17,10 @@ lowering layer.
 from __future__ import annotations
 
 import math
+import os
 import time
-from dataclasses import dataclass, field
-from typing import Callable, List, Optional, Sequence, Tuple
+from dataclasses import dataclass, field, replace
+from typing import Any, Callable, List, Optional, Sequence, Tuple
 
 from .hw import HardwareModel
 from .mapping import Mapping, enumerate_mappings
@@ -80,6 +81,38 @@ class SearchBudget:
     max_per_load: int = 12
     min_utilization: float = 0.0        # prune mappings below this (0 = keep all)
     pipeline_outer_levels: bool = False  # beyond-paper overlap (EXPERIMENTS SPerf)
+    max_programs: int = 0               # cap block-shape candidates (0 = all);
+                                        # honored by plan_kernel_multi after
+                                        # warm-start ordering
+
+
+FAST_SEARCH_ENV = "REPRO_FAST_SEARCH"
+
+# invocation counters (tests and the plancache acceptance criteria assert a
+# cache hit performs zero planner invocations)
+PLAN_CALLS = {"plan_kernel": 0, "plan_kernel_multi": 0}
+
+
+def fast_search_enabled() -> bool:
+    return os.environ.get(FAST_SEARCH_ENV, "").lower() in ("1", "true", "on",
+                                                           "yes")
+
+
+def effective_budget(budget: Optional[SearchBudget] = None) -> SearchBudget:
+    """Resolve the budget actually searched: the caller's budget, shrunk when
+    ``REPRO_FAST_SEARCH=1`` (CI / test-latency knob).  Cache keys are computed
+    from the *effective* budget so fast and full searches never collide."""
+    b = budget or SearchBudget()
+    if not fast_search_enabled():
+        return b
+    return replace(
+        b,
+        top_k=min(b.top_k, 2),
+        max_mappings=min(b.max_mappings, 24),
+        max_plans_per_mapping=min(b.max_plans_per_mapping, 12),
+        max_candidates=min(b.max_candidates, 2000),
+        max_per_load=min(b.max_per_load, 6),
+        max_programs=min(b.max_programs, 16) if b.max_programs else 16)
 
 
 def enumerate_plans(program: TileProgram, hw: HardwareModel,
@@ -104,15 +137,27 @@ def plan_kernel(program: TileProgram, hw: HardwareModel, *,
                 budget: Optional[SearchBudget] = None,
                 profile: bool = True,
                 spatial_reuse: bool = True,
-                temporal_reuse: bool = True) -> PlanResult:
+                temporal_reuse: bool = True,
+                cache: Optional[Any] = None) -> PlanResult:
     """Run the full TileLoom pipeline for one program on one target.
 
     ``spatial_reuse`` / ``temporal_reuse`` disable the respective passes for
     the paper's ablations (Table 1 / Fig 8): with spatial reuse off every load
     is a per-core global load; with temporal reuse off every load stays at the
     innermost level.
+
+    ``cache`` is a :class:`repro.plancache.PlanCache` (duck-typed); a hit
+    returns the persisted result without searching, a miss stores the fresh
+    result after planning.
     """
-    budget = budget or SearchBudget()
+    budget = effective_budget(budget)
+    if cache is not None:
+        hit = cache.get_result([program], hw, budget, profile=profile,
+                               spatial_reuse=spatial_reuse,
+                               temporal_reuse=temporal_reuse, entry="kernel")
+        if hit is not None:
+            return hit
+    PLAN_CALLS["plan_kernel"] += 1
     t0 = time.perf_counter()
     plans, n_mappings = enumerate_plans(program, hw, budget)
     plans = _apply_ablations(plans, spatial_reuse, temporal_reuse)
@@ -130,21 +175,45 @@ def plan_kernel(program: TileProgram, hw: HardwareModel, *,
         topk.sort(key=lambda c: c.final_s)
     best = topk[0]
     dt = time.perf_counter() - t0
-    return PlanResult(kernel=program.name, hw_name=hw.name, best=best,
-                      topk=topk, n_candidates=len(cands),
-                      n_mappings=n_mappings, plan_seconds=dt)
+    result = PlanResult(kernel=program.name, hw_name=hw.name, best=best,
+                        topk=topk, n_candidates=len(cands),
+                        n_mappings=n_mappings, plan_seconds=dt)
+    if cache is not None:
+        cache.put_result([program], hw, budget, result, profile=profile,
+                         spatial_reuse=spatial_reuse,
+                         temporal_reuse=temporal_reuse, entry="kernel")
+    return result
 
 
 def plan_kernel_multi(programs: Sequence[TileProgram], hw: HardwareModel, *,
                       budget: Optional[SearchBudget] = None,
                       profile: bool = True,
                       spatial_reuse: bool = True,
-                      temporal_reuse: bool = True) -> PlanResult:
+                      temporal_reuse: bool = True,
+                      cache: Optional[Any] = None) -> PlanResult:
     """Front-end block-shape exploration (S2.1): plan every candidate program
     (one per block shape) and keep the global best.  Ranking pools candidates
     across programs before the top-k profiling cut, exactly as the paper's
-    front-end + planner interact."""
-    budget = budget or SearchBudget()
+    front-end + planner interact.
+
+    With a ``cache``, a hit skips the search entirely; a miss warm-starts it
+    by reordering the candidate programs around the nearest cached plan of
+    the same kernel template (then ``budget.max_programs``, if set, trims
+    the tail of the reordered list).
+    """
+    budget = effective_budget(budget)
+    programs = list(programs)
+    requested = programs                 # the cache key covers the full
+    if cache is not None:                # requested candidate set, pre-trim
+        hit = cache.get_result(requested, hw, budget, profile=profile,
+                               spatial_reuse=spatial_reuse,
+                               temporal_reuse=temporal_reuse)
+        if hit is not None:
+            return hit
+        programs = cache.order_programs(programs, hw)
+    if budget.max_programs and len(programs) > budget.max_programs:
+        programs = programs[:budget.max_programs]
+    PLAN_CALLS["plan_kernel_multi"] += 1
     t0 = time.perf_counter()
     all_c: List[Candidate] = []
     n_mappings = 0
@@ -167,10 +236,15 @@ def plan_kernel_multi(programs: Sequence[TileProgram], hw: HardwareModel, *,
             c.sim = simulate(c.plan, hw)
         topk.sort(key=lambda c: c.final_s)
     dt = time.perf_counter() - t0
-    return PlanResult(kernel=programs[0].name.split("_b")[0] if programs else "?",
-                      hw_name=hw.name, best=topk[0], topk=topk,
-                      n_candidates=len(all_c), n_mappings=n_mappings,
-                      plan_seconds=dt)
+    result = PlanResult(kernel=programs[0].name.split("_b")[0] if programs else "?",
+                        hw_name=hw.name, best=topk[0], topk=topk,
+                        n_candidates=len(all_c), n_mappings=n_mappings,
+                        plan_seconds=dt)
+    if cache is not None:
+        cache.put_result(requested, hw, budget, result, profile=profile,
+                         spatial_reuse=spatial_reuse,
+                         temporal_reuse=temporal_reuse)
+    return result
 
 
 def _apply_ablations(plans: List[DataflowPlan], spatial: bool,

@@ -173,8 +173,11 @@ def computation_multipliers(hlo_text: str,
 
 _DEF_RE = re.compile(r"%([\w.\-]+)\s*=\s*(\w+\[[\d,]*\])")
 _PARAM_RE = re.compile(r"([\w.\-]+)\s*:\s*(\w+\[[\d,]*\])")
+# the lhs operand may carry an inline type annotation depending on the HLO
+# printer version: ``dot(%lhs, ...)`` or ``dot(f32[16,32]{1,0} %lhs, ...)``
 _DOT_RE = re.compile(
-    r"%[\w.\-]+\s*=\s*(\w+\[[\d,]*\])[^\n]*?\bdot\(\s*%?([\w.\-]+)"
+    r"%[\w.\-]+\s*=\s*(\w+\[[\d,]*\])[^\n]*?\bdot\(\s*"
+    r"(?:\w+\[[\d,]*\](?:\{[^}]*\})?\s+)?%?([\w.\-]+)"
     r"[^\n]*?lhs_contracting_dims=\{([\d,]+)\}")
 
 

@@ -12,6 +12,7 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro import plancache
 from repro.configs import get_config
 from repro.configs.base import ShapeConfig, TrainConfig
 from repro.data import DataConfig, make_source
@@ -34,9 +35,12 @@ def main(argv=None) -> None:
     api = build_model(cfg)
     shape = ShapeConfig("serve", seq_len=args.prompt_len + args.tokens,
                         global_batch=args.batch, kind="decode")
-    ranking = plan_mesh(api, shape, TrainConfig())
-    print(f"[serve] {cfg.name}: decode plan ranking: "
+    store = plancache.get_store()
+    with plancache.lookup_source(store) as probe:
+        ranking = plan_mesh(api, shape, TrainConfig())
+    print(f"[serve] {cfg.name}: decode plan ranking ({probe['source']}): "
           + ", ".join(r.plan.name for r in ranking[:3]))
+    store.flush_stats()
 
     params = api.init(jax.random.PRNGKey(0))
     source = make_source(DataConfig(vocab_size=cfg.vocab_size), cfg)

@@ -16,6 +16,7 @@ from pathlib import Path
 import jax
 import jax.numpy as jnp
 
+from repro import plancache
 from repro.configs import get_config
 from repro.configs.base import ShapeConfig, TrainConfig
 from repro.ckpt import CheckpointManager
@@ -55,10 +56,15 @@ def main(argv=None) -> None:
     shape = ShapeConfig("cli", seq_len=args.seq, global_batch=args.batch,
                         kind="train")
 
-    # TileLoom mesh planning (informational on a 1-device host)
-    ranking = plan_mesh(api, shape, tcfg)
-    print(f"[train] {cfg.name}: {api.n_params():,} params; planner ranking: "
+    # TileLoom mesh planning (informational on a 1-device host; resolves
+    # from the persistent plan registry when `repro.plancache warm` ran)
+    store = plancache.get_store()
+    with plancache.lookup_source(store) as probe:
+        ranking = plan_mesh(api, shape, tcfg)
+    print(f"[train] {cfg.name}: {api.n_params():,} params; planner ranking "
+          f"({probe['source']}): "
           + ", ".join(f"{r.plan.name}({r.cost.dominant})" for r in ranking[:3]))
+    store.flush_stats()
 
     step_fn = jax.jit(TS.make_train_step(api, tcfg))
     mgr = CheckpointManager(Path(args.ckpt_dir) / cfg.name,

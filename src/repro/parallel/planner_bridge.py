@@ -32,12 +32,14 @@ program mapping for the reports.
 """
 from __future__ import annotations
 
+import dataclasses
 import math
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 
+from repro import plancache
 from repro.configs.base import ModelConfig, ShapeConfig, TrainConfig
 from repro.core.hw import (HardwareModel, TPU_V5E_HBM_BYTES, TPU_V5E_HBM_GBPS,
                            TPU_V5E_ICI_GBPS, TPU_V5E_PEAK_BF16, tpu_v5e_pod)
@@ -285,11 +287,82 @@ def candidate_plans(cfg: ModelConfig, shape: ShapeConfig
     return cands
 
 
+# ------------------------------------------------------------ plan cache
+def _axes_to_jsonable(axes) -> Any:
+    return list(axes) if isinstance(axes, tuple) else axes
+
+
+def _axes_from_jsonable(axes) -> Any:
+    return tuple(axes) if isinstance(axes, list) else axes
+
+
+def _mesh_result_to_dict(r: MeshPlanResult) -> Dict[str, Any]:
+    return {
+        "plan": {"name": r.plan.name,
+                 "rules": [[k, _axes_to_jsonable(v)] for k, v in r.plan.rules],
+                 "description": r.plan.description},
+        "cost": dataclasses.asdict(r.cost),
+        "notes": r.notes,
+    }
+
+
+def _mesh_result_from_dict(d: Dict[str, Any]) -> MeshPlanResult:
+    plan = ShardingPlan(
+        name=d["plan"]["name"],
+        rules=tuple((k, _axes_from_jsonable(v)) for k, v in d["plan"]["rules"]),
+        description=d["plan"].get("description", ""))
+    return MeshPlanResult(plan, MeshPlanCost(**d["cost"]),
+                          d.get("notes", ""))
+
+
+# bump whenever estimate_plan's cost logic or candidate_plans' plan set
+# changes: persisted rankings are invalid under a different cost model
+MESH_PLANNER_VERSION = 1
+
+
+def _mesh_key(cfg: ModelConfig, shape: ShapeConfig, tcfg: TrainConfig,
+              multi_pod: bool, top_k: int) -> str:
+    hw = tpu_v5e_pod(pods=2 if multi_pod else 1)
+    # only the fields estimate_plan actually reads go into the key: the
+    # free-text shape name and schedule-only TrainConfig fields (lr, steps,
+    # seed...) must not cause spurious misses — otherwise the AOT-warmed
+    # registry cells (named "train_4k" etc.) could never be hit by the
+    # launchers' ad-hoc ShapeConfig("serve"/"cli", ...) instances
+    return plancache.request_key(
+        "mesh_plan",
+        {"cfg": dataclasses.asdict(cfg),
+         "shape": {"seq_len": shape.seq_len,
+                   "global_batch": shape.global_batch, "kind": shape.kind},
+         "tcfg": {"optimizer": tcfg.optimizer,
+                  "opt_state_dtype": tcfg.opt_state_dtype,
+                  "microbatches": tcfg.microbatches,
+                  "grad_compression": tcfg.grad_compression},
+         "multi_pod": multi_pod, "top_k": top_k},
+        hw, extra={"mesh_planner_version": MESH_PLANNER_VERSION})
+
+
 def plan_mesh(api: ModelAPI, shape: ShapeConfig, tcfg: TrainConfig, *,
-              multi_pod: bool = False, top_k: int = 3
-              ) -> List[MeshPlanResult]:
+              multi_pod: bool = False, top_k: int = 3,
+              cache: bool = True) -> List[MeshPlanResult]:
     """Rank candidate plans (paper step 1).  The dry-run compiles the top-k
-    (paper step 2) and EXPERIMENTS.md records both."""
+    (paper step 2) and EXPERIMENTS.md records both.
+
+    Rankings are persisted in the plan registry keyed on (model config,
+    shape cell, train config, pod df model) — ``launch/serve.py`` and
+    ``launch/train.py`` therefore start with a hot cache after
+    ``python -m repro.plancache warm``.  ``cache=False`` forces a fresh
+    ranking."""
+    store = plancache.get_store() if cache else None
+    key = None
+    if store is not None:
+        key = _mesh_key(api.cfg, shape, tcfg, multi_pod, top_k)
+        ent = store.get(key)
+        if ent is not None:
+            try:
+                return [_mesh_result_from_dict(d)
+                        for d in ent["payload"]["results"]]
+            except (KeyError, TypeError, ValueError):
+                pass
     out = []
     for plan in candidate_plans(api.cfg, shape):
         cost = estimate_plan(api, shape, plan, tcfg, multi_pod=multi_pod)
@@ -300,7 +373,16 @@ def plan_mesh(api: ModelAPI, shape: ShapeConfig, tcfg: TrainConfig, *,
     for r in infeasible:
         r.notes = (f"pruned: {r.cost.hbm_bytes_per_chip / 1e9:.1f} GB/chip "
                    f"exceeds HBM (paper capacity rule)")
-    return feasible[:top_k] + infeasible
+    ranked = feasible[:top_k] + infeasible
+    if store is not None and key is not None:
+        store.put(key,
+                  {"results": [_mesh_result_to_dict(r) for r in ranked]},
+                  meta={"template": "mesh_plan",
+                        "shape": [shape.seq_len, shape.global_batch],
+                        "hw_name": "tpu_v5e_pod",
+                        "arch": api.cfg.name, "kind": shape.kind,
+                        "best": ranked[0].plan.name if ranked else None})
+    return ranked
 
 
 def tileloom_view(plan: ShardingPlan, cfg: ModelConfig) -> str:

@@ -1,0 +1,29 @@
+# Persistent plan registry: content-addressed dataflow-plan cache.
+#
+# Layers:  serialize.py (JSON round-trip for planner artifacts)
+#       -> keying.py    (content digests: program + df_text + schema)
+#       -> store.py     (two-tier LRU/disk store, stats, prune)
+#       -> cache.py     (PlanResult-level cache, the planner's ``cache=``)
+#       -> warmstart.py (nearest-neighbor search seeding)
+#       -> __main__.py  (AOT tuning CLI: warm / ls / stats / prune)
+from .cache import PlanCache
+from .keying import (SCHEMA_VERSION, budget_signature, hw_digest, kernel_key,
+                     request_key, shape_vector, template_signature)
+from .serialize import (plan_from_dict, plan_to_dict, program_from_dict,
+                        program_to_dict, result_from_dict, result_to_dict)
+from .store import (CacheStats, ENV_DIR, ENV_TOGGLE, PlanCacheStore,
+                    cache_enabled, default_cache_dir, get_store, lookup_source,
+                    reset_store)
+from .warmstart import order_programs, tile_signature, warm_order_from_store
+
+__all__ = [
+    "PlanCache", "PlanCacheStore", "CacheStats",
+    "SCHEMA_VERSION", "ENV_DIR", "ENV_TOGGLE",
+    "budget_signature", "hw_digest", "kernel_key", "request_key",
+    "shape_vector", "template_signature",
+    "plan_from_dict", "plan_to_dict", "program_from_dict", "program_to_dict",
+    "result_from_dict", "result_to_dict",
+    "cache_enabled", "default_cache_dir", "get_store", "lookup_source",
+    "reset_store",
+    "order_programs", "tile_signature", "warm_order_from_store",
+]

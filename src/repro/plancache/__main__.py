@@ -1,0 +1,319 @@
+"""AOT tuning CLI for the persistent plan registry.
+
+``python -m repro.plancache warm``    pre-tunes the GEMM / flash block-shape
+                                      tables (chip df model) and the mesh
+                                      sharding rankings for every registry
+                                      (arch x shape) cell, so ``launch/serve``
+                                      and ``launch/train`` start with a hot
+                                      cache.  ``--wormhole`` additionally
+                                      warms the paper's Wormhole benchmark
+                                      tables (``benchmarks/gemm_table`` /
+                                      ``topk_table`` shapes).
+``python -m repro.plancache ls``      lists entries (template, shape, hw).
+``python -m repro.plancache stats``   entry count + cumulative hit/miss
+                                      counters across processes.
+``python -m repro.plancache prune``   age/count-based disk eviction.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+from typing import List, Sequence, Tuple
+
+from .store import get_store
+
+# chip-level GEMM shapes always worth pre-tuning (mirrors the benchmark
+# suite's shape tables; benchmarks/*.py import-level tables are merged in
+# when the benchmarks package is importable)
+BASE_GEMM_SHAPES: Tuple[Tuple[int, int, int], ...] = (
+    (1024, 1024, 4096), (4096, 4096, 4096),
+    (16384, 1024, 4096), (4096, 16384, 4096),
+)
+BASE_FLASH_SHAPES: Tuple[Tuple[int, int, int], ...] = (
+    (4096, 4096, 64), (4096, 4096, 128), (8192, 8192, 128),
+)
+
+
+def _parse_shape(text: str, n: int) -> Tuple[int, ...]:
+    parts = tuple(int(p) for p in text.lower().split("x"))
+    if len(parts) != n:
+        raise argparse.ArgumentTypeError(
+            f"expected {n}'x'-separated ints, got {text!r}")
+    return parts
+
+
+def _registry_gemm_shapes(archs: Sequence[str], tokens: int = 4096
+                          ) -> List[Tuple[int, int, int]]:
+    from repro.configs import ARCHS
+    shapes = set()
+    for name in archs:
+        cfg = ARCHS[name]
+        d, f = cfg.d_model, cfg.d_ff
+        shapes.add((tokens, f, d))              # up-projection
+        shapes.add((tokens, d, f))              # down-projection
+        shapes.add((tokens, cfg.padded_vocab, d))   # LM head
+    return sorted(shapes)
+
+
+def _registry_flash_shapes(archs: Sequence[str]
+                           ) -> List[Tuple[int, int, int]]:
+    from repro.configs import ARCHS
+    from repro.configs.shapes import SHAPES
+    shapes = set()
+    seqs = sorted({s.seq_len for s in SHAPES.values() if s.seq_len <= 32768})
+    for name in archs:
+        hd = ARCHS[name].head_dim_
+        for seq in seqs:
+            shapes.add((seq, seq, hd))
+    return sorted(shapes)
+
+
+def _benchmark_gemm_shapes(full: bool) -> List[Tuple[int, int, int]]:
+    try:
+        from benchmarks import gemm_table, topk_table
+        return sorted(set(gemm_table.shape_table(full))
+                      | set(topk_table.SHAPES))
+    except ImportError:
+        return list(BASE_GEMM_SHAPES)
+
+
+def _benchmark_flash_shapes() -> List[Tuple[int, int, int]]:
+    """(Sq, Skv, d) cells derived from the Fig-7 benchmark sweep, when the
+    benchmarks package is importable (repo checkout)."""
+    try:
+        from benchmarks import flash_table
+        return sorted({(seq, seq, d)
+                       for _bh, seq, d in flash_table.shape_table()})
+    except ImportError:
+        return []
+
+
+def _wormhole_flash_shapes() -> List[Tuple[int, int, int]]:
+    """(batch*heads, seq, head_dim) cells of the Fig-7 sweep itself."""
+    try:
+        from benchmarks import flash_table
+        return list(flash_table.shape_table())
+    except ImportError:
+        return []
+
+
+# ----------------------------------------------------------------- warm
+def cmd_warm(args: argparse.Namespace) -> int:
+    if args.fast:
+        os.environ["REPRO_FAST_SEARCH"] = "1"
+    from repro.core.planner import fast_search_enabled
+    if fast_search_enabled():
+        # keys include the effective (shrunk) budget, so these entries only
+        # serve consumers that also run with REPRO_FAST_SEARCH set
+        print("[warm] note: REPRO_FAST_SEARCH is on — entries are keyed for "
+              "fast-search consumers; production lookups without the env "
+              "var will not hit them")
+    store = get_store()
+    if not store.enabled:
+        print("plan cache disabled (REPRO_PLAN_CACHE=off); nothing to warm")
+        return 1
+    archs = (args.archs.split(",") if args.archs else None)
+    t0 = time.perf_counter()
+    n_jobs = 0
+
+    if not args.skip_gemm:
+        from repro.configs import ARCHS
+        from repro.core.lower_jax import plan_gemm_blocks
+        names = archs or sorted(ARCHS)
+        shapes = set(args.gemm or [])
+        if not args.gemm:
+            shapes.update(BASE_GEMM_SHAPES)
+            shapes.update(_registry_gemm_shapes(names))
+        for (M, N, K) in sorted(shapes):
+            blocks = plan_gemm_blocks(M, N, K)
+            n_jobs += 1
+            print(f"[warm] gemm {M}x{N}x{K} -> blocks {blocks}")
+
+    if not args.skip_flash:
+        from repro.configs import ARCHS
+        from repro.core.lower_jax import plan_flash_blocks
+        names = archs or sorted(ARCHS)
+        shapes = set(args.flash or [])
+        if not args.flash:
+            shapes.update(BASE_FLASH_SHAPES)
+            shapes.update(_registry_flash_shapes(names))
+            shapes.update(_benchmark_flash_shapes())
+        for (Sq, Skv, d) in sorted(shapes):
+            blocks = plan_flash_blocks(Sq, Skv, d)
+            n_jobs += 1
+            print(f"[warm] flash q{Sq} kv{Skv} d{d} -> blocks {blocks}")
+
+    if not args.skip_mesh:
+        from repro.configs import ARCHS
+        from repro.configs.base import TrainConfig
+        from repro.configs.registry import cells
+        from repro.models import build_model
+        from repro.parallel.planner_bridge import plan_mesh
+        tcfg = TrainConfig()
+        for cfg, shape, _ in cells():
+            if archs and cfg.name not in archs:
+                continue
+            ranked = plan_mesh(build_model(cfg), shape, tcfg)
+            n_jobs += 1
+            best = ranked[0].plan.name if ranked else "-"
+            print(f"[warm] mesh {cfg.name}/{shape.name} -> {best}")
+
+    if args.wormhole:
+        from repro.core import (SearchBudget, flash_attention_program,
+                                get_hw, plan_kernel_multi)
+        from .cache import PlanCache
+        try:
+            from benchmarks.common import DEFAULT_BUDGET, HW_CONFIGS, tl_gemm
+            budget = DEFAULT_BUDGET
+        except ImportError:
+            from repro.core import block_shape_candidates, matmul_program
+            HW_CONFIGS = ("wormhole_1x8", "wormhole_4x8", "wormhole_8x8")
+            budget = SearchBudget(top_k=5, max_plans_per_mapping=48,
+                                  max_candidates=8000)
+
+            def tl_gemm(M, N, K, hw, budget=budget, **kw):
+                progs = [matmul_program(M, N, K, bm=bm, bn=bn, bk=bk)
+                         for bm, bn, bk in block_shape_candidates(M, N, K)]
+                return plan_kernel_multi(progs, hw, budget=budget, **kw)
+
+        pc = PlanCache(store)
+        # budgets and profile (default True) must match the benchmark
+        # sweeps' own invocations exactly, or the warmed entries are dead
+        hw_names = HW_CONFIGS if args.hw == "all" else (args.hw,)
+        for hw_name in hw_names:
+            hw = get_hw(hw_name)
+            for (M, N, K) in _benchmark_gemm_shapes(args.full):
+                res = tl_gemm(M, N, K, hw, budget=budget, cache=pc)
+                n_jobs += 1
+                print(f"[warm] {hw_name} gemm {M}x{N}x{K} -> "
+                      f"{res.best.plan.describe()}")
+        # flash_fig7 cells (wormhole_8x8 only, as the benchmark runs them)
+        flash_budget = SearchBudget(top_k=5, max_plans_per_mapping=48)
+        hw = get_hw("wormhole_8x8")
+        for bh, seq, d in _wormhole_flash_shapes():
+            progs = [flash_attention_program(bh, seq, seq, d, bq=bq, bkv=bkv)
+                     for bq in (32, 64, 128) for bkv in (32, 64, 128)]
+            res = plan_kernel_multi(progs, hw, budget=flash_budget, cache=pc)
+            n_jobs += 1
+            print(f"[warm] wormhole flash h*b{bh} s{seq} d{d} -> "
+                  f"{res.best.plan.describe()}")
+
+    cum = store.flush_stats()
+    dt = time.perf_counter() - t0
+    s = store.stats
+    print(f"[warm] {n_jobs} shapes in {dt:.1f}s: {s.hits} hits "
+          f"({s.hits_mem} mem / {s.hits_disk} disk), {s.misses} misses, "
+          f"{s.puts} new entries; store now {store.n_entries()} entries, "
+          f"cumulative hit rate "
+          f"{_rate(cum):.0%}")
+    return 0
+
+
+def _rate(cum: dict) -> float:
+    hits = cum.get("hits_mem", 0) + cum.get("hits_disk", 0)
+    total = hits + cum.get("misses", 0)
+    return hits / total if total else 0.0
+
+
+# ------------------------------------------------------------------- ls
+def cmd_ls(args: argparse.Namespace) -> int:
+    store = get_store()
+    now = time.time()
+    n = 0
+    for ent in store.entries():
+        meta = ent.get("meta", {})
+        if args.template and meta.get("template") != args.template:
+            continue
+        n += 1
+        age = now - float(ent.get("created", now))
+        shape = "x".join(str(s) for s in meta.get("shape", [])) or "-"
+        print(f"{ent['key'][:12]}  {meta.get('template', '?'):<12} "
+              f"shape={shape:<20} hw={meta.get('hw_name', '?'):<16} "
+              f"age={age / 3600:.1f}h")
+    print(f"{n} entries in {store.root}")
+    return 0
+
+
+# ---------------------------------------------------------------- stats
+def cmd_stats(args: argparse.Namespace) -> int:
+    store = get_store()
+    n = store.n_entries()
+    cum = store.cumulative_stats()
+    by_template: dict = {}
+    for ent in store.entries():
+        t = ent.get("meta", {}).get("template", "?")
+        by_template[t] = by_template.get(t, 0) + 1
+    print(f"store: {store.root}  (enabled={store.enabled})")
+    print(f"entries: {n}")
+    for t, c in sorted(by_template.items()):
+        print(f"  {t}: {c}")
+    hits = cum.get("hits_mem", 0) + cum.get("hits_disk", 0)
+    print(f"cumulative: {hits} hits ({cum.get('hits_mem', 0)} mem / "
+          f"{cum.get('hits_disk', 0)} disk), {cum.get('misses', 0)} misses, "
+          f"{cum.get('puts', 0)} puts, {cum.get('warm_starts', 0)} "
+          f"warm-starts, {cum.get('bypassed', 0)} bypassed")
+    print(f"hit rate: {_rate(cum):.1%}")
+    return 0
+
+
+# ---------------------------------------------------------------- prune
+def cmd_prune(args: argparse.Namespace) -> int:
+    store = get_store()
+    max_age = args.max_age_days * 86400.0 if args.max_age_days else None
+    removed = store.prune(max_entries=args.max_entries, max_age_s=max_age)
+    print(f"pruned {removed} entries; {store.n_entries()} remain "
+          f"in {store.root}")
+    return 0
+
+
+def main(argv: Sequence[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.plancache",
+        description="Persistent dataflow-plan registry: AOT tuning + "
+                    "maintenance")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    w = sub.add_parser("warm", help="pre-tune shape tables into the cache")
+    w.add_argument("--gemm", action="append",
+                   type=lambda t: _parse_shape(t, 3), metavar="MxNxK",
+                   help="explicit GEMM shape (repeatable; overrides tables)")
+    w.add_argument("--flash", action="append",
+                   type=lambda t: _parse_shape(t, 3), metavar="SqxSkvxD",
+                   help="explicit flash shape (repeatable; overrides tables)")
+    w.add_argument("--archs", default=None,
+                   help="comma-separated registry archs (default: all)")
+    w.add_argument("--skip-gemm", action="store_true")
+    w.add_argument("--skip-flash", action="store_true")
+    w.add_argument("--skip-mesh", action="store_true")
+    w.add_argument("--wormhole", action="store_true",
+                   help="also warm the Wormhole benchmark GEMM/flash tables")
+    w.add_argument("--hw", default="all",
+                   help="hardware preset for --wormhole GEMM warming "
+                        "(\"all\" = every benchmark mesh config)")
+    w.add_argument("--full", action="store_true",
+                   help="use the full benchmark shape tables")
+    w.add_argument("--fast", action="store_true",
+                   help="set REPRO_FAST_SEARCH=1 for this run")
+    w.set_defaults(fn=cmd_warm)
+
+    l = sub.add_parser("ls", help="list cache entries")
+    l.add_argument("--template", default=None,
+                   help="filter by entry template (gemm_blocks, mesh_plan...)")
+    l.set_defaults(fn=cmd_ls)
+
+    s = sub.add_parser("stats", help="entry counts + cumulative hit/miss")
+    s.set_defaults(fn=cmd_stats)
+
+    p = sub.add_parser("prune", help="evict old/stale entries")
+    p.add_argument("--max-entries", type=int, default=None)
+    p.add_argument("--max-age-days", type=float, default=None)
+    p.set_defaults(fn=cmd_prune)
+
+    args = ap.parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

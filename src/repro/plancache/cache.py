@@ -1,0 +1,75 @@
+"""High-level plan cache consumed by ``plan_kernel`` / ``plan_kernel_multi``.
+
+The planner takes ``cache=`` as a duck-typed object (so ``repro.core``
+never imports this package at module scope); :class:`PlanCache` is the
+canonical implementation.  It maps full kernel-planning invocations to
+serialized :class:`~repro.core.planner.PlanResult` payloads in the two-tier
+store, and supplies warm-start program ordering on misses.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Sequence
+
+from repro.core.hw import HardwareModel
+from repro.core.planner import PlanResult, SearchBudget
+from repro.core.program import TileProgram
+
+from . import keying, serialize, warmstart
+from .store import PlanCacheStore, get_store
+
+
+class PlanCache:
+    """Content-addressed cache of full planner results."""
+
+    def __init__(self, store: Optional[PlanCacheStore] = None) -> None:
+        self._store = store
+
+    @property
+    def store(self) -> PlanCacheStore:
+        return self._store if self._store is not None else get_store()
+
+    # ------------------------------------------------------------ planner API
+    def get_result(self, programs: Sequence[TileProgram], hw: HardwareModel,
+                   budget: Optional[SearchBudget], *, profile: bool,
+                   spatial_reuse: bool, temporal_reuse: bool,
+                   entry: str = "kernel_multi") -> Optional[PlanResult]:
+        key = keying.kernel_key(programs, hw, budget, profile=profile,
+                                spatial_reuse=spatial_reuse,
+                                temporal_reuse=temporal_reuse, entry=entry)
+        ent = self.store.get(key)
+        if ent is None:
+            return None
+        try:
+            return serialize.result_from_dict(ent["payload"]["result"])
+        except (KeyError, TypeError, ValueError):
+            return None
+
+    def put_result(self, programs: Sequence[TileProgram], hw: HardwareModel,
+                   budget: Optional[SearchBudget], result: PlanResult, *,
+                   profile: bool, spatial_reuse: bool, temporal_reuse: bool,
+                   entry: str = "kernel_multi") -> None:
+        key = keying.kernel_key(programs, hw, budget, profile=profile,
+                                spatial_reuse=spatial_reuse,
+                                temporal_reuse=temporal_reuse, entry=entry)
+        best_prog = result.best.plan.program
+        meta = {
+            "template": keying.template_signature(best_prog),
+            "shape": keying.shape_vector(best_prog),
+            "hw": keying.hw_digest(hw),
+            "hw_name": hw.name,
+            "kernel": result.kernel,
+            "tiles": warmstart.tile_signature(best_prog),
+        }
+        self.store.put(key, {"result": serialize.result_to_dict(result),
+                             "tiles": meta["tiles"]}, meta)
+
+    def order_programs(self, programs: Sequence[TileProgram],
+                       hw: HardwareModel) -> List[TileProgram]:
+        """Warm-start hook: on a miss, reorder candidates around the nearest
+        cached winner of the same template on the same hardware."""
+        programs = list(programs)
+        if not programs:
+            return programs
+        return warmstart.warm_order_from_store(
+            self.store, keying.template_signature(programs[0]),
+            keying.hw_digest(hw), keying.shape_vector(programs[0]), programs)

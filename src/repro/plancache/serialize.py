@@ -1,0 +1,229 @@
+"""Stable JSON round-trip for planner artifacts (no pickle).
+
+Every dataclass the planner produces — :class:`TileProgram`,
+:class:`Mapping`, :class:`MemOpChoice`, :class:`DataflowPlan`,
+:class:`PlanCost`, :class:`SimResult`, :class:`Candidate`,
+:class:`PlanResult` — gets a ``*_to_dict`` / ``*_from_dict`` pair whose
+output survives ``json.dumps``/``json.loads`` unchanged.  The planner's
+dataclasses are frozen and built from tuples of primitives, so round-trip
+equality is structural: ``result_from_dict(result_to_dict(r))`` compares
+equal field-by-field and ``estimate(plan, hw)`` reproduces identical costs.
+
+The only non-trivial leaf is :class:`AffineExpr` — the plan-side algebra is
+always the pure linear + ``mod``/``floordiv`` form (the composite channel
+map of ``hw._channel_expr`` lives in hardware models, which are re-created
+from presets, never serialized).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional
+
+from repro.core.affine import AffineExpr, AffineMap
+from repro.core.mapping import Mapping, SpatialBind, TemporalLoop
+from repro.core.perfmodel import PlanCost
+from repro.core.plan import DataflowPlan
+from repro.core.planner import Candidate, PlanResult
+from repro.core.program import (LoopDim, TensorSpec, TileAccess, TileOp,
+                                TileProgram)
+from repro.core.reuse import HoistOption, MemOpChoice, StorePlacement
+from repro.core.simulator import SimResult
+
+
+# --------------------------------------------------------------- affine
+def expr_to_dict(e: AffineExpr) -> Dict[str, Any]:
+    return {"coeffs": [[k, v] for k, v in e.coeffs], "const": e.const,
+            "mod": e.mod, "floordiv": e.floordiv}
+
+
+def expr_from_dict(d: Dict[str, Any]) -> AffineExpr:
+    return AffineExpr(coeffs=tuple((str(k), int(v)) for k, v in d["coeffs"]),
+                      const=int(d["const"]), mod=d.get("mod"),
+                      floordiv=d.get("floordiv"))
+
+
+def map_to_dict(m: AffineMap) -> Dict[str, Any]:
+    return {"exprs": [expr_to_dict(e) for e in m.exprs]}
+
+
+def map_from_dict(d: Dict[str, Any]) -> AffineMap:
+    return AffineMap(tuple(expr_from_dict(e) for e in d["exprs"]))
+
+
+# --------------------------------------------------------------- program
+def tensor_to_dict(t: TensorSpec) -> Dict[str, Any]:
+    return {"name": t.name, "shape": list(t.shape),
+            "dtype_bytes": t.dtype_bytes}
+
+
+def tensor_from_dict(d: Dict[str, Any]) -> TensorSpec:
+    return TensorSpec(d["name"], tuple(int(s) for s in d["shape"]),
+                      int(d["dtype_bytes"]))
+
+
+def access_to_dict(a: TileAccess) -> Dict[str, Any]:
+    return {"tensor": tensor_to_dict(a.tensor), "index": map_to_dict(a.index),
+            "tile_shape": list(a.tile_shape), "kind": a.kind, "name": a.name}
+
+
+def access_from_dict(d: Dict[str, Any]) -> TileAccess:
+    return TileAccess(tensor_from_dict(d["tensor"]),
+                      map_from_dict(d["index"]),
+                      tuple(int(s) for s in d["tile_shape"]),
+                      d["kind"], d.get("name", ""))
+
+
+def program_to_dict(p: TileProgram) -> Dict[str, Any]:
+    return {
+        "name": p.name,
+        "grid_dims": [[d.name, d.extent] for d in p.grid_dims],
+        "seq_dims": [[d.name, d.extent] for d in p.seq_dims],
+        "loads": [access_to_dict(a) for a in p.loads],
+        "stores": [access_to_dict(a) for a in p.stores],
+        "body": [{"kind": o.kind, "unit": o.unit, "work": o.work,
+                  "segment": o.segment} for o in p.body],
+        "accumulators": [[n, b] for n, b in p.accumulators],
+    }
+
+
+def program_from_dict(d: Dict[str, Any]) -> TileProgram:
+    return TileProgram(
+        name=d["name"],
+        grid_dims=tuple(LoopDim(n, int(e)) for n, e in d["grid_dims"]),
+        seq_dims=tuple(LoopDim(n, int(e)) for n, e in d["seq_dims"]),
+        loads=tuple(access_from_dict(a) for a in d["loads"]),
+        stores=tuple(access_from_dict(a) for a in d["stores"]),
+        body=tuple(TileOp(o["kind"], o["unit"], float(o["work"]),
+                          int(o.get("segment", 0))) for o in d["body"]),
+        accumulators=tuple((n, int(b)) for n, b in d["accumulators"]))
+
+
+# --------------------------------------------------------------- mapping
+def mapping_to_dict(m: Mapping) -> Dict[str, Any]:
+    return {
+        "program": program_to_dict(m.program),
+        "hw_name": m.hw_name,
+        "hw_dims": [[n, s] for n, s in m.hw_dims],
+        "spatial": [{"hw_dim": b.hw_dim, "hw_size": b.hw_size,
+                     "grid_dim": b.grid_dim} for b in m.spatial],
+        "temporal": [{"name": t.name, "grid_dim": t.grid_dim,
+                      "extent": t.extent} for t in m.temporal],
+    }
+
+
+def mapping_from_dict(d: Dict[str, Any]) -> Mapping:
+    return Mapping(
+        program=program_from_dict(d["program"]),
+        hw_name=d["hw_name"],
+        hw_dims=tuple((n, int(s)) for n, s in d["hw_dims"]),
+        spatial=tuple(SpatialBind(b["hw_dim"], int(b["hw_size"]),
+                                  b["grid_dim"]) for b in d["spatial"]),
+        temporal=tuple(TemporalLoop(t["name"], t["grid_dim"], int(t["extent"]))
+                       for t in d["temporal"]))
+
+
+# ------------------------------------------------------------ memory ops
+def memop_to_dict(c: MemOpChoice) -> Dict[str, Any]:
+    h = c.hoist
+    return {
+        "access": access_to_dict(c.access),
+        "bcast_axes": list(c.bcast_axes),
+        "hoist": {"level": h.level, "footprint_tiles": h.footprint_tiles,
+                  "issues_per_core": h.issues_per_core,
+                  "tiles_per_issue": h.tiles_per_issue},
+    }
+
+
+def memop_from_dict(d: Dict[str, Any]) -> MemOpChoice:
+    h = d["hoist"]
+    return MemOpChoice(
+        access_from_dict(d["access"]),
+        tuple(str(a) for a in d["bcast_axes"]),
+        HoistOption(int(h["level"]), int(h["footprint_tiles"]),
+                    int(h["issues_per_core"]), int(h["tiles_per_issue"])))
+
+
+def store_placement_to_dict(s: StorePlacement) -> Dict[str, Any]:
+    return {"access": access_to_dict(s.access), "level": s.level,
+            "issues_per_core": s.issues_per_core}
+
+
+def store_placement_from_dict(d: Dict[str, Any]) -> StorePlacement:
+    return StorePlacement(access_from_dict(d["access"]), int(d["level"]),
+                          int(d["issues_per_core"]))
+
+
+# --------------------------------------------------------------- plan
+def plan_to_dict(p: DataflowPlan) -> Dict[str, Any]:
+    return {
+        "mapping": mapping_to_dict(p.mapping),
+        "loads": [memop_to_dict(c) for c in p.loads],
+        "stores": [store_placement_to_dict(s) for s in p.stores],
+    }
+
+
+def plan_from_dict(d: Dict[str, Any]) -> DataflowPlan:
+    return DataflowPlan(
+        mapping_from_dict(d["mapping"]),
+        tuple(memop_from_dict(c) for c in d["loads"]),
+        tuple(store_placement_from_dict(s) for s in d["stores"]))
+
+
+# --------------------------------------------------------------- costs
+_COST_FIELDS = ("total_s", "compute_s", "inner_load_s", "inner_store_s",
+                "hoisted_s", "dram_bytes", "noc_bytes", "flops",
+                "buffer_bytes", "utilization", "bound")
+
+
+def cost_to_dict(c: PlanCost) -> Dict[str, Any]:
+    return {f: getattr(c, f) for f in _COST_FIELDS}
+
+
+def cost_from_dict(d: Dict[str, Any]) -> PlanCost:
+    return PlanCost(**{f: d[f] for f in _COST_FIELDS})
+
+
+_SIM_FIELDS = ("total_s", "dram_bytes", "noc_bytes", "flops", "n_waves",
+               "wave_overhead_s")
+
+
+def sim_to_dict(s: SimResult) -> Dict[str, Any]:
+    return {f: getattr(s, f) for f in _SIM_FIELDS}
+
+
+def sim_from_dict(d: Dict[str, Any]) -> SimResult:
+    return SimResult(**{f: d[f] for f in _SIM_FIELDS})
+
+
+# --------------------------------------------------------------- results
+def candidate_to_dict(c: Candidate) -> Dict[str, Any]:
+    return {"plan": plan_to_dict(c.plan), "cost": cost_to_dict(c.cost),
+            "sim": sim_to_dict(c.sim) if c.sim is not None else None}
+
+
+def candidate_from_dict(d: Dict[str, Any]) -> Candidate:
+    return Candidate(plan_from_dict(d["plan"]), cost_from_dict(d["cost"]),
+                     sim_from_dict(d["sim"]) if d.get("sim") else None)
+
+
+def result_to_dict(r: PlanResult) -> Dict[str, Any]:
+    return {
+        "kernel": r.kernel,
+        "hw_name": r.hw_name,
+        "best": candidate_to_dict(r.best),
+        "topk": [candidate_to_dict(c) for c in r.topk],
+        "n_candidates": r.n_candidates,
+        "n_mappings": r.n_mappings,
+        "plan_seconds": r.plan_seconds,
+        "log": list(r.log),
+    }
+
+
+def result_from_dict(d: Dict[str, Any]) -> PlanResult:
+    return PlanResult(
+        kernel=d["kernel"], hw_name=d["hw_name"],
+        best=candidate_from_dict(d["best"]),
+        topk=[candidate_from_dict(c) for c in d["topk"]],
+        n_candidates=int(d["n_candidates"]),
+        n_mappings=int(d["n_mappings"]),
+        plan_seconds=float(d["plan_seconds"]),
+        log=[str(x) for x in d.get("log", [])])

@@ -1,0 +1,24 @@
+"""Shared test setup: isolate the persistent plan cache per test session so
+tests never read from or write into the user's ~/.cache/repro-plancache."""
+import os
+
+import pytest
+
+
+@pytest.fixture(autouse=True, scope="session")
+def _isolated_plan_cache(tmp_path_factory):
+    if os.environ.get("REPRO_PLAN_CACHE_DIR"):
+        yield
+        return
+    os.environ["REPRO_PLAN_CACHE_DIR"] = str(
+        tmp_path_factory.mktemp("plancache"))
+    yield
+    os.environ.pop("REPRO_PLAN_CACHE_DIR", None)
+
+
+@pytest.fixture()
+def fast_search(monkeypatch):
+    """Shrink the planner's SearchBudget for latency-sensitive tests (the
+    REPRO_FAST_SEARCH knob; see core/planner.py:effective_budget)."""
+    monkeypatch.setenv("REPRO_FAST_SEARCH", "1")
+    yield

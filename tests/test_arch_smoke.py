@@ -21,7 +21,14 @@ def _batch(cfg, step=0):
     return jax.tree.map(jnp.asarray, d.batch_at(step, B, S))
 
 
-@pytest.fixture(scope="module", params=sorted(ARCHS))
+# archs whose reduced configs still take many seconds per jit compile;
+# their smoke tests carry the `slow` marker (deselect with -m "not slow")
+_HEAVY = {"zamba2-1.2b", "rwkv6-3b", "deepseek-67b", "seamless-m4t-medium"}
+
+
+@pytest.fixture(scope="module",
+                params=[pytest.param(a, marks=pytest.mark.slow)
+                        if a in _HEAVY else a for a in sorted(ARCHS)])
 def arch(request):
     return request.param
 

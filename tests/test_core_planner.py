@@ -114,7 +114,7 @@ def test_planner_beats_or_matches_vendor_templates(hw):
     assert res.topk[0].cost.total_s <= t2d.total_s * 1.001
 
 
-def test_spatial_reuse_reduces_dram_traffic(hw):
+def test_spatial_reuse_reduces_dram_traffic(hw, fast_search):
     """Paper Table 1: spatial reuse cuts DRAM accesses (avg -70%)."""
     M = N = K = 2048
     with_reuse = plan_kernel(matmul_program(M, N, K, bm=128, bn=128, bk=64),
@@ -131,7 +131,7 @@ def test_two_step_selection_runs_simulator(hw):
     assert res.best.final_s > 0
 
 
-def test_flash_attention_planning(hw):
+def test_flash_attention_planning(hw, fast_search):
     """TL exploits K/V reuse across query tiles (paper S3.2): the best plan
     must not reload K/V per-core from DRAM at the innermost level."""
     prog = flash_attention_program(64, 1024, 1024, 64, bq=64, bkv=64)

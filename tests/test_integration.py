@@ -67,6 +67,7 @@ def test_checkpoint_restart_bitwise_resume(tmp_path):
     np.testing.assert_allclose(resumed_loss, ref_loss, rtol=1e-5)
 
 
+@pytest.mark.slow
 @pytest.mark.skipif(len(jax.devices()) < 1, reason="needs a device")
 def test_sharded_train_step_matches_unsharded():
     """The plan-sharded jitted step computes the same loss as the local step
@@ -109,6 +110,7 @@ def test_decode_matches_teacher_forcing():
                                rtol=0.05, atol=0.05)
 
 
+@pytest.mark.slow
 def test_rwkv_decode_matches_teacher_forcing():
     """The recurrent decode path agrees with the chunked training path."""
     cfg = ARCHS["rwkv6-3b"].reduced()

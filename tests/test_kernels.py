@@ -157,9 +157,11 @@ def test_grouped_matmul_sweep(shape, dtype):
 
 
 # -------------------------------------------------- planner-chosen blocks
-def test_planner_blocks_are_mxu_aligned_and_fit_vmem():
-    from repro.core.lower_jax import plan_gemm_blocks, plan_flash_blocks
+def test_planner_blocks_are_mxu_aligned_and_fit_vmem(fast_search):
+    from repro.core.lower_jax import (clear_block_caches, plan_gemm_blocks,
+                                      plan_flash_blocks)
     from repro.core.hw import TPU_V5E_VMEM_BYTES
+    clear_block_caches()
     bm, bn, bk = plan_gemm_blocks(4096, 4096, 4096, jnp.bfloat16)
     assert bm % 128 == 0 and bn % 128 == 0 and bk % 128 == 0
     # A + B double buffered + f32 accumulator within VMEM

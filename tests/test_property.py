@@ -5,6 +5,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed; property tests skipped")
 from hypothesis import HealthCheck, given, settings, strategies as st
 
 from repro.core import (enumerate_mappings, estimate, get_hw, make_plan,

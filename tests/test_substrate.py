@@ -155,6 +155,7 @@ def test_grad_compression_error_feedback():
                                rtol=0.02, atol=0.02)
 
 
+@pytest.mark.slow
 def test_train_step_runs_with_compression_and_microbatches():
     from repro.train import train_step as TS
     cfg = ARCHS["qwen2.5-3b"].reduced()
