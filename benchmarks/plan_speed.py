@@ -1,0 +1,175 @@
+"""Planner-throughput benchmark: how fast is the *cold* search itself?
+
+The paper's planning cost is amortized over compilation, but TileLoom's
+pitch (and ROADMAP's) is planning cheap enough to run inline at trace time.
+This table measures exactly that: for every GEMM (Fig 5) and FlashAttention
+(Fig 7) cell it runs the full two-step selection with no plan cache and
+reports
+
+* ``plan_seconds`` — cold wall time of ``plan_kernel_multi``;
+* ``cands_per_s`` — ranked candidates per second;
+* branch-and-bound efficiency — candidates whose estimate the admissible
+  lower bound skipped (``n_pruned``), whole mappings skipped by the compute
+  floor (``n_mappings_pruned``), estimates actually computed
+  (``n_estimated``);
+* simulator compression — wave equivalence classes costed vs waves
+  simulated for the winning plan (``classes/waves``).
+
+Output: CSV rows on stdout plus ``BENCH_plan_speed.json`` in the working
+directory.  ``--check-golden <path>`` compares the best-plan selections
+against a checked-in golden summary and fails on drift (the CI perf-smoke
+job runs this under ``REPRO_FAST_SEARCH=1`` against
+``benchmarks/golden_plan_speed.json``).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, Optional
+
+from repro.core import (SearchBudget, fast_search_enabled,
+                        flash_attention_program, get_hw, plan_kernel_multi)
+
+from .common import HW_CONFIGS, geomean, row, tl_gemm
+from . import flash_table, gemm_table
+
+JSON_PATH = "BENCH_plan_speed.json"
+FLASH_BUDGET = SearchBudget(top_k=5, max_plans_per_mapping=48)
+
+
+def _cell(res) -> Dict:
+    sim = res.best.sim
+    return {
+        "best": res.best.plan.describe(),
+        "model_us": res.best.cost.total_s * 1e6,
+        "sim_us": sim.total_s * 1e6 if sim else None,
+        "plan_seconds": res.plan_seconds,
+        "n_candidates": res.n_candidates,
+        "n_estimated": res.n_estimated,
+        "n_pruned": res.n_pruned,
+        "n_mappings": res.n_mappings,
+        "n_mappings_pruned": res.n_mappings_pruned,
+        "n_waves": sim.n_waves if sim else 0,
+        "n_wave_classes": sim.n_wave_classes if sim else 0,
+    }
+
+
+def sweep(full: bool = False):
+    cells: Dict[str, Dict] = {}
+    for hw_name in HW_CONFIGS:
+        hw = get_hw(hw_name)
+        for (M, N, K) in gemm_table.shape_table(full):
+            res = tl_gemm(M, N, K, hw)
+            cells[f"gemm/{hw_name}/M{M}_N{N}_K{K}"] = _cell(res)
+    hw = get_hw("wormhole_8x8")
+    for bh, seq, head_dim in flash_table.shape_table():
+        progs = [flash_attention_program(bh, seq, seq, head_dim, bq=bq,
+                                         bkv=bkv)
+                 for bq in (32, 64, 128) for bkv in (32, 64, 128)]
+        res = plan_kernel_multi(progs, hw, budget=FLASH_BUDGET)
+        cells[f"flash/h{bh}_s{seq}"] = _cell(res)
+    return cells
+
+
+def summarize(cells: Dict[str, Dict]) -> Dict:
+    total_s = sum(c["plan_seconds"] for c in cells.values())
+    n_cand = sum(c["n_candidates"] for c in cells.values())
+    n_est = sum(c["n_estimated"] for c in cells.values())
+    n_pruned = sum(c["n_pruned"] for c in cells.values())
+    compress = [c["n_waves"] / c["n_wave_classes"] for c in cells.values()
+                if c["n_wave_classes"]]
+    return {
+        "fast_search": fast_search_enabled(),
+        "n_cells": len(cells),
+        "plan_seconds_total": total_s,
+        "candidates_per_s": n_cand / total_s if total_s > 0 else 0.0,
+        "n_candidates": n_cand,
+        "n_estimated": n_est,
+        "n_pruned": n_pruned,
+        "estimate_fraction": n_est / n_cand if n_cand else 0.0,
+        "waves_per_class_geomean": geomean(compress),
+    }
+
+
+def check_golden(cells: Dict[str, Dict], path: str) -> int:
+    """Compare best-plan selections against a golden summary; returns the
+    number of drifted cells (0 = pass)."""
+    with open(path) as f:
+        golden = json.load(f)
+    if golden.get("fast_search") != fast_search_enabled():
+        print(f"plan_speed/golden: search-config mismatch — golden was "
+              f"recorded with fast_search={golden.get('fast_search')} but "
+              f"this run has fast_search={fast_search_enabled()} "
+              f"(set/unset REPRO_FAST_SEARCH to match)", file=sys.stderr)
+        return 1
+    want = golden["best_plans"]
+    drift = 0
+    for name, best in want.items():
+        got = cells.get(name)
+        if got is None:
+            print(f"plan_speed/golden: MISSING cell {name}", file=sys.stderr)
+            drift += 1
+        elif got["best"] != best:
+            print(f"plan_speed/golden: DRIFT in {name}\n"
+                  f"  golden: {best}\n  got:    {got['best']}",
+                  file=sys.stderr)
+            drift += 1
+    extra = set(cells) - set(want)
+    if extra:
+        print(f"plan_speed/golden: {len(extra)} cells not in golden "
+              f"(regenerate with --write-golden)", file=sys.stderr)
+    return drift
+
+
+def run(full: bool = False):
+    """Sweep, summarize, and write ``BENCH_plan_speed.json`` (the shared
+    core of the run.py suite entry and the standalone CLI)."""
+    cells = sweep(full)
+    summary = summarize(cells)
+    with open(JSON_PATH, "w") as f:
+        json.dump({"cells": cells, "summary": summary}, f, indent=1,
+                  sort_keys=True)
+    print(f"wrote {JSON_PATH} "
+          f"({summary['plan_seconds_total']:.1f}s cold planning, "
+          f"{summary['candidates_per_s']:.0f} candidates/s)",
+          file=sys.stderr)
+    return cells, summary
+
+
+def main(full: bool = False, cache=None) -> Dict:
+    """``cache`` is accepted for run.py uniformity but deliberately unused:
+    this suite measures the cold search."""
+    cells, summary = run(full)
+    for name, c in sorted(cells.items()):
+        print(row(f"plan_speed/{name}", c["plan_seconds"] * 1e6,
+                  f"cands={c['n_candidates']};est={c['n_estimated']};"
+                  f"pruned={c['n_pruned']};"
+                  f"map_pruned={c['n_mappings_pruned']}/{c['n_mappings']};"
+                  f"classes={c['n_wave_classes']}/{c['n_waves']}"))
+    print(row("plan_speed/total", summary["plan_seconds_total"] * 1e6,
+              f"cands_per_s={summary['candidates_per_s']:.0f};"
+              f"est_frac={summary['estimate_fraction']:.3f};"
+              f"waves_per_class={summary['waves_per_class_geomean']:.1f}"))
+    return summary
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--full", action="store_true",
+                    help="widen the GEMM sweep toward the paper's 140 cells")
+    ap.add_argument("--check-golden", metavar="PATH",
+                    help="fail if best-plan selections drift from PATH")
+    ap.add_argument("--write-golden", metavar="PATH",
+                    help="write the golden best-plan summary to PATH")
+    args = ap.parse_args()
+    cells, _ = run(args.full)
+    if args.write_golden:
+        with open(args.write_golden, "w") as f:
+            json.dump({"fast_search": fast_search_enabled(),
+                       "best_plans": {n: c["best"]
+                                      for n, c in sorted(cells.items())}},
+                      f, indent=1, sort_keys=True)
+        print(f"wrote {args.write_golden}", file=sys.stderr)
+    if args.check_golden:
+        sys.exit(1 if check_golden(cells, args.check_golden) else 0)

@@ -14,6 +14,9 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", nargs="*", default=None)
+    ap.add_argument("--suite", default=None,
+                    help="comma-separated suite list (same filter as --only, "
+                         "e.g. --suite gemm_fig5,flash_fig7)")
     ap.add_argument("--plan-cache", action="store_true",
                     help="resolve plans from the persistent registry "
                          "(pre-warm with `python -m repro.plancache warm "
@@ -23,7 +26,7 @@ def main() -> None:
 
     from . import (ablation_spatial, ablation_temporal, flash_table,
                    gemm_irregular, gemm_table, perfmodel_validation,
-                   topk_table)
+                   plan_speed, topk_table)
     cache = None
     if args.plan_cache:
         from repro.plancache import PlanCache
@@ -36,10 +39,19 @@ def main() -> None:
         "temporal_fig8": ablation_temporal.main,
         "perfmodel_fig9": perfmodel_validation.main,
         "topk_tbl2": topk_table.main,
+        "plan_speed": lambda: plan_speed.main(full=args.full),
     }
+    # plan_speed re-plans every cell cold on purpose (it measures the
+    # search itself and ignores --plan-cache), so it only runs when named
+    opt_in = {"plan_speed"}
+    selected = set(args.only or [])
+    if args.suite:
+        selected |= {s.strip() for s in args.suite.split(",") if s.strip()}
     print("name,us_per_call,derived")
     for name, fn in suites.items():
-        if args.only and name not in args.only:
+        if selected and name not in selected:
+            continue
+        if not selected and name in opt_in:
             continue
         t0 = time.perf_counter()
         fn()

@@ -9,16 +9,19 @@ from .affine import AffineExpr, AffineMap, footprint_tiles
 from .hw import (HardwareModel, MatUnit, Memory, VecUnit, get_hw, tpu_v5e_chip,
                  tpu_v5e_pod, wormhole, spyre_triple_ring, PRESETS)
 from .mapping import Mapping, SpatialBind, TemporalLoop, enumerate_mappings
-from .perfmodel import PlanCost, body_compute_seconds, estimate, pipelined_loop_time
+from .perfmodel import (BoundContext, PlanCost, body_compute_seconds, estimate,
+                        pipelined_loop_time, plan_lower_bound)
 from .plan import DataflowPlan, make_plan
 from .planner import (Candidate, PlanResult, SearchBudget, effective_budget,
-                      fast_search_enabled, plan_kernel, plan_kernel_multi)
+                      fast_search_enabled, iter_plan_stream, plan_kernel,
+                      plan_kernel_multi)
 from .program import (LoopDim, TensorSpec, TileAccess, TileOp, TileProgram,
                       block_shape_candidates, flash_attention_program,
                       fused_matmul_program, matmul_program)
 from .reuse import (HoistOption, MemOpChoice, ReuseInfo, analyze_reuse,
-                    broadcast_options, enumerate_memop_choices, hoist_options)
-from .simulator import SimResult, simulate
+                    broadcast_options, enumerate_memop_choices,
+                    memop_choices_with_stores, memop_demand, hoist_options)
+from .simulator import SimResult, simulate, simulate_reference
 from . import templates
 
 __all__ = [
@@ -26,14 +29,17 @@ __all__ = [
     "HardwareModel", "MatUnit", "Memory", "VecUnit", "get_hw", "PRESETS",
     "tpu_v5e_chip", "tpu_v5e_pod", "wormhole", "spyre_triple_ring",
     "Mapping", "SpatialBind", "TemporalLoop", "enumerate_mappings",
-    "PlanCost", "body_compute_seconds", "estimate", "pipelined_loop_time",
+    "BoundContext", "PlanCost", "body_compute_seconds", "estimate",
+    "pipelined_loop_time", "plan_lower_bound",
     "DataflowPlan", "make_plan",
     "Candidate", "PlanResult", "SearchBudget", "effective_budget",
-    "fast_search_enabled", "plan_kernel", "plan_kernel_multi",
+    "fast_search_enabled", "iter_plan_stream", "plan_kernel",
+    "plan_kernel_multi",
     "LoopDim", "TensorSpec", "TileAccess", "TileOp", "TileProgram",
     "block_shape_candidates", "flash_attention_program", "fused_matmul_program",
     "matmul_program",
     "HoistOption", "MemOpChoice", "ReuseInfo", "analyze_reuse",
-    "broadcast_options", "enumerate_memop_choices", "hoist_options",
-    "SimResult", "simulate", "templates",
+    "broadcast_options", "enumerate_memop_choices",
+    "memop_choices_with_stores", "memop_demand", "hoist_options",
+    "SimResult", "simulate", "simulate_reference", "templates",
 ]

@@ -95,7 +95,16 @@ def _cached_blocks(template: str, params: dict, shape: Tuple[int, ...],
               meta={"template": template, "shape": list(shape),
                     "hw": hw_dig, "hw_name": hw.name,
                     "blocks": list(blocks),
-                    "tiles": warmstart.tile_signature(best_prog)})
+                    "tiles": warmstart.tile_signature(best_prog),
+                    # cold-search efficiency counters (plan_speed / AOT
+                    # tuning reports read these off the registry)
+                    "search": {"plan_seconds": res.plan_seconds,
+                               "n_candidates": res.n_candidates,
+                               "n_estimated": res.n_estimated,
+                               "n_pruned": res.n_pruned,
+                               "n_mappings_pruned": res.n_mappings_pruned,
+                               "n_infeasible_programs":
+                                   res.n_infeasible_programs}})
     return blocks
 
 

@@ -27,8 +27,9 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Mapping as TMapping, Optional, Sequence, Tuple
 
 from .hw import HardwareModel, Interconnect
+from .mapping import Mapping as _Mapping
 from .plan import DataflowPlan
-from .reuse import MemOpChoice, StorePlacement
+from .reuse import MemOpChoice, StorePlacement, memop_demand
 
 
 @dataclass(frozen=True)
@@ -107,45 +108,16 @@ def _resource_pools(hw: HardwareModel) -> Dict[str, float]:
     return pools
 
 
-def _load_transfer(c: MemOpChoice, plan: DataflowPlan,
+def _load_transfer(c: MemOpChoice, mapping: _Mapping,
                    hw: HardwareModel) -> _Transfer:
-    m = plan.mapping
-    active = m.active_cores()
-    tile = c.access.tile_bytes
-    tiles = c.hoist.tiles_per_issue
-    bytes_per_core = tile * tiles
-    demand: Dict[str, float] = {}
-    noc_bytes = 0.0
-    if not c.bcast_axes:
-        # direct per-core global load: every active core fetches its tiles
-        dram = bytes_per_core * active
-        demand["dram"] = dram
-        demand["l1"] = dram
-    else:
-        sizes = {a: s for a, s in m.hw_dims}
-        repl = math.prod(sizes[a] for a in c.bcast_axes)
-        producers = max(1, active // repl)
-        dram = bytes_per_core * producers
-        demand["dram"] = dram
-        # staged multicast: along axis a_i, (s_i - 1) link-hops per receiving
-        # plane; earlier stages fan out to progressively more planes
-        planes = producers
-        for a in c.bcast_axes:
-            ic = hw.interconnect_along(a)
-            s = sizes[a]
-            leg = bytes_per_core * (s - 1) * planes
-            if ic is not None:
-                demand[ic.name] = demand.get(ic.name, 0.0) + leg
-            noc_bytes += leg
-            planes *= s
-        demand["l1"] = bytes_per_core * active      # every core lands a copy
+    demand, dram_bytes, noc_bytes = memop_demand(c, mapping, hw)
     return _Transfer(c.access.label(), c.hoist.level, "load",
-                     demand, demand.get("dram", 0.0), noc_bytes)
+                     demand, dram_bytes, noc_bytes)
 
 
-def _store_transfer(s: StorePlacement, plan: DataflowPlan,
+def _store_transfer(s: StorePlacement, mapping: _Mapping,
                     hw: HardwareModel) -> _Transfer:
-    active = plan.mapping.active_cores()
+    active = mapping.active_cores()
     bytes_all = s.access.tile_bytes * active
     demand = {"dram": bytes_all, "l1": bytes_all}
     return _Transfer(s.access.label(), s.level, "store", demand, bytes_all, 0.0)
@@ -183,13 +155,18 @@ def pipelined_loop_time(I: int, t_load: float, t_store: float,
 # End-to-end estimation
 # --------------------------------------------------------------------------
 def estimate(plan: DataflowPlan, hw: HardwareModel, *,
-             pipeline_outer_levels: bool = False) -> PlanCost:
+             pipeline_outer_levels: bool = False,
+             transfers: Optional[Sequence[_Transfer]] = None) -> PlanCost:
     """Estimate end-to-end execution time of one candidate plan.
 
     ``pipeline_outer_levels=False`` is the paper-faithful model (overlap only
     in the innermost loop).  ``True`` additionally double-buffers hoisted
     transfers against the inner loop body — the beyond-paper "collective /
     compute overlap" optimization evaluated in EXPERIMENTS.md SPerf.
+
+    ``transfers`` may be supplied by callers that already materialized the
+    plan's transfer list (``BoundContext.transfers_for``); it must equal
+    what this function would rebuild.
     """
     m = plan.mapping
     prog = m.program
@@ -199,8 +176,9 @@ def estimate(plan: DataflowPlan, hw: HardwareModel, *,
     loops += [(d.name, d.extent) for d in prog.seq_dims]
     n = len(loops)
 
-    transfers = [_load_transfer(c, plan, hw) for c in plan.loads]
-    transfers += [_store_transfer(s, plan, hw) for s in plan.stores]
+    if transfers is None:
+        transfers = [_load_transfer(c, m, hw) for c in plan.loads]
+        transfers += [_store_transfer(s, m, hw) for s in plan.stores]
     by_level: Dict[int, List[_Transfer]] = {}
     for t in transfers:
         by_level.setdefault(t.level, []).append(t)
@@ -278,3 +256,100 @@ def _issues_at(level: int, loops: Sequence[Tuple[str, int]]) -> int:
     for _, e in loops[:level]:
         k *= e
     return k
+
+
+# --------------------------------------------------------------------------
+# Admissible lower bound (branch-and-bound ranking, DESIGN_SEARCHPERF.md)
+# --------------------------------------------------------------------------
+class BoundContext:
+    """Per-mapping precomputation for a cheap admissible lower bound on
+    :func:`estimate`.
+
+    For every plan over this mapping, ``lower_bound(plan) <=
+    estimate(plan, hw, pipeline_outer_levels=...).total_s`` (in either
+    overlap mode), so the planner may skip the full estimate for any plan
+    whose bound already exceeds the current k-th best cost without changing
+    the selected top-k.  Two terms:
+
+    * **compute**: the pipelined-loop formula satisfies ``T >= I * t_body``
+      at every level, so ``t_body * prod(extents)`` bounds the total;
+    * **traffic**: in the paper-faithful mode every level contributes its
+      contended transfer time ``max_r(demand_r / pool_r) >= demand_r /
+      pool_r`` serially, so summing per-resource busy time across levels
+      bounds the total per resource; with ``pipeline_outer_levels`` the
+      model lets different levels overlap, so only the per-(level,
+      resource) maximum remains admissible.
+
+    Store placements are mapping-constant and folded in at construction;
+    per-load-option busy vectors are memoized, so a bound costs a few dict
+    additions per plan instead of a full hierarchical walk.
+    """
+
+    def __init__(self, mapping: _Mapping, stores: Sequence[StorePlacement],
+                 hw: HardwareModel, *, pipeline_outer_levels: bool = False):
+        self.mapping = mapping
+        self.hw = hw
+        self.pipelined = pipeline_outer_levels
+        self.pools = _resource_pools(hw)
+        loops: List[Tuple[str, int]] = [(t.name, t.extent)
+                                        for t in mapping.temporal]
+        loops += [(d.name, d.extent) for d in mapping.program.seq_dims]
+        self.loops = loops
+        self.compute_lb = body_compute_seconds(mapping, hw) \
+            * math.prod(e for _, e in loops)
+        self.utilization = mapping.utilization()
+        self.active_cores = mapping.active_cores()
+        self._store_trs = [_store_transfer(s, mapping, hw) for s in stores]
+        self._store_busy: Dict[Tuple[int, str], float] = {}
+        for tr in self._store_trs:
+            issues = _issues_at(tr.level, loops)
+            for r, b in tr.demand.items():
+                key = (tr.level, r)
+                self._store_busy[key] = self._store_busy.get(key, 0.0) \
+                    + b * issues / self.pools[r]
+        self._tr_memo: Dict[int, _Transfer] = {}
+        self._memo: Dict[int, Dict[Tuple[int, str], float]] = {}
+
+    def _load_tr(self, c: MemOpChoice) -> _Transfer:
+        tr = self._tr_memo.get(id(c))
+        if tr is None:
+            tr = self._tr_memo[id(c)] = _load_transfer(c, self.mapping,
+                                                       self.hw)
+        return tr
+
+    def transfers_for(self, plan: DataflowPlan) -> List[_Transfer]:
+        """The plan's transfer list (loads memoized per option, stores
+        shared) — exactly what :func:`estimate` would rebuild itself."""
+        return [self._load_tr(c) for c in plan.loads] + self._store_trs
+
+    def _load_busy(self, c: MemOpChoice) -> Dict[Tuple[int, str], float]:
+        busy = self._memo.get(id(c))
+        if busy is None:
+            tr = self._load_tr(c)
+            issues = _issues_at(tr.level, self.loops)
+            busy = {(tr.level, r): b * issues / self.pools[r]
+                    for r, b in tr.demand.items()}
+            self._memo[id(c)] = busy
+        return busy
+
+    def lower_bound(self, plan: DataflowPlan) -> float:
+        agg = dict(self._store_busy)
+        for c in plan.loads:
+            for key, v in self._load_busy(c).items():
+                agg[key] = agg.get(key, 0.0) + v
+        if self.pipelined:
+            traffic = max(agg.values(), default=0.0)
+        else:
+            per_res: Dict[str, float] = {}
+            for (_, r), v in agg.items():
+                per_res[r] = per_res.get(r, 0.0) + v
+            traffic = max(per_res.values(), default=0.0)
+        return max(self.compute_lb, traffic)
+
+
+def plan_lower_bound(plan: DataflowPlan, hw: HardwareModel, *,
+                     pipeline_outer_levels: bool = False) -> float:
+    """One-shot admissible lower bound on ``estimate(plan, hw).total_s``."""
+    ctx = BoundContext(plan.mapping, plan.stores, hw,
+                       pipeline_outer_levels=pipeline_outer_levels)
+    return ctx.lower_bound(plan)

@@ -11,23 +11,31 @@ Pipeline per kernel:
 5. "profiling": the event-driven simulator (the on-hardware stage stand-in,
    DESIGN.md S4) -> pick the final top-1.
 
+Step 4 runs as **branch-and-bound over a streamed candidate space**
+(DESIGN_SEARCHPERF.md): candidates are generated mapping by mapping, a cheap
+admissible lower bound (:class:`~repro.core.perfmodel.BoundContext`) filters
+plans that provably cannot enter the current top-k, and only the survivors
+pay for a full :func:`~repro.core.perfmodel.estimate`.  Ties are broken by
+stream order, so the selected top-k is bit-identical to ranking every
+candidate and stable-sorting by model cost.
+
 ``plan_kernel`` is the public entry point used by benchmarks and the JAX
 lowering layer.
 """
 from __future__ import annotations
 
-import math
+import heapq
 import os
 import time
 from dataclasses import dataclass, field, replace
-from typing import Any, Callable, List, Optional, Sequence, Tuple
+from typing import Any, Iterator, List, Optional, Sequence, Tuple
 
 from .hw import HardwareModel
 from .mapping import Mapping, enumerate_mappings
-from .perfmodel import PlanCost, estimate
-from .plan import DataflowPlan, make_plan
+from .perfmodel import BoundContext, PlanCost, body_compute_seconds, estimate
+from .plan import DataflowPlan
 from .program import TileProgram
-from .reuse import enumerate_memop_choices
+from .reuse import memop_choices_with_stores
 from .simulator import SimResult, simulate
 
 
@@ -52,13 +60,20 @@ class PlanResult:
     n_mappings: int
     plan_seconds: float
     log: List[str] = field(default_factory=list)
+    # search-efficiency counters (benchmarks/plan_speed.py reports these)
+    n_pruned: int = 0            # full estimates skipped via the lower bound
+    n_estimated: int = 0         # candidates that paid a full estimate
+    n_wave_classes: int = 0      # wave classes the best plan's profile costed
+    n_mappings_pruned: int = 0   # whole mappings skipped by the floor bound
+    n_infeasible_programs: int = 0
 
     def summary(self) -> str:
         c = self.best
         lines = [
             f"kernel={self.kernel} hw={self.hw_name} "
             f"candidates={self.n_candidates} mappings={self.n_mappings} "
-            f"plan_time={self.plan_seconds:.2f}s",
+            f"plan_time={self.plan_seconds:.2f}s "
+            f"(estimated={self.n_estimated} bound-pruned={self.n_pruned})",
             f"  best: {c.plan.describe()}",
             f"  model: {c.cost.total_s * 1e6:.1f}us ({c.cost.tflops:.2f} TFLOP/s, "
             f"{c.cost.bound}-bound)  dram={c.cost.dram_bytes / 1e6:.1f}MB "
@@ -66,7 +81,8 @@ class PlanResult:
         ]
         if c.sim:
             lines.append(f"  sim:   {c.sim.total_s * 1e6:.1f}us "
-                         f"({c.sim.tflops:.2f} TFLOP/s)")
+                         f"({c.sim.tflops:.2f} TFLOP/s, "
+                         f"{c.sim.n_wave_classes}/{c.sim.n_waves} wave classes)")
         return "\n".join(lines)
 
 
@@ -115,22 +131,260 @@ def effective_budget(budget: Optional[SearchBudget] = None) -> SearchBudget:
         max_programs=min(b.max_programs, 16) if b.max_programs else 16)
 
 
-def enumerate_plans(program: TileProgram, hw: HardwareModel,
-                    budget: SearchBudget) -> Tuple[List[DataflowPlan], int]:
+# --------------------------------------------------------------------------
+# Streaming candidate generation
+# --------------------------------------------------------------------------
+def _filtered_mappings(program: TileProgram, hw: HardwareModel,
+                       budget: SearchBudget) -> Tuple[Mapping, ...]:
     mappings = enumerate_mappings(program, hw,
                                   max_candidates=budget.max_mappings)
     if budget.min_utilization > 0:
         best_u = max((m.utilization() for m in mappings), default=0.0)
         mappings = tuple(m for m in mappings
                          if m.utilization() >= budget.min_utilization * best_u)
-    plans: List[DataflowPlan] = []
-    for m in mappings:
-        combos = enumerate_memop_choices(m, hw, max_per_load=budget.max_per_load)
-        for loads in combos[:budget.max_plans_per_mapping]:
-            plans.append(make_plan(m, loads, hw))
-            if len(plans) >= budget.max_candidates:
-                return plans, len(mappings)
+    return tuple(mappings)
+
+
+def iter_plan_stream(program: TileProgram, hw: HardwareModel,
+                     budget: SearchBudget, *,
+                     mappings: Optional[Sequence[Mapping]] = None
+                     ) -> Iterator[Tuple[Mapping, DataflowPlan]]:
+    """Stream candidate plans mapping by mapping (reuse analysis and store
+    placement run once per mapping, not once per plan).  Honors the same
+    ``max_plans_per_mapping`` / ``max_candidates`` truncation — and yields in
+    the same order — as the historical list-building enumeration.
+    ``mappings`` lets callers that already enumerated the (budget-filtered)
+    mapping space avoid re-enumerating it."""
+    if mappings is None:
+        mappings = _filtered_mappings(program, hw, budget)
+    n = 0
+    for mapping in mappings:
+        combos, stores = memop_choices_with_stores(
+            mapping, hw, max_per_load=budget.max_per_load)
+        for combo in combos[:budget.max_plans_per_mapping]:
+            yield mapping, DataflowPlan(mapping, combo, stores)
+            n += 1
+            if n >= budget.max_candidates:
+                return
+
+
+def enumerate_plans(program: TileProgram, hw: HardwareModel,
+                    budget: SearchBudget) -> Tuple[List[DataflowPlan], int]:
+    """Materialized form of :func:`iter_plan_stream` (kept for callers that
+    want the full list; the planner itself streams)."""
+    mappings = _filtered_mappings(program, hw, budget)
+    plans = [p for _, p in iter_plan_stream(program, hw, budget,
+                                            mappings=mappings)]
     return plans, len(mappings)
+
+
+def _ablation_ok(plan: DataflowPlan, spatial: bool, temporal: bool) -> bool:
+    if not spatial and any(c.bcast_axes for c in plan.loads):
+        return False
+    if not temporal:
+        n = len(plan.mapping.temporal) + len(plan.program.seq_dims)
+        if any(c.hoist.level != n for c in plan.loads):
+            return False
+    return True
+
+
+# --------------------------------------------------------------------------
+# Branch-and-bound top-k ranking
+# --------------------------------------------------------------------------
+@dataclass
+class _SearchStats:
+    n_candidates: int = 0
+    n_mappings: int = 0
+    n_pruned: int = 0
+    n_estimated: int = 0
+    n_mappings_pruned: int = 0
+    n_infeasible_programs: int = 0
+    first_failure: str = ""
+
+    def note_failure(self, msg: str) -> None:
+        self.n_infeasible_programs += 1
+        if not self.first_failure:
+            self.first_failure = msg
+
+
+# tolerance on the prune test: the bound is mathematically <= the estimate,
+# but both are float expressions; the margin keeps ulp-level rounding from
+# ever discarding a true top-k member (costs this close are re-estimated)
+_BOUND_SLACK = 1e-9
+
+
+def _cost_signature(ctx: "BoundContext", plan: DataflowPlan,
+                    transfers, pol: bool):
+    """Exact memo key for :func:`estimate`: two plans with equal signatures
+    produce bit-identical :class:`PlanCost` values.
+
+    The signature captures every input the model reads — the loop nest, the
+    per-transfer (level, per-resource demand, traffic, footprint) tuples,
+    utilization/active-core counts, the program identity (body, flops,
+    accumulators), and the overlap mode.  Interconnect names are canonicalized
+    to (pool bandwidth, first-appearance rank), so plans isomorphic under a
+    bandwidth-preserving ring renaming — e.g. the x<->y twins of a symmetric
+    mesh, or mappings differing only in size-1 spatial binds — share one
+    estimate instead of recomputing identical arithmetic."""
+    ring_rank: dict = {}
+
+    def canon(r):
+        if r in ("dram", "l1"):
+            return r
+        got = ring_rank.get(r)
+        if got is None:
+            got = ring_rank[r] = (ctx.pools[r], len(ring_rank))
+        return got
+
+    tr_sig = tuple(
+        (t.kind, t.level,
+         tuple(sorted((str(canon(r)), b) for r, b in t.demand.items())),
+         t.dram_bytes, t.noc_bytes)
+        for t in transfers)
+    buf_sig = tuple((c.hoist.footprint_tiles, c.access.tile_bytes,
+                     c.hoist.level) for c in plan.loads)
+    return (id(plan.program), tuple(ctx.loops), pol, ctx.utilization,
+            ctx.active_cores, tr_sig, buf_sig)
+
+
+def _rank_streamed(programs: Sequence[TileProgram], hw: HardwareModel,
+                   budget: SearchBudget, *, spatial_reuse: bool,
+                   temporal_reuse: bool, use_bound: bool,
+                   catch_infeasible: bool, stats: _SearchStats
+                   ) -> List[Candidate]:
+    """Rank the pooled candidate space of ``programs``, returning the top-k
+    by (model cost, canonical stream order) — bit-identical to estimating
+    every candidate and stable-sorting, but:
+
+    * plans whose admissible lower bound already exceeds the current k-th
+      best skip the full estimate;
+    * whole mappings are skipped when their compute floor (``t_body x waves
+      x inner iterations`` — the pipelined-loop formula is ``>= I*t_body``
+      at every level) exceeds the k-th best; mappings are also *processed*
+      in ascending-floor order so the heap converges before the bulk of the
+      space streams by.  Candidates carry their canonical (program, mapping,
+      combo) indices, so reordered processing still resolves cost ties
+      exactly as the canonical stable sort would.  Both reorder and skip
+      engage only when the ``max_candidates`` truncation provably cannot
+      fire for the program (otherwise skipping would shift which plans the
+      cap admits), which keeps the explored set identical;
+    * bit-equal estimates (size-1-bind twins, symmetric-mesh x<->y twins)
+      are shared through an exact cost-signature memo.
+    """
+    k = budget.top_k
+    pol = budget.pipeline_outer_levels
+    heap: List[tuple] = []   # (-cost, (-p, -m, -c), Candidate): max-heap
+    est_memo: dict = {}
+    for p_idx, prog in enumerate(programs):
+        contributed = 0
+        # feasibility failures (validation, capacity, degenerate spaces)
+        # raised by the *enumeration* layers drop the program but are
+        # counted and surfaced; anything raised by the cost model — and any
+        # non-(RuntimeError|ValueError) — is a planner bug and propagates
+        try:
+            mappings = _filtered_mappings(prog, hw, budget)
+        except (RuntimeError, ValueError) as e:
+            if not catch_infeasible:
+                raise
+            stats.note_failure(f"{prog.name}: {e}")
+            continue
+        stats.n_mappings += len(mappings)
+        cap_safe = (len(mappings) * budget.max_plans_per_mapping
+                    <= budget.max_candidates)
+        t_body = body_compute_seconds(mappings[0], hw) if mappings else 0.0
+        floors = [t_body * m.n_waves() * prog.inner_iters for m in mappings]
+        m_order: Sequence[int] = range(len(mappings))
+        if use_bound and cap_safe:
+            m_order = sorted(m_order, key=lambda i: floors[i])
+        n_streamed = 0
+        floor_pruned = 0
+        for m_idx in m_order:
+            mapping = mappings[m_idx]
+            if use_bound and cap_safe and len(heap) >= k and \
+                    floors[m_idx] > (-heap[0][0]) * (1.0 + _BOUND_SLACK):
+                stats.n_mappings_pruned += 1
+                floor_pruned += 1
+                continue
+            try:
+                combos, stores = memop_choices_with_stores(
+                    mapping, hw, max_per_load=budget.max_per_load,
+                    max_plans=budget.max_plans_per_mapping)
+            except (RuntimeError, ValueError) as e:
+                if not catch_infeasible:
+                    raise
+                if contributed == 0:      # else: partial program, keep plans
+                    stats.note_failure(f"{prog.name}: {e}")
+                    contributed = -1      # already counted infeasible
+                elif not stats.first_failure:
+                    stats.first_failure = f"{prog.name}: {e}"
+                break                     # drop the rest of this program
+            combos = combos[:budget.max_plans_per_mapping]
+            ctx: Optional[BoundContext] = None
+            for c_idx, combo in enumerate(combos):
+                n_streamed += 1
+                plan = DataflowPlan(mapping, combo, stores)
+                if _ablation_ok(plan, spatial_reuse, temporal_reuse):
+                    stats.n_candidates += 1
+                    contributed += 1
+                    if ctx is None:
+                        ctx = BoundContext(mapping, stores, hw,
+                                           pipeline_outer_levels=pol)
+                    skip = False
+                    if use_bound and len(heap) >= k:
+                        worst = -heap[0][0]
+                        if ctx.lower_bound(plan) > \
+                                worst * (1.0 + _BOUND_SLACK):
+                            stats.n_pruned += 1
+                            skip = True
+                    if not skip:
+                        transfers = ctx.transfers_for(plan)
+                        key = _cost_signature(ctx, plan, transfers, pol)
+                        cost = est_memo.get(key)
+                        if cost is None:
+                            cost = estimate(plan, hw,
+                                            pipeline_outer_levels=pol,
+                                            transfers=transfers)
+                            est_memo[key] = cost
+                            stats.n_estimated += 1
+                        item = (-cost.total_s, (-p_idx, -m_idx, -c_idx),
+                                Candidate(plan, cost))
+                        if len(heap) < k:
+                            heapq.heappush(heap, item)
+                        elif item > heap[0]:
+                            heapq.heapreplace(heap, item)
+                if n_streamed >= budget.max_candidates:
+                    break
+            if n_streamed >= budget.max_candidates:
+                break
+        # a program whose every mapping was skipped by the floor bound is
+        # feasible (just provably worse than the top-k) — only count it
+        # infeasible when nothing contributed *and* nothing was pruned
+        if contributed == 0 and floor_pruned == 0 and catch_infeasible:
+            stats.note_failure(f"{prog.name}: no feasible plan")
+    return [it[2] for it in sorted(
+        heap, key=lambda it: (-it[0], -it[1][0], -it[1][1], -it[1][2]))]
+
+
+def _finish(topk: List[Candidate], *, kernel: str, hw: HardwareModel,
+            profile: bool, stats: _SearchStats, t0: float) -> PlanResult:
+    if profile:
+        for c in topk:
+            c.sim = simulate(c.plan, hw)
+        topk.sort(key=lambda c: c.final_s)
+    best = topk[0]
+    log = []
+    if stats.n_infeasible_programs:
+        log.append(f"infeasible_programs={stats.n_infeasible_programs}")
+    if stats.first_failure:
+        log.append(f"first_failure: {stats.first_failure}")
+    return PlanResult(
+        kernel=kernel, hw_name=hw.name, best=best, topk=topk,
+        n_candidates=stats.n_candidates, n_mappings=stats.n_mappings,
+        plan_seconds=time.perf_counter() - t0, log=log,
+        n_pruned=stats.n_pruned, n_estimated=stats.n_estimated,
+        n_wave_classes=best.sim.n_wave_classes if best.sim else 0,
+        n_mappings_pruned=stats.n_mappings_pruned,
+        n_infeasible_programs=stats.n_infeasible_programs)
 
 
 def plan_kernel(program: TileProgram, hw: HardwareModel, *,
@@ -138,7 +392,8 @@ def plan_kernel(program: TileProgram, hw: HardwareModel, *,
                 profile: bool = True,
                 spatial_reuse: bool = True,
                 temporal_reuse: bool = True,
-                cache: Optional[Any] = None) -> PlanResult:
+                cache: Optional[Any] = None,
+                use_bound: bool = True) -> PlanResult:
     """Run the full TileLoom pipeline for one program on one target.
 
     ``spatial_reuse`` / ``temporal_reuse`` disable the respective passes for
@@ -149,6 +404,10 @@ def plan_kernel(program: TileProgram, hw: HardwareModel, *,
     ``cache`` is a :class:`repro.plancache.PlanCache` (duck-typed); a hit
     returns the persisted result without searching, a miss stores the fresh
     result after planning.
+
+    ``use_bound=False`` disables branch-and-bound pruning (every candidate is
+    fully estimated — the exhaustive oracle the equivalence tests compare
+    against; selections are identical either way).
     """
     budget = effective_budget(budget)
     if cache is not None:
@@ -159,25 +418,15 @@ def plan_kernel(program: TileProgram, hw: HardwareModel, *,
             return hit
     PLAN_CALLS["plan_kernel"] += 1
     t0 = time.perf_counter()
-    plans, n_mappings = enumerate_plans(program, hw, budget)
-    plans = _apply_ablations(plans, spatial_reuse, temporal_reuse)
-    if not plans:
+    stats = _SearchStats()
+    topk = _rank_streamed([program], hw, budget, spatial_reuse=spatial_reuse,
+                          temporal_reuse=temporal_reuse, use_bound=use_bound,
+                          catch_infeasible=False, stats=stats)
+    if not topk:
         raise RuntimeError(f"no feasible plan for {program.name} on {hw.name} "
                            f"(local memory too small for any tiling?)")
-    cands = [Candidate(p, estimate(p, hw,
-                                   pipeline_outer_levels=budget.pipeline_outer_levels))
-             for p in plans]
-    cands.sort(key=lambda c: c.cost.total_s)
-    topk = cands[:budget.top_k]
-    if profile:
-        for c in topk:
-            c.sim = simulate(c.plan, hw)
-        topk.sort(key=lambda c: c.final_s)
-    best = topk[0]
-    dt = time.perf_counter() - t0
-    result = PlanResult(kernel=program.name, hw_name=hw.name, best=best,
-                        topk=topk, n_candidates=len(cands),
-                        n_mappings=n_mappings, plan_seconds=dt)
+    result = _finish(topk, kernel=program.name, hw=hw,
+                     profile=profile, stats=stats, t0=t0)
     if cache is not None:
         cache.put_result([program], hw, budget, result, profile=profile,
                          spatial_reuse=spatial_reuse,
@@ -190,11 +439,18 @@ def plan_kernel_multi(programs: Sequence[TileProgram], hw: HardwareModel, *,
                       profile: bool = True,
                       spatial_reuse: bool = True,
                       temporal_reuse: bool = True,
-                      cache: Optional[Any] = None) -> PlanResult:
+                      cache: Optional[Any] = None,
+                      use_bound: bool = True) -> PlanResult:
     """Front-end block-shape exploration (S2.1): plan every candidate program
     (one per block shape) and keep the global best.  Ranking pools candidates
     across programs before the top-k profiling cut, exactly as the paper's
     front-end + planner interact.
+
+    Programs whose search raises a feasibility error (``RuntimeError`` /
+    ``ValueError``: capacity, validation, degenerate spaces) or yields no
+    plan are counted in ``PlanResult.n_infeasible_programs`` with the first
+    failure message appended to ``PlanResult.log``; any other exception is a
+    planner bug and propagates.
 
     With a ``cache``, a hit skips the search entirely; a miss warm-starts it
     by reordering the candidate programs around the nearest cached plan of
@@ -215,31 +471,17 @@ def plan_kernel_multi(programs: Sequence[TileProgram], hw: HardwareModel, *,
         programs = programs[:budget.max_programs]
     PLAN_CALLS["plan_kernel_multi"] += 1
     t0 = time.perf_counter()
-    all_c: List[Candidate] = []
-    n_mappings = 0
-    for prog in programs:
-        try:
-            plans, nm = enumerate_plans(prog, hw, budget)
-        except Exception:
-            continue
-        n_mappings += nm
-        plans = _apply_ablations(plans, spatial_reuse, temporal_reuse)
-        for p in plans:
-            all_c.append(Candidate(p, estimate(
-                p, hw, pipeline_outer_levels=budget.pipeline_outer_levels)))
-    if not all_c:
-        raise RuntimeError("no feasible plan across any block shape")
-    all_c.sort(key=lambda c: c.cost.total_s)
-    topk = all_c[:budget.top_k]
-    if profile:
-        for c in topk:
-            c.sim = simulate(c.plan, hw)
-        topk.sort(key=lambda c: c.final_s)
-    dt = time.perf_counter() - t0
-    result = PlanResult(kernel=programs[0].name.split("_b")[0] if programs else "?",
-                        hw_name=hw.name, best=topk[0], topk=topk,
-                        n_candidates=len(all_c), n_mappings=n_mappings,
-                        plan_seconds=dt)
+    stats = _SearchStats()
+    topk = _rank_streamed(programs, hw, budget, spatial_reuse=spatial_reuse,
+                          temporal_reuse=temporal_reuse, use_bound=use_bound,
+                          catch_infeasible=True, stats=stats)
+    if not topk:
+        raise RuntimeError("no feasible plan across any block shape"
+                           + (f" ({stats.first_failure})"
+                              if stats.first_failure else ""))
+    kernel = programs[0].name.split("_b")[0] if programs else "?"
+    result = _finish(topk, kernel=kernel, hw=hw,
+                     profile=profile, stats=stats, t0=t0)
     if cache is not None:
         cache.put_result(requested, hw, budget, result, profile=profile,
                          spatial_reuse=spatial_reuse,
@@ -249,13 +491,4 @@ def plan_kernel_multi(programs: Sequence[TileProgram], hw: HardwareModel, *,
 
 def _apply_ablations(plans: List[DataflowPlan], spatial: bool,
                      temporal: bool) -> List[DataflowPlan]:
-    out = []
-    for p in plans:
-        if not spatial and any(c.bcast_axes for c in p.loads):
-            continue
-        if not temporal:
-            n = len(p.mapping.temporal) + len(p.program.seq_dims)
-            if any(c.hoist.level != n for c in p.loads):
-                continue
-        out.append(p)
-    return out
+    return [p for p in plans if _ablation_ok(p, spatial, temporal)]

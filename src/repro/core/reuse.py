@@ -192,6 +192,45 @@ def store_placement(info: ReuseInfo, mapping: Mapping) -> StorePlacement:
     return StorePlacement(info.access, lvl, issues)
 
 
+def memop_demand(c: MemOpChoice, mapping: Mapping, hw: HardwareModel
+                 ) -> Tuple[Dict[str, float], float, float]:
+    """Array-wide per-issue resource demand of one load realization.
+
+    Returns ``(demand, dram_bytes, noc_bytes)`` where ``demand`` maps df
+    resource names (``dram``, interconnect names, ``l1``) to bytes moved per
+    issue summed over the whole core array.  This is the common currency of
+    the analytic model's contention rule (perfmodel), the planner's
+    branch-and-bound lower bound, and the dominance pruning below.
+    """
+    active = mapping.active_cores()
+    bytes_per_core = c.access.tile_bytes * c.hoist.tiles_per_issue
+    demand: Dict[str, float] = {}
+    noc_bytes = 0.0
+    if not c.bcast_axes:
+        # direct per-core global load: every active core fetches its tiles
+        dram = float(bytes_per_core * active)
+        demand["dram"] = dram
+        demand["l1"] = dram
+    else:
+        sizes = {a: s for a, s in mapping.hw_dims}
+        repl = math.prod(sizes[a] for a in c.bcast_axes)
+        producers = max(1, active // repl)
+        demand["dram"] = float(bytes_per_core * producers)
+        # staged multicast: along axis a_i, (s_i - 1) link-hops per receiving
+        # plane; earlier stages fan out to progressively more planes
+        planes = producers
+        for a in c.bcast_axes:
+            ic = hw.interconnect_along(a)
+            s = sizes[a]
+            leg = bytes_per_core * (s - 1) * planes
+            if ic is not None:
+                demand[ic.name] = demand.get(ic.name, 0.0) + leg
+            noc_bytes += leg
+            planes *= s
+        demand["l1"] = float(bytes_per_core * active)  # every core lands a copy
+    return demand, demand.get("dram", 0.0), noc_bytes
+
+
 def buffer_footprint_bytes(choices: Sequence[MemOpChoice],
                            stores: Sequence[StorePlacement],
                            mapping: Mapping) -> int:
@@ -211,6 +250,45 @@ def buffer_footprint_bytes(choices: Sequence[MemOpChoice],
     return total
 
 
+def _prune_dominated(opts: Sequence[MemOpChoice], mapping: Mapping,
+                     hw: HardwareModel) -> List[MemOpChoice]:
+    """Drop load realizations dominated on (dram_bytes, noc_bytes).
+
+    Safety constraint (see DESIGN_SEARCHPERF.md): byte totals alone do not
+    order *time* under either cost model — a hoist level changes overlap
+    structure (inner streams pipeline with compute, hoisted transfers
+    serialize), and equal byte totals can split differently across NoC
+    rings.  So an option is pruned only when a same-hoist-level alternative
+    is no worse on **every** per-resource demand (which subsumes dram/noc
+    totals), no worse on buffer footprint, and strictly better somewhere —
+    then the dominator wins at every composition of the analytic model and
+    the pruned option can never be part of a distinguishable-best plan.
+    Exact duplicates keep their first (stable-order) representative.
+    """
+    infos = [(c, memop_demand(c, mapping, hw)) for c in opts]
+    keep: List[MemOpChoice] = []
+    for i, (c, (dem_c, dram_c, noc_c)) in enumerate(infos):
+        dominated = False
+        for j, (a, (dem_a, dram_a, noc_a)) in enumerate(infos):
+            if j == i or a.hoist.level != c.hoist.level:
+                continue
+            if a.hoist.footprint_tiles > c.hoist.footprint_tiles:
+                continue
+            res = set(dem_a) | set(dem_c)
+            if any(dem_a.get(r, 0.0) > dem_c.get(r, 0.0) for r in res):
+                continue
+            strict = (dram_a < dram_c or noc_a < noc_c
+                      or a.hoist.footprint_tiles < c.hoist.footprint_tiles
+                      or any(dem_a.get(r, 0.0) < dem_c.get(r, 0.0)
+                             for r in res))
+            if strict or j < i:
+                dominated = True
+                break
+        if not dominated:
+            keep.append(c)
+    return keep
+
+
 def enumerate_memop_choices(
         mapping: Mapping, hw: HardwareModel, *,
         max_per_load: int = 12,
@@ -219,10 +297,32 @@ def enumerate_memop_choices(
     (broadcast pattern x hoist point) over all loads, pruned by local-memory
     capacity (paper: "discards options whose footprint exceeds the capacity
     of the hardware model")."""
+    combos, _ = memop_choices_with_stores(mapping, hw,
+                                          max_per_load=max_per_load,
+                                          capacity_fraction=capacity_fraction)
+    return combos
+
+
+def memop_choices_with_stores(
+        mapping: Mapping, hw: HardwareModel, *,
+        max_per_load: int = 12,
+        capacity_fraction: float = 1.0,
+        max_plans: Optional[int] = None
+) -> Tuple[Tuple[Tuple[MemOpChoice, ...], ...], Tuple[StorePlacement, ...]]:
+    """As :func:`enumerate_memop_choices`, but also return the (per-mapping
+    constant) store placements so streaming callers build plans without
+    re-running reuse analysis per combo.
+
+    ``max_plans`` is the caller's downstream combo-window size
+    (``SearchBudget.max_plans_per_mapping``); dominance pruning only engages
+    when the *unpruned* combo product fits inside it, so removing options can
+    never shift which combos that window admits (see `_prune_dominated`).
+    Without it (``None``) pruning stays off and the enumeration is exactly
+    the historical one."""
     infos = analyze_reuse(mapping, hw)
     load_infos = [i for i in infos if i.access.kind == "load"]
     store_infos = [i for i in infos if i.access.kind == "store"]
-    stores = [store_placement(i, mapping) for i in store_infos]
+    stores = tuple(store_placement(i, mapping) for i in store_infos)
     capacity = hw.local_capacity() * capacity_fraction
 
     sizes = dict(mapping.hw_dims)
@@ -242,8 +342,32 @@ def enumerate_memop_choices(
         opts.sort(key=lambda c: (_traffic(c), c.hoist.footprint_tiles))
         per_load.append(opts[:max_per_load])
 
+    # dominance pruning *after* the per-load truncation, and only when the
+    # full (unpruned) combo product already fits the caller's downstream
+    # window: then removal can never promote a previously-unexplored combo
+    # into `combos[:max_plans]`, so the explored set stays a subset of the
+    # historical one and only provably-no-better plans drop out
+    if max_plans is not None and \
+            math.prod(len(o) for o in per_load) <= max_plans:
+        per_load = [_prune_dominated(opts, mapping, hw) if len(opts) > 1
+                    else opts for opts in per_load]
+
+    # combo capacity filter with per-option precomputed buffer contributions:
+    # footprint = sum of per-load buffers (x2 when streamed innermost, paper
+    # Fig 4) + store staging + accumulators — identical arithmetic to
+    # buffer_footprint_bytes, hoisted out of the product loop
+    n = len(_nest_loops(mapping))
+    base = sum(s.access.tile_bytes for s in stores) \
+        + mapping.program.accumulator_bytes()
+    per_load_buf = [
+        [(c, c.hoist.footprint_tiles * c.access.tile_bytes
+          * (2 if c.hoist.level == n else 1)) for c in opts]
+        for opts in per_load]
+    budget_left = capacity - base
     plans = []
-    for combo in itertools.product(*per_load):
-        if buffer_footprint_bytes(combo, stores, mapping) <= capacity:
-            plans.append(tuple(combo))
-    return tuple(plans)
+    for combo in itertools.product(*per_load_buf):
+        if sum(b for _, b in combo) <= budget_left:
+            plans.append(tuple(c for c, _ in combo))
+            if max_plans is not None and len(plans) >= max_plans:
+                break       # caller only consumes combos[:max_plans]
+    return tuple(plans), stores

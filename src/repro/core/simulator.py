@@ -10,8 +10,9 @@ analytic model (perfmodel.py)           simulator (this file)
 --------------------------------------  -----------------------------------------
 aggregate bandwidth pools               per-DRAM-channel and per-NoC-ring
                                         contention, resolved per wave
-waves folded into closed-form loops     every wave executed; ragged final waves
-                                        and partially-active meshes cost real time
+waves folded into closed-form loops     every wave accounted for; ragged final
+                                        waves and partially-active meshes cost
+                                        real time
 no launch cost                          per-wave dispatch/barrier overhead
                                         (reproduces the paper's small-shape
                                         degradation, S3.2 / Fig 9)
@@ -20,6 +21,20 @@ steady-state pipeline formula           explicit fill/drain per wave, barrier at
 
 The simulator consumes the same :class:`DataflowPlan` and df hardware
 description as the model.
+
+Two entry points:
+
+* :func:`simulate` — the fast **wave-equivalence-class** path (exact).  A
+  wave's cost is fully determined by (a) the set of cores active in it and
+  (b) which temporal indices changed relative to the previous wave (that is
+  what triggers hoisted reloads).  Both are functions of a tiny per-wave
+  signature, so the full wave space collapses into a handful of equivalence
+  classes: each class is costed once and multiplied by its population (see
+  DESIGN_SEARCHPERF.md for the argument).  There is no sampling cut — the
+  old ``max_waves_exact`` stride decimation is retired.
+* :func:`simulate_reference` — the original wave-by-wave loop, kept as the
+  oracle for ``tests/test_search_equivalence.py`` (and for its stride-sample
+  mode, should anyone want the historical behaviour).
 """
 from __future__ import annotations
 
@@ -42,6 +57,7 @@ class SimResult:
     flops: float
     n_waves: int
     wave_overhead_s: float
+    n_wave_classes: int = 0       # equivalence classes costed (0 = reference path)
 
     @property
     def tflops(self) -> float:
@@ -77,17 +93,318 @@ def _is_active(plan: DataflowPlan, env: Dict[str, int]) -> bool:
     return True
 
 
+# --------------------------------------------------------------------------
+# Fast path: wave equivalence classes
+# --------------------------------------------------------------------------
+# A wave is one point of the temporal loop nest, iterated lexicographically
+# (outer loop first — the order _wave_envs produces).  Its cost depends on
+# exactly two things:
+#
+# 1. the **active-core set**: core c is active iff every grid index is in
+#    range.  Each grid dim's index is ``t_g * stride + digit(c)``, so per
+#    grid dim the active predicate depends only on that dim's own wave value
+#    — the overall active set is the intersection of per-loop core masks;
+# 2. the **changed-temporal mask**: a load hoisted to level L re-issues when
+#    any of the first min(L, n_temporal) temporal indices changed.  In
+#    lexicographic iteration the changed positions of a wave are exactly
+#    {j..n-1} where j is the wave's last non-zero digit (odometer carry), so
+#    "some of the first k loops changed" == (j < k); the first wave changes
+#    everything.
+#
+# Group waves by (per-loop mask, per-loop digit==0) and every member shares
+# both ingredients — cost one representative, multiply by the population.
+
+_LoopGroup = Tuple[int, bool, int]          # (core mask, digit == 0, population)
+
+
+def _loop_digit_groups(plan: DataflowPlan, coords: Sequence[Dict[str, int]]
+                       ) -> Tuple[int, List[List[_LoopGroup]]]:
+    """Per temporal loop, group digit values by the core mask they induce
+    (keeping value 0 separate — it feeds the odometer-carry bookkeeping).
+    Returns (static mask from waveless grid dims, per-loop group lists)."""
+    m = plan.mapping
+    prog = m.program
+    n_cores = len(coords)
+    full = (1 << n_cores) - 1
+    with_loop = {t.grid_dim for t in m.temporal}
+
+    static_mask = full
+    for d in prog.grid_dims:
+        if d.name in with_loop:
+            continue
+        expr = m.grid_index_expr(d.name)
+        mask = 0
+        for i, c in enumerate(coords):
+            if expr.evaluate(c) < d.extent:
+                mask |= 1 << i
+        static_mask &= mask
+
+    per_loop: List[List[_LoopGroup]] = []
+    for t in m.temporal:
+        d = prog.dim(t.grid_dim)
+        expr = m.grid_index_expr(t.grid_dim)
+        E = t.extent
+        agg: Dict[Tuple[int, bool], int] = {}
+        exotic = any(e is not None for e in (expr.mod, expr.floordiv))
+        if not exotic:
+            # grid index = v * stride + digit(core) is monotone in the wave
+            # value v, so each core has one threshold T below which it is
+            # active; the mask over cores changes at most n_cores times.
+            stride = expr.coeff_of(t.name)
+            thresholds = []
+            for c in coords:
+                base = expr.evaluate({**c, t.name: 0})
+                if stride <= 0:
+                    thresholds.append(E if base < d.extent else 0)
+                else:
+                    n_active = -(-(d.extent - base) // stride)  # ceil
+                    thresholds.append(max(0, min(E, n_active)))
+            cuts = sorted({T for T in thresholds if 0 < T < E})
+            for lo, hi in zip([0] + cuts, cuts + [E]):
+                if hi <= lo:
+                    continue
+                mask = 0
+                for i, T in enumerate(thresholds):
+                    if T > lo:
+                        mask |= 1 << i
+                if lo == 0:
+                    agg[(mask, True)] = agg.get((mask, True), 0) + 1
+                    if hi > 1:
+                        agg[(mask, False)] = agg.get((mask, False), 0) + hi - 1
+                else:
+                    agg[(mask, False)] = agg.get((mask, False), 0) + hi - lo
+        else:  # pragma: no cover - no current grid expr uses mod/floordiv
+            for v in range(E):
+                mask = 0
+                for i, c in enumerate(coords):
+                    if expr.evaluate({**c, t.name: v}) < d.extent:
+                        mask |= 1 << i
+                key = (mask, v == 0)
+                agg[key] = agg.get(key, 0) + 1
+        per_loop.append([(mask, zero, count)
+                         for (mask, zero), count in agg.items()])
+    return static_mask, per_loop
+
+
 def simulate(plan: DataflowPlan, hw: HardwareModel, *,
              launch_overhead_s: float = 20e-6,
-             wave_overhead_s: float = 2e-6,
-             max_waves_exact: int = 4096) -> SimResult:
-    """Simulate plan execution wave by wave.
+             wave_overhead_s: float = 2e-6) -> SimResult:
+    """Simulate plan execution by wave equivalence class (exact).
 
-    For each wave: per-core inner-loop time uses the double-buffered pipeline
+    For each class: per-core inner-loop time uses the double-buffered pipeline
     with *per-channel* / *per-ring* effective bandwidths resolved from the set
-    of cores actually active in this wave; the wave completes at the max over
-    cores (barrier), plus a dispatch overhead.  Hoisted transfers are charged
-    at the wave where their enclosing temporal index changes.
+    of cores active in its waves; a wave completes at the max over cores
+    (barrier), plus a dispatch overhead.  Hoisted transfers are charged at the
+    waves where their enclosing temporal index changes.  Identical math to
+    :func:`simulate_reference` at stride 1, without visiting every wave.
+    """
+    m = plan.mapping
+    prog = m.program
+    t_body = body_compute_seconds(plan, hw)
+    coords = _core_coords(plan)
+    n_cores = len(coords)
+    n_temporal = len(m.temporal)
+    n_loops = n_temporal + len(prog.seq_dims)
+    seq_extents = [d.extent for d in prog.seq_dims]
+    inner_I = seq_extents[-1] if seq_extents else 1
+    outer_seq = math.prod(seq_extents[:-1]) if len(seq_extents) > 1 else 1
+
+    dram_bw = hw.global_mem.bandwidth_gbps * 1e9
+    link_bw = {ic.name: ic.bandwidth_gbps * 1e9 for ic in hw.interconnects}
+    l1_bw = hw.local_mem.bandwidth_gbps * 1e9
+    sizes = dict(m.hw_dims)
+
+    inner_loads = [c for c in plan.loads if c.hoist.level == n_loops]
+    hoisted_loads = [c for c in plan.loads if c.hoist.level < n_loops]
+    inner_stores = [s for s in plan.stores if s.level == n_loops]
+    outer_stores = [s for s in plan.stores if s.level < n_loops]
+    k_cut = [min(c.hoist.level, n_temporal) for c in hoisted_loads]
+
+    static_mask, per_loop = _loop_digit_groups(plan, coords)
+    n_waves = math.prod(t.extent for t in m.temporal) if m.temporal else 1
+
+    def wave_cost(amask: int):
+        """Everything about one active-core set, per wave (no population):
+        barrier time, inner-op traffic, per-hoisted-load (time, dram, noc)
+        when its reload triggers, and the per-wave outer-store cost."""
+        active = [coords[i] for i in range(n_cores) if (amask >> i) & 1]
+
+        # --- contention census ---------------------------------------------
+        # DRAM channels: one user per fetching core per op.  NoC rings: one
+        # user per *multicast operation* per ring instance (a ring multicast
+        # carries the tile once regardless of receiver count).
+        chan_users: Dict[Tuple[int, ...], int] = {}
+        ring_users: Dict[Tuple[str, Tuple[Tuple[str, int], ...]], int] = {}
+        for c in inner_loads:
+            if not c.bcast_axes:
+                for core in active:
+                    ch = hw.channel_of_core(core)
+                    chan_users[ch] = chan_users.get(ch, 0) + 1
+            else:
+                seen_rings = set()
+                for core in active:
+                    # producer cores (coordinate 0 along every bcast axis)
+                    # fetch from DRAM once
+                    if all(core.get(a, 0) == 0 for a in c.bcast_axes):
+                        ch = hw.channel_of_core(core)
+                        chan_users[ch] = chan_users.get(ch, 0) + 1
+                    for a in c.bcast_axes:
+                        ic = hw.interconnect_along(a)
+                        if ic is None:
+                            continue
+                        other = tuple(sorted((k, v) for k, v in core.items()
+                                             if k != a))
+                        key = (id(c), ic.name, other)
+                        if key in seen_rings:
+                            continue
+                        seen_rings.add(key)
+                        rk = (ic.name, other)
+                        ring_users[rk] = ring_users.get(rk, 0) + 1
+
+        # --- per-core inner-loop time --------------------------------------
+        wave_time = 0.0
+        for core in active:
+            t_load = 0.0
+            for c in inner_loads:
+                tb = c.access.tile_bytes
+                if not c.bcast_axes:
+                    ch = hw.channel_of_core(core)
+                    users = max(1, chan_users.get(ch, 1))
+                    t_load += tb / (dram_bw / users)
+                else:
+                    t_leg = 0.0
+                    if all(core.get(a, 0) == 0 for a in c.bcast_axes):
+                        ch = hw.channel_of_core(core)
+                        users = max(1, chan_users.get(ch, 1))
+                        t_leg = tb / (dram_bw / users)
+                    t_noc = 0.0
+                    for a in c.bcast_axes:
+                        ic = hw.interconnect_along(a)
+                        if ic is None:
+                            continue
+                        other = tuple(sorted((k, v) for k, v in core.items()
+                                             if k != a))
+                        users = max(1, ring_users.get((ic.name, other), 1))
+                        t_noc += tb / (link_bw[ic.name] / users)
+                    t_load += max(t_leg, t_noc)       # cut-through pipelining
+                t_load += tb / l1_bw
+            t_store = 0.0
+            for s in inner_stores:
+                ch = hw.channel_of_core(core)
+                users = max(1, chan_users.get(ch, 1))
+                t_store += s.access.tile_bytes / (dram_bw / max(1, users))
+            core_t = pipelined_loop_time(inner_I, t_load, t_store, t_body)
+            core_t *= outer_seq
+            wave_time = max(wave_time, core_t)
+
+        # --- hoisted transfers at temporal boundaries ----------------------
+        n_active = len(active)
+        hoist_info = []
+        for c in hoisted_loads:
+            # reload when any temporal loop outer to the hoist level changed;
+            # loads hoisted *within* the sequential nest re-issue once per
+            # iteration of the seq loops outer to their level
+            seq_issues = (math.prod(seq_extents[:c.hoist.level - n_temporal])
+                          if c.hoist.level > n_temporal else 1)
+            tb = c.access.tile_bytes * c.hoist.tiles_per_issue * seq_issues
+            if c.bcast_axes:
+                repl = math.prod(sizes[a] for a in c.bcast_axes)
+                producers = max(1, n_active // repl)
+                t_dram = tb * producers / (dram_bw * hw.global_channels())
+                slowest_ring = min((link_bw[hw.interconnect_along(a).name]
+                                    for a in c.bcast_axes
+                                    if hw.interconnect_along(a)), default=None)
+                t_nc = tb / slowest_ring if slowest_ring else 0.0
+                t_c = max(t_dram, t_nc)
+                db = tb * producers
+                nb = 0.0
+                planes = producers
+                for a in c.bcast_axes:
+                    nb += tb * (sizes[a] - 1) * planes
+                    planes *= sizes[a]
+            else:
+                t_c = tb * n_active / (dram_bw * hw.global_channels())
+                db = tb * n_active
+                nb = 0.0
+            hoist_info.append((t_c, db, nb))
+
+        # --- traffic bookkeeping for inner ops -----------------------------
+        iters = inner_I * outer_seq
+        inner_dram = inner_noc = 0.0
+        for c in inner_loads:
+            tb = c.access.tile_bytes * iters
+            if c.bcast_axes:
+                repl = math.prod(sizes[a] for a in c.bcast_axes)
+                producers = max(1, n_active // repl)
+                inner_dram += tb * producers
+                planes = producers
+                for a in c.bcast_axes:
+                    inner_noc += tb * (sizes[a] - 1) * planes
+                    planes *= sizes[a]
+            else:
+                inner_dram += tb * n_active
+        for s in inner_stores:
+            inner_dram += s.access.tile_bytes * iters * n_active
+        ostore_t = ostore_dram = 0.0
+        for s in outer_stores:
+            ostore_dram += s.access.tile_bytes * n_active
+            ostore_t += s.access.tile_bytes * n_active \
+                / (dram_bw * hw.global_channels())
+        return wave_time, inner_dram, inner_noc, hoist_info, ostore_t, ostore_dram
+
+    total = 0.0
+    dram_bytes = 0.0
+    noc_bytes = 0.0
+    n_classes = 0
+    cache: Dict[int, tuple] = {}
+    for combo in itertools.product(*per_loop) if per_loop else [()]:
+        pop = 1
+        amask = static_mask
+        j = -1                          # last non-zero digit position
+        for i, (mask, zero, count) in enumerate(combo):
+            pop *= count
+            amask &= mask
+            if not zero:
+                j = i
+        first = j == -1                 # the all-zero wave (population 1)
+        n_classes += 1
+        if amask == 0:
+            total += wave_overhead_s * pop
+            continue
+        cost = cache.get(amask)
+        if cost is None:
+            cost = cache[amask] = wave_cost(amask)
+        wave_time, inner_dram, inner_noc, hoist_info, ostore_t, ostore_dram = cost
+        t_hoist = ostore_t
+        dram_bytes += (inner_dram + ostore_dram) * pop
+        noc_bytes += inner_noc * pop
+        for (t_c, db, nb), k in zip(hoist_info, k_cut):
+            if first or j < k:
+                t_hoist += t_c
+                dram_bytes += db * pop
+                noc_bytes += nb * pop
+        total += (wave_time + t_hoist + wave_overhead_s) * pop
+
+    total += launch_overhead_s        # per-kernel dispatch cost (paper S3.2:
+    #                                   small shapes dominated by overheads)
+    flops = prog.mat_flops()
+    return SimResult(total_s=total, dram_bytes=dram_bytes, noc_bytes=noc_bytes,
+                     flops=flops, n_waves=n_waves,
+                     wave_overhead_s=wave_overhead_s,
+                     n_wave_classes=n_classes)
+
+
+# --------------------------------------------------------------------------
+# Reference path: explicit wave-by-wave loop (test oracle)
+# --------------------------------------------------------------------------
+def simulate_reference(plan: DataflowPlan, hw: HardwareModel, *,
+                       launch_overhead_s: float = 20e-6,
+                       wave_overhead_s: float = 2e-6,
+                       max_waves_exact: int = 4096) -> SimResult:
+    """Simulate plan execution wave by wave (the original O(waves x cores x
+    ops) loop).  Exact below ``max_waves_exact`` waves; beyond that it
+    stride-samples and scales (the historical fidelity cut the class-based
+    :func:`simulate` retires).  Kept as the oracle for equivalence tests.
     """
     m = plan.mapping
     prog = m.program
@@ -100,8 +417,6 @@ def simulate(plan: DataflowPlan, hw: HardwareModel, *,
     inner_I = seq_extents[-1] if seq_extents else 1
     outer_seq = math.prod(seq_extents[:-1]) if len(seq_extents) > 1 else 1
 
-    # wave decimation for very large temporal spaces: simulate a stride-sample
-    # and scale (documented fidelity cut; exact below max_waves_exact)
     stride = max(1, len(waves) // max_waves_exact)
     sampled = waves[::stride]
     scale = len(waves) / len(sampled)

@@ -34,6 +34,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import time
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
@@ -110,6 +111,10 @@ class MeshPlanResult:
     plan: ShardingPlan
     cost: MeshPlanCost
     notes: str = ""
+    # search-efficiency counters of the ranking that produced this result
+    # (mirrors PlanResult.n_pruned/n_estimated at mesh granularity; the
+    # same stats for every result of one plan_mesh call)
+    stats: Optional[Dict[str, int]] = None
 
 
 def _mesh_sizes(multi_pod: bool) -> Dict[str, int]:
@@ -303,6 +308,7 @@ def _mesh_result_to_dict(r: MeshPlanResult) -> Dict[str, Any]:
                  "description": r.plan.description},
         "cost": dataclasses.asdict(r.cost),
         "notes": r.notes,
+        "stats": r.stats,
     }
 
 
@@ -312,7 +318,7 @@ def _mesh_result_from_dict(d: Dict[str, Any]) -> MeshPlanResult:
         rules=tuple((k, _axes_from_jsonable(v)) for k, v in d["plan"]["rules"]),
         description=d["plan"].get("description", ""))
     return MeshPlanResult(plan, MeshPlanCost(**d["cost"]),
-                          d.get("notes", ""))
+                          d.get("notes", ""), d.get("stats"))
 
 
 # bump whenever estimate_plan's cost logic or candidate_plans' plan set
@@ -364,6 +370,7 @@ def plan_mesh(api: ModelAPI, shape: ShapeConfig, tcfg: TrainConfig, *,
             except (KeyError, TypeError, ValueError):
                 pass
     out = []
+    t_rank = time.perf_counter()
     for plan in candidate_plans(api.cfg, shape):
         cost = estimate_plan(api, shape, plan, tcfg, multi_pod=multi_pod)
         out.append(MeshPlanResult(plan, cost))
@@ -374,6 +381,14 @@ def plan_mesh(api: ModelAPI, shape: ShapeConfig, tcfg: TrainConfig, *,
         r.notes = (f"pruned: {r.cost.hbm_bytes_per_chip / 1e9:.1f} GB/chip "
                    f"exceeds HBM (paper capacity rule)")
     ranked = feasible[:top_k] + infeasible
+    # mirror core PlanResult's search counters so registry/report tooling
+    # can treat both planners uniformly (capacity-infeasible plans are this
+    # planner's "pruned" set; every candidate pays a full estimate)
+    stats = {"n_candidates": len(out), "n_estimated": len(out),
+             "n_pruned": len(infeasible),
+             "rank_ms": int((time.perf_counter() - t_rank) * 1e3)}
+    for r in ranked:
+        r.stats = stats
     if store is not None and key is not None:
         store.put(key,
                   {"results": [_mesh_result_to_dict(r) for r in ranked]},

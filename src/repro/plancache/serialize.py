@@ -183,7 +183,8 @@ def cost_from_dict(d: Dict[str, Any]) -> PlanCost:
 
 
 _SIM_FIELDS = ("total_s", "dram_bytes", "noc_bytes", "flops", "n_waves",
-               "wave_overhead_s")
+               "wave_overhead_s", "n_wave_classes")
+_SIM_DEFAULTS = {"n_wave_classes": 0}      # absent in pre-fast-search entries
 
 
 def sim_to_dict(s: SimResult) -> Dict[str, Any]:
@@ -191,7 +192,10 @@ def sim_to_dict(s: SimResult) -> Dict[str, Any]:
 
 
 def sim_from_dict(d: Dict[str, Any]) -> SimResult:
-    return SimResult(**{f: d[f] for f in _SIM_FIELDS})
+    # only fields with an explicit default may be absent (older entries);
+    # anything else missing is a corrupt entry and should KeyError loudly
+    return SimResult(**{f: d.get(f, _SIM_DEFAULTS[f]) if f in _SIM_DEFAULTS
+                        else d[f] for f in _SIM_FIELDS})
 
 
 # --------------------------------------------------------------- results
@@ -215,6 +219,11 @@ def result_to_dict(r: PlanResult) -> Dict[str, Any]:
         "n_mappings": r.n_mappings,
         "plan_seconds": r.plan_seconds,
         "log": list(r.log),
+        "n_pruned": r.n_pruned,
+        "n_estimated": r.n_estimated,
+        "n_mappings_pruned": r.n_mappings_pruned,
+        "n_wave_classes": r.n_wave_classes,
+        "n_infeasible_programs": r.n_infeasible_programs,
     }
 
 
@@ -226,4 +235,9 @@ def result_from_dict(d: Dict[str, Any]) -> PlanResult:
         n_candidates=int(d["n_candidates"]),
         n_mappings=int(d["n_mappings"]),
         plan_seconds=float(d["plan_seconds"]),
-        log=[str(x) for x in d.get("log", [])])
+        log=[str(x) for x in d.get("log", [])],
+        n_pruned=int(d.get("n_pruned", 0)),
+        n_estimated=int(d.get("n_estimated", 0)),
+        n_mappings_pruned=int(d.get("n_mappings_pruned", 0)),
+        n_wave_classes=int(d.get("n_wave_classes", 0)),
+        n_infeasible_programs=int(d.get("n_infeasible_programs", 0)))
