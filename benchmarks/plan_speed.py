@@ -6,7 +6,10 @@ This table measures exactly that: for every GEMM (Fig 5) and FlashAttention
 (Fig 7) cell it runs the full two-step selection with no plan cache and
 reports
 
-* ``plan_seconds`` — cold wall time of ``plan_kernel_multi``;
+* ``plan_seconds`` — cold wall time of ``plan_kernel_multi`` at workers=1,
+  plus ``plan_seconds_workers`` for the same search sharded across the
+  process pool (``REPRO_PLANNER_WORKERS`` / ``--workers``), with the
+  aggregate speedup in the summary;
 * ``cands_per_s`` — ranked candidates per second;
 * branch-and-bound efficiency — candidates whose estimate the admissible
   lower bound skipped (``n_pruned``), whole mappings skipped by the compute
@@ -15,26 +18,35 @@ reports
 * simulator compression — wave equivalence classes costed vs waves
   simulated for the winning plan (``classes/waves``).
 
-Output: CSV rows on stdout plus ``BENCH_plan_speed.json`` in the working
-directory.  ``--check-golden <path>`` compares the best-plan selections
-against a checked-in golden summary and fails on drift (the CI perf-smoke
-job runs this under ``REPRO_FAST_SEARCH=1`` against
+Output: CSV rows on stdout plus ``BENCH_plan_speed.json``, always written
+at the repo root (regardless of CWD or flags) so the perf trajectory is
+tracked PR-over-PR.  ``--check-golden <path>`` compares the best-plan
+selections — of the sequential run *and* the sharded run — against a
+checked-in golden summary and fails on drift (the CI perf-smoke job runs
+this under ``REPRO_FAST_SEARCH=1`` + ``REPRO_PLANNER_WORKERS=2`` against
 ``benchmarks/golden_plan_speed.json``).
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
+from dataclasses import replace
 from typing import Dict, Optional
 
 from repro.core import (SearchBudget, fast_search_enabled,
                         flash_attention_program, get_hw, plan_kernel_multi)
+from repro.parallel.search_exec import resolve_workers
 
 from .common import HW_CONFIGS, geomean, row, tl_gemm
 from . import flash_table, gemm_table
 
-JSON_PATH = "BENCH_plan_speed.json"
+# the repo root (this file's parent's parent): the perf trajectory is
+# tracked PR-over-PR, so the table must land in one well-known place
+JSON_PATH = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "BENCH_plan_speed.json")
 FLASH_BUDGET = SearchBudget(top_k=5, max_plans_per_mapping=48)
 
 
@@ -55,19 +67,22 @@ def _cell(res) -> Dict:
     }
 
 
-def sweep(full: bool = False):
+def sweep(full: bool = False, workers: int = 1):
     cells: Dict[str, Dict] = {}
+    from .common import DEFAULT_BUDGET
+    gemm_budget = replace(DEFAULT_BUDGET, workers=workers)
+    flash_budget = replace(FLASH_BUDGET, workers=workers)
     for hw_name in HW_CONFIGS:
         hw = get_hw(hw_name)
         for (M, N, K) in gemm_table.shape_table(full):
-            res = tl_gemm(M, N, K, hw)
+            res = tl_gemm(M, N, K, hw, budget=gemm_budget)
             cells[f"gemm/{hw_name}/M{M}_N{N}_K{K}"] = _cell(res)
     hw = get_hw("wormhole_8x8")
     for bh, seq, head_dim in flash_table.shape_table():
         progs = [flash_attention_program(bh, seq, seq, head_dim, bq=bq,
                                          bkv=bkv)
                  for bq in (32, 64, 128) for bkv in (32, 64, 128)]
-        res = plan_kernel_multi(progs, hw, budget=FLASH_BUDGET)
+        res = plan_kernel_multi(progs, hw, budget=flash_budget)
         cells[f"flash/h{bh}_s{seq}"] = _cell(res)
     return cells
 
@@ -79,7 +94,7 @@ def summarize(cells: Dict[str, Dict]) -> Dict:
     n_pruned = sum(c["n_pruned"] for c in cells.values())
     compress = [c["n_waves"] / c["n_wave_classes"] for c in cells.values()
                 if c["n_wave_classes"]]
-    return {
+    out = {
         "fast_search": fast_search_enabled(),
         "n_cells": len(cells),
         "plan_seconds_total": total_s,
@@ -90,6 +105,16 @@ def summarize(cells: Dict[str, Dict]) -> Dict:
         "estimate_fraction": n_est / n_cand if n_cand else 0.0,
         "waves_per_class_geomean": geomean(compress),
     }
+    par = [c["plan_seconds_workers"] for c in cells.values()
+           if "plan_seconds_workers" in c]
+    if par:
+        total_w = sum(par)
+        out["plan_seconds_total_workers"] = total_w
+        out["workers_speedup"] = total_s / total_w if total_w > 0 else 0.0
+        out["workers_best_mismatches"] = sum(
+            1 for c in cells.values()
+            if c.get("best_workers") not in (None, c["best"]))
+    return out
 
 
 def check_golden(cells: Dict[str, Dict], path: str) -> int:
@@ -110,9 +135,15 @@ def check_golden(cells: Dict[str, Dict], path: str) -> int:
         if got is None:
             print(f"plan_speed/golden: MISSING cell {name}", file=sys.stderr)
             drift += 1
-        elif got["best"] != best:
+            continue
+        if got["best"] != best:
             print(f"plan_speed/golden: DRIFT in {name}\n"
                   f"  golden: {best}\n  got:    {got['best']}",
+                  file=sys.stderr)
+            drift += 1
+        if got.get("best_workers") not in (None, best):
+            print(f"plan_speed/golden: PARALLEL DRIFT in {name}\n"
+                  f"  golden:  {best}\n  workers: {got['best_workers']}",
                   file=sys.stderr)
             drift += 1
     extra = set(cells) - set(want)
@@ -122,35 +153,56 @@ def check_golden(cells: Dict[str, Dict], path: str) -> int:
     return drift
 
 
-def run(full: bool = False):
-    """Sweep, summarize, and write ``BENCH_plan_speed.json`` (the shared
-    core of the run.py suite entry and the standalone CLI)."""
-    cells = sweep(full)
+def run(full: bool = False, workers: Optional[int] = None):
+    """Sweep at workers=1, re-sweep sharded when workers resolve above 1,
+    summarize, and write ``BENCH_plan_speed.json`` at the repo root (the
+    shared core of the run.py suite entry and the standalone CLI)."""
+    w_n = resolve_workers(workers)
+    cells = sweep(full, workers=1)
+    if w_n > 1:
+        for name, c in sweep(full, workers=w_n).items():
+            cells[name]["plan_seconds_workers"] = c["plan_seconds"]
+            cells[name]["best_workers"] = c["best"]
     summary = summarize(cells)
+    summary["workers"] = w_n
     with open(JSON_PATH, "w") as f:
         json.dump({"cells": cells, "summary": summary}, f, indent=1,
                   sort_keys=True)
-    print(f"wrote {JSON_PATH} "
-          f"({summary['plan_seconds_total']:.1f}s cold planning, "
-          f"{summary['candidates_per_s']:.0f} candidates/s)",
-          file=sys.stderr)
+    msg = (f"wrote {JSON_PATH} "
+           f"({summary['plan_seconds_total']:.1f}s cold planning, "
+           f"{summary['candidates_per_s']:.0f} candidates/s")
+    if w_n > 1:
+        msg += (f"; workers={w_n}: "
+                f"{summary['plan_seconds_total_workers']:.1f}s, "
+                f"{summary['workers_speedup']:.2f}x, "
+                f"{summary['workers_best_mismatches']} best mismatches")
+    print(msg + ")", file=sys.stderr)
     return cells, summary
 
 
-def main(full: bool = False, cache=None) -> Dict:
+def main(full: bool = False, cache=None, workers: Optional[int] = None
+         ) -> Dict:
     """``cache`` is accepted for run.py uniformity but deliberately unused:
     this suite measures the cold search."""
-    cells, summary = run(full)
+    cells, summary = run(full, workers=workers)
     for name, c in sorted(cells.items()):
-        print(row(f"plan_speed/{name}", c["plan_seconds"] * 1e6,
-                  f"cands={c['n_candidates']};est={c['n_estimated']};"
-                  f"pruned={c['n_pruned']};"
-                  f"map_pruned={c['n_mappings_pruned']}/{c['n_mappings']};"
-                  f"classes={c['n_wave_classes']}/{c['n_waves']}"))
+        derived = (f"cands={c['n_candidates']};est={c['n_estimated']};"
+                   f"pruned={c['n_pruned']};"
+                   f"map_pruned={c['n_mappings_pruned']}/{c['n_mappings']};"
+                   f"classes={c['n_wave_classes']}/{c['n_waves']}")
+        if "plan_seconds_workers" in c:
+            derived += f";workers_us={c['plan_seconds_workers'] * 1e6:.0f}"
+        print(row(f"plan_speed/{name}", c["plan_seconds"] * 1e6, derived))
+    total_derived = (f"cands_per_s={summary['candidates_per_s']:.0f};"
+                     f"est_frac={summary['estimate_fraction']:.3f};"
+                     f"waves_per_class="
+                     f"{summary['waves_per_class_geomean']:.1f}")
+    if "workers_speedup" in summary:
+        total_derived += (f";workers={summary['workers']};"
+                          f"workers_speedup="
+                          f"{summary['workers_speedup']:.2f}")
     print(row("plan_speed/total", summary["plan_seconds_total"] * 1e6,
-              f"cands_per_s={summary['candidates_per_s']:.0f};"
-              f"est_frac={summary['estimate_fraction']:.3f};"
-              f"waves_per_class={summary['waves_per_class_geomean']:.1f}"))
+              total_derived))
     return summary
 
 
@@ -158,12 +210,15 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--full", action="store_true",
                     help="widen the GEMM sweep toward the paper's 140 cells")
+    ap.add_argument("--workers", type=int, default=None,
+                    help="worker count for the sharded pass (default: "
+                         "REPRO_PLANNER_WORKERS / cpu count; <=1 skips it)")
     ap.add_argument("--check-golden", metavar="PATH",
                     help="fail if best-plan selections drift from PATH")
     ap.add_argument("--write-golden", metavar="PATH",
                     help="write the golden best-plan summary to PATH")
     args = ap.parse_args()
-    cells, _ = run(args.full)
+    cells, _ = run(args.full, workers=args.workers)
     if args.write_golden:
         with open(args.write_golden, "w") as f:
             json.dump({"fast_search": fast_search_enabled(),

@@ -47,6 +47,10 @@ def main() -> None:
     selected = set(args.only or [])
     if args.suite:
         selected |= {s.strip() for s in args.suite.split(",") if s.strip()}
+    unknown = selected - set(suites)
+    if unknown:
+        ap.error(f"unknown suite name(s): {', '.join(sorted(unknown))}; "
+                 f"valid suites: {', '.join(sorted(suites))}")
     print("name,us_per_call,derived")
     for name, fn in suites.items():
         if selected and name not in selected:

@@ -12,9 +12,10 @@ from .mapping import Mapping, SpatialBind, TemporalLoop, enumerate_mappings
 from .perfmodel import (BoundContext, PlanCost, body_compute_seconds, estimate,
                         pipelined_loop_time, plan_lower_bound)
 from .plan import DataflowPlan, make_plan
+from .batch_cost import HAVE_NUMPY, MappingBatch, simulate_plans
 from .planner import (Candidate, PlanResult, SearchBudget, effective_budget,
                       fast_search_enabled, iter_plan_stream, plan_kernel,
-                      plan_kernel_multi)
+                      plan_kernel_multi, resolve_engine)
 from .program import (LoopDim, TensorSpec, TileAccess, TileOp, TileProgram,
                       block_shape_candidates, flash_attention_program,
                       fused_matmul_program, matmul_program)
@@ -34,7 +35,8 @@ __all__ = [
     "DataflowPlan", "make_plan",
     "Candidate", "PlanResult", "SearchBudget", "effective_budget",
     "fast_search_enabled", "iter_plan_stream", "plan_kernel",
-    "plan_kernel_multi",
+    "plan_kernel_multi", "resolve_engine",
+    "HAVE_NUMPY", "MappingBatch", "simulate_plans",
     "LoopDim", "TensorSpec", "TileAccess", "TileOp", "TileProgram",
     "block_shape_candidates", "flash_attention_program", "fused_matmul_program",
     "matmul_program",

@@ -76,10 +76,18 @@ class AffineExpr:
     # -- queries -------------------------------------------------------------
     @property
     def dims(self) -> frozenset:
-        return frozenset(k for k, v in self.coeffs if v != 0)
+        # dependence tests are the single hottest query of the reuse
+        # analysis (tens of thousands per planned kernel) — cache the dim
+        # set on the frozen instance (extra slot never enters dataclass
+        # eq/hash, which are generated from the declared fields)
+        ds = self.__dict__.get("_dims")
+        if ds is None:
+            ds = frozenset(k for k, v in self.coeffs if v != 0)
+            object.__setattr__(self, "_dims", ds)
+        return ds
 
     def depends_on(self, dim: str) -> bool:
-        return any(k == dim and v != 0 for k, v in self.coeffs)
+        return dim in self.dims
 
     def coeff_of(self, dim: str) -> int:
         for k, v in self.coeffs:
@@ -139,13 +147,16 @@ class AffineMap:
 
     @property
     def dims(self) -> frozenset:
-        out: frozenset = frozenset()
-        for e in self.exprs:
-            out = out | e.dims
-        return out
+        ds = self.__dict__.get("_dims")
+        if ds is None:
+            ds = frozenset()
+            for e in self.exprs:
+                ds = ds | e.dims
+            object.__setattr__(self, "_dims", ds)
+        return ds
 
     def depends_on(self, dim: str) -> bool:
-        return any(e.depends_on(dim) for e in self.exprs)
+        return dim in self.dims
 
     def evaluate(self, env: Mapping[str, int]) -> Tuple[int, ...]:
         return tuple(e.evaluate(env) for e in self.exprs)
@@ -225,5 +236,18 @@ def _is_mixed_radix(map_: AffineMap, extents: Mapping[str, int],
 def footprint_tiles(map_: AffineMap, extents: Mapping[str, int],
                     inner_dims: Sequence[str]) -> int:
     """Tiles that must be simultaneously live when a load of ``map_`` is hoisted
-    above all of ``inner_dims`` (paper's hoisting rule, Listing 4)."""
-    return distinct_points(map_, extents, inner_dims)
+    above all of ``inner_dims`` (paper's hoisting rule, Listing 4).
+
+    Memoized per map instance: the result depends only on the ranging dims
+    the map reads and their extents, and the reuse analysis shares rewritten
+    maps across mappings (``Mapping.rewrite_access``), so repeated hoists of
+    the same access shape hit the cache."""
+    key = tuple((d, extents[d]) for d in inner_dims if d in map_.dims)
+    cache = map_.__dict__.get("_fp_cache")
+    if cache is None:
+        cache = {}
+        object.__setattr__(map_, "_fp_cache", cache)
+    hit = cache.get(key)
+    if hit is None:
+        hit = cache[key] = distinct_points(map_, extents, inner_dims)
+    return hit

@@ -196,13 +196,25 @@ class HardwareModel:
 
     # -- interconnect queries --------------------------------------------------
     def interconnect_along(self, axis: str) -> Optional[Interconnect]:
-        for ic in self.interconnects:
-            if ic.src == self.local_mem.name and ic.axis(self.core.scaleout) == axis:
-                return ic
-        return None
+        # queried per load option per mapping (the reuse analysis and both
+        # cost engines); the answer is a pure function of the immutable
+        # interconnect tuple, so memoize per instance
+        cache = self.__dict__.get("_ic_along")
+        if cache is None:
+            cache = self.__dict__["_ic_along"] = {}
+        if axis not in cache:
+            cache[axis] = next(
+                (ic for ic in self.interconnects
+                 if ic.src == self.local_mem.name
+                 and ic.axis(self.core.scaleout) == axis), None)
+        return cache[axis]
 
     def noc_axes(self) -> Tuple[str, ...]:
-        return tuple(a for a, _ in self.mesh_dims if self.interconnect_along(a))
+        axes = self.__dict__.get("_noc_axes")
+        if axes is None:
+            axes = self.__dict__["_noc_axes"] = tuple(
+                a for a, _ in self.mesh_dims if self.interconnect_along(a))
+        return axes
 
     def links_of(self, ic: Interconnect) -> int:
         """Total number of physical links the interconnect declares (one per

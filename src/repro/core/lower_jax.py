@@ -20,7 +20,8 @@ warm``) resolves repeat shapes without invoking the planner at all.
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+import logging
+from typing import Dict, Tuple
 
 import jax.numpy as jnp
 
@@ -32,9 +33,23 @@ from .planner import (SearchBudget, effective_budget, fast_search_enabled,
                       plan_kernel_multi)
 from .program import flash_attention_program, matmul_program
 
+log = logging.getLogger(__name__)
+
 MXU_GRANULE = 128          # MXU systolic dimension: blocks must be multiples
 _CHIP_BUDGET = SearchBudget(top_k=1, max_plans_per_mapping=24,
                             max_mappings=16)
+
+# per-template count of planner failures that silently served the fallback
+# block shape — inspectable so deployments notice a degraded planner instead
+# of just running slower (each increment also logs a one-line warning)
+PLANNER_FALLBACKS: Dict[str, int] = {}
+
+
+def planner_fallback_count(template: str | None = None) -> int:
+    """Fallback-block events since process start (or cache clear)."""
+    if template is not None:
+        return PLANNER_FALLBACKS.get(template, 0)
+    return sum(PLANNER_FALLBACKS.values())
 
 
 def _pow2_options(limit: int, lo: int = MXU_GRANULE, hi: int = 1024):
@@ -83,7 +98,13 @@ def _cached_blocks(template: str, params: dict, shape: Tuple[int, ...],
                                             progs)
     try:
         res = plan_kernel_multi(progs, hw, budget=budget, profile=False)
-    except RuntimeError:
+    except RuntimeError as e:
+        # infeasible space (e.g. no tiling fits VMEM) — serve the safe
+        # fallback, but never silently: count it and say which request
+        PLANNER_FALLBACKS[template] = PLANNER_FALLBACKS.get(template, 0) + 1
+        log.warning("planner fallback for %s shape=%s: %s "
+                    "(serving fallback blocks %s)", template, shape, e,
+                    fallback)
         return fallback
     blocks = pick(res)
     best_prog = res.best.plan.program
@@ -179,3 +200,4 @@ def clear_block_caches() -> None:
     process against a warm disk cache)."""
     _gemm_blocks_memo.cache_clear()
     _flash_blocks_memo.cache_clear()
+    PLANNER_FALLBACKS.clear()

@@ -86,9 +86,14 @@ class Mapping:
         return tuple((n, s) for n, s in self.hw_dims if n not in used)
 
     def active_cores(self) -> int:
-        n = 1
-        for b in self.spatial:
-            n *= min(b.hw_size, self.program.dim(b.grid_dim).extent)
+        # called once per load option by the demand model — cache on the
+        # frozen instance (does not enter dataclass eq/hash)
+        n = self.__dict__.get("_active_cores")
+        if n is None:
+            n = 1
+            for b in self.spatial:
+                n *= min(b.hw_size, self.program.dim(b.grid_dim).extent)
+            object.__setattr__(self, "_active_cores", n)
         return n
 
     def total_cores(self) -> int:
@@ -114,7 +119,22 @@ class Mapping:
 
         With binds [h1(s1), h2(s2)] (tiling order: h1 outer) and wave t:
             g = t * s1 * s2 + h1 * s2 + h2
+
+        Memoized per instance: the reuse analysis rewrites every access of
+        every mapping through these expressions.
         """
+        cache = self.__dict__.get("_grid_exprs")
+        if cache is None:
+            cache = {}
+            object.__setattr__(self, "_grid_exprs", cache)
+        hit = cache.get(grid_dim)
+        if hit is not None:
+            return hit
+        expr = self._grid_index_expr(grid_dim)
+        cache[grid_dim] = expr
+        return expr
+
+    def _grid_index_expr(self, grid_dim: str) -> AffineExpr:
         binds = self.spatial_for(grid_dim)
         terms: Dict[str, int] = {}
         stride = 1
@@ -135,11 +155,28 @@ class Mapping:
         return None
 
     def rewrite_access(self, access: TileAccess) -> AffineMap:
-        """Substitute grid dims with their (wave, spatial) reconstruction."""
+        """Substitute grid dims with their (wave, spatial) reconstruction.
+
+        Cached on the (shared, frozen) access object keyed by the grid
+        expressions actually substituted: mappings that reconstruct the
+        access's grid dims identically — very common across the enumerated
+        space — share one rewritten map object (which in turn lets the
+        downstream footprint analysis memoize per rewritten map).
+        """
         m = access.index
-        for d in self.program.grid_dims:
-            if m.depends_on(d.name):
-                m = m.substitute(d.name, self.grid_index_expr(d.name))
+        subs = tuple((d.name, self.grid_index_expr(d.name))
+                     for d in self.program.grid_dims
+                     if m.depends_on(d.name))
+        cache = access.__dict__.get("_rewrite_cache")
+        if cache is None:
+            cache = {}
+            object.__setattr__(access, "_rewrite_cache", cache)
+        hit = cache.get(subs)
+        if hit is not None:
+            return hit
+        for name, expr in subs:
+            m = m.substitute(name, expr)
+        cache[subs] = m
         return m
 
     # -- loop nest (for reuse analysis & printing) --------------------------------

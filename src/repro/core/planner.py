@@ -19,6 +19,23 @@ pay for a full :func:`~repro.core.perfmodel.estimate`.  Ties are broken by
 stream order, so the selected top-k is bit-identical to ranking every
 candidate and stable-sorting by model cost.
 
+Two execution backends evaluate that candidate space (selection is
+identical on either; see DESIGN_SEARCHPERF.md "Batched cost engine"):
+
+* ``engine="batch"`` (default when numpy is available) — the
+  structure-of-arrays engine (:mod:`repro.core.batch_cost`) bounds and
+  estimates every combo of a mapping in vectorized numpy ops, bit-identical
+  to the scalar model;
+* ``engine="scalar"`` — the historical per-candidate loop (the oracle the
+  equivalence tests compare against).
+
+``plan_kernel_multi`` additionally shards its program list across a
+process pool (``SearchBudget.workers`` / ``REPRO_PLANNER_WORKERS``,
+default ``os.cpu_count()``; ``0``/``1`` = inline) — each worker ranks its
+chunk and the per-program top-k are merged by (cost, canonical index), so
+the result is bit-identical to the sequential search regardless of worker
+count (``repro.parallel.search_exec``).
+
 ``plan_kernel`` is the public entry point used by benchmarks and the JAX
 lowering layer.
 """
@@ -30,8 +47,9 @@ import time
 from dataclasses import dataclass, field, replace
 from typing import Any, Iterator, List, Optional, Sequence, Tuple
 
+from . import batch_cost
 from .hw import HardwareModel
-from .mapping import Mapping, enumerate_mappings
+from .mapping import Mapping, SpatialBind, enumerate_mappings
 from .perfmodel import BoundContext, PlanCost, body_compute_seconds, estimate
 from .plan import DataflowPlan
 from .program import TileProgram
@@ -44,6 +62,10 @@ class Candidate:
     plan: DataflowPlan
     cost: PlanCost                       # analytic (ranking) cost
     sim: Optional[SimResult] = None      # "profiled" cost (top-k only)
+    # canonical (program, mapping, combo) stream indices — the deterministic
+    # tie-break key; carried explicitly so process-sharded searches merge
+    # their per-chunk top-k exactly as the sequential stream order would
+    index: Optional[Tuple[int, int, int]] = None
 
     @property
     def final_s(self) -> float:
@@ -100,9 +122,15 @@ class SearchBudget:
     max_programs: int = 0               # cap block-shape candidates (0 = all);
                                         # honored by plan_kernel_multi after
                                         # warm-start ordering
+    # process-parallel search sharding (plan_kernel_multi): None = resolve
+    # from REPRO_PLANNER_WORKERS (default os.cpu_count()); 0/1 = inline.
+    # Selection-invariant, so it is excluded from plan-cache keys
+    # (plancache.keying.budget_signature).
+    workers: Optional[int] = None
 
 
 FAST_SEARCH_ENV = "REPRO_FAST_SEARCH"
+ENGINE_ENV = "REPRO_COST_ENGINE"        # "batch" (default) | "scalar"
 
 # invocation counters (tests and the plancache acceptance criteria assert a
 # cache hit performs zero planner invocations)
@@ -112,6 +140,19 @@ PLAN_CALLS = {"plan_kernel": 0, "plan_kernel_multi": 0}
 def fast_search_enabled() -> bool:
     return os.environ.get(FAST_SEARCH_ENV, "").lower() in ("1", "true", "on",
                                                            "yes")
+
+
+def resolve_engine(engine: Optional[str] = None) -> str:
+    """The cost backend actually used: the caller's choice, else
+    ``REPRO_COST_ENGINE``, else ``batch`` — degraded to ``scalar`` when
+    numpy is unavailable.  Never part of cache keys: both engines select
+    identical plans."""
+    e = (engine or os.environ.get(ENGINE_ENV, "") or "batch").lower()
+    if e not in ("batch", "scalar"):
+        raise ValueError(f"unknown cost engine {e!r} (batch|scalar)")
+    if e == "batch" and not batch_cost.HAVE_NUMPY:
+        e = "scalar"
+    return e
 
 
 def effective_budget(budget: Optional[SearchBudget] = None) -> SearchBudget:
@@ -134,10 +175,101 @@ def effective_budget(budget: Optional[SearchBudget] = None) -> SearchBudget:
 # --------------------------------------------------------------------------
 # Streaming candidate generation
 # --------------------------------------------------------------------------
+def _swap_pairs(hw: HardwareModel) -> List[Tuple[str, str]]:
+    """Mesh-dim pairs the hardware is exactly symmetric under: equal sizes,
+    equal ring bandwidth, and a DRAM-channel map equivariant with the swap
+    (channels permute consistently).  Relabeling such dims permutes cores
+    and channels without changing any contention census, so a mapping and
+    its swapped image cost bit-identically under both the analytic model
+    and the wave-class simulator (the estimate memo's interconnect
+    canonicalization rests on the same fact).  Cached per instance."""
+    pairs = hw.__dict__.get("_swap_pairs")
+    if pairs is not None:
+        return pairs
+    import itertools as _it
+    dims = hw.mesh_dims
+    pairs = []
+    for i in range(len(dims)):
+        for j in range(i + 1, len(dims)):
+            (d1, s1), (d2, s2) = dims[i], dims[j]
+            if s1 != s2 or s1 <= 1:
+                continue
+            ic1, ic2 = hw.interconnect_along(d1), hw.interconnect_along(d2)
+            if (ic1 is None) != (ic2 is None):
+                continue
+            if ic1 is not None and ic1.bandwidth_gbps != ic2.bandwidth_gbps:
+                continue
+            perm: dict = {}
+            ok = True
+            for pt in _it.product(*[range(s) for _, s in dims]):
+                env = dict(zip([d for d, _ in dims], pt))
+                sw = dict(env)
+                sw[d1], sw[d2] = env[d2], env[d1]
+                ch, ch_sw = hw.channel_of_core(env), hw.channel_of_core(sw)
+                if perm.setdefault(ch, ch_sw) != ch_sw:
+                    ok = False
+                    break
+            if ok and len(set(perm.values())) == len(perm):
+                pairs.append((d1, d2))
+    hw.__dict__["_swap_pairs"] = pairs
+    return pairs
+
+
+def _dedup_twin_mappings(mappings: Tuple[Mapping, ...],
+                         hw: HardwareModel) -> Tuple[Mapping, ...]:
+    """Drop mappings that provably cost bit-identically to an earlier one:
+
+    * binds to size-1 hardware dims without an interconnect (wormhole_1x8's
+      ``x``, the TPU chip's ``u``) contribute digit 0 with any stride —
+      every cost input (grid indices, reuse annotations, utilization, wave
+      structure) is unchanged with or without them;
+    * on meshes symmetric under a dim swap (:func:`_swap_pairs`, e.g. the
+      8x8 Wormhole's ``x``/``y``), a mapping and its relabeled image are
+      the same machine program on permuted cores.
+
+    Twin candidates tie exactly, and ties already resolve to the earliest
+    twin's canonical stream index, so skipping the later twins changes no
+    selection — only the redundant enumeration and ranking work the
+    estimate memo used to absorb one layer further down (~3x of the 1x8
+    space, ~2x of the symmetric-mesh space).
+    """
+    ones = {d for d, s in hw.mesh_dims
+            if s == 1 and hw.interconnect_along(d) is None}
+    pairs = _swap_pairs(hw)
+    if not ones and not pairs:
+        return mappings
+
+    def reduced(spatial):
+        return tuple(b for b in spatial if b.hw_dim not in ones) \
+            if ones else spatial
+
+    seen = set()
+    out = []
+    for m in mappings:
+        key = (reduced(m.spatial), m.temporal)
+        if key in seen:
+            continue
+        dup = False
+        for d1, d2 in pairs:
+            swap = {d1: d2, d2: d1}
+            sw_key = (tuple(SpatialBind(swap.get(b.hw_dim, b.hw_dim),
+                                        b.hw_size, b.grid_dim)
+                            for b in key[0]), m.temporal)
+            if sw_key in seen:
+                dup = True
+                break
+        if dup:
+            continue
+        seen.add(key)
+        out.append(m)
+    return tuple(out)
+
+
 def _filtered_mappings(program: TileProgram, hw: HardwareModel,
                        budget: SearchBudget) -> Tuple[Mapping, ...]:
-    mappings = enumerate_mappings(program, hw,
-                                  max_candidates=budget.max_mappings)
+    mappings = _dedup_twin_mappings(
+        enumerate_mappings(program, hw, max_candidates=budget.max_mappings),
+        hw)
     if budget.min_utilization > 0:
         best_u = max((m.utilization() for m in mappings), default=0.0)
         mappings = tuple(m for m in mappings
@@ -178,14 +310,21 @@ def enumerate_plans(program: TileProgram, hw: HardwareModel,
     return plans, len(mappings)
 
 
-def _ablation_ok(plan: DataflowPlan, spatial: bool, temporal: bool) -> bool:
-    if not spatial and any(c.bcast_axes for c in plan.loads):
+def _combo_ablation_ok(mapping: Mapping, combo, spatial: bool,
+                       temporal: bool) -> bool:
+    """The ablation filter at combo level — the single predicate both cost
+    engines apply, so their candidate sets cannot diverge."""
+    if not spatial and any(c.bcast_axes for c in combo):
         return False
     if not temporal:
-        n = len(plan.mapping.temporal) + len(plan.program.seq_dims)
-        if any(c.hoist.level != n for c in plan.loads):
+        n = len(mapping.temporal) + len(mapping.program.seq_dims)
+        if any(c.hoist.level != n for c in combo):
             return False
     return True
+
+
+def _ablation_ok(plan: DataflowPlan, spatial: bool, temporal: bool) -> bool:
+    return _combo_ablation_ok(plan.mapping, plan.loads, spatial, temporal)
 
 
 # --------------------------------------------------------------------------
@@ -211,6 +350,12 @@ class _SearchStats:
 # but both are float expressions; the margin keeps ulp-level rounding from
 # ever discarding a true top-k member (costs this close are re-estimated)
 _BOUND_SLACK = 1e-9
+
+# smallest combo list worth the SoA setup: below this the scalar path (dict
+# bounds + the cross-mapping estimate memo) is cheaper than building numpy
+# tables.  Purely an execution choice — both paths produce bit-identical
+# costs, so the threshold can never change the selected top-k.
+_BATCH_MIN_COMBOS = 10
 
 
 def _cost_signature(ctx: "BoundContext", plan: DataflowPlan,
@@ -247,11 +392,68 @@ def _cost_signature(ctx: "BoundContext", plan: DataflowPlan,
             ctx.active_cores, tr_sig, buf_sig)
 
 
+def _rank_mapping_batch(p_idx: int, m_idx: int, mapping: Mapping, stores,
+                        combos, hw: HardwareModel, budget: SearchBudget, *,
+                        spatial_reuse: bool, temporal_reuse: bool,
+                        use_bound: bool, heap: List[tuple],
+                        stats: _SearchStats, demands=None) -> int:
+    """Evaluate every combo of one mapping through the SoA batch engine and
+    push survivors into the shared top-k heap.  Returns the number of
+    candidates that contributed (streamed past the ablation filter).
+
+    Heap semantics match the scalar loop exactly: candidates enter in
+    canonical combo order with (cost, canonical-index) keys, so ties
+    resolve identically.  The bound prune uses the k-th best *at mapping
+    entry* — a (weakly) larger threshold than the scalar loop's
+    per-candidate refresh, which can only prune less, never differently.
+    """
+    k = budget.top_k
+    pol = budget.pipeline_outer_levels
+    if spatial_reuse and temporal_reuse:
+        ok_idx = list(range(len(combos)))
+    else:
+        ok_idx = [ci for ci, combo in enumerate(combos)
+                  if _combo_ablation_ok(mapping, combo, spatial_reuse,
+                                        temporal_reuse)]
+    stats.n_candidates += len(ok_idx)
+    if not ok_idx:
+        return 0
+    batch = batch_cost.MappingBatch(mapping, stores, hw,
+                                    [combos[ci] for ci in ok_idx],
+                                    pipeline_outer_levels=pol,
+                                    demands=demands)
+    np = batch_cost.np
+    rows = np.arange(len(ok_idx))
+    if use_bound and len(heap) >= k:
+        worst = -heap[0][0]
+        keep = batch.lower_bounds() <= worst * (1.0 + _BOUND_SLACK)
+        stats.n_pruned += int((~keep).sum())
+        rows = rows[keep]
+    if not len(rows):
+        return len(ok_idx)
+    costs = batch.estimate_rows(rows)
+    stats.n_estimated += len(rows)
+    for j, r in enumerate(rows):
+        c_idx = ok_idx[int(r)]
+        total = float(costs.total[j])
+        key = (-total, (-p_idx, -m_idx, -c_idx))
+        if len(heap) >= k and not key > heap[0][:2]:
+            continue
+        cand = Candidate(DataflowPlan(mapping, combos[c_idx], stores),
+                         costs.cost(j), index=(p_idx, m_idx, c_idx))
+        item = key + (cand,)
+        if len(heap) < k:
+            heapq.heappush(heap, item)
+        else:
+            heapq.heapreplace(heap, item)
+    return len(ok_idx)
+
+
 def _rank_streamed(programs: Sequence[TileProgram], hw: HardwareModel,
                    budget: SearchBudget, *, spatial_reuse: bool,
                    temporal_reuse: bool, use_bound: bool,
-                   catch_infeasible: bool, stats: _SearchStats
-                   ) -> List[Candidate]:
+                   catch_infeasible: bool, stats: _SearchStats,
+                   engine: Optional[str] = None) -> List[Candidate]:
     """Rank the pooled candidate space of ``programs``, returning the top-k
     by (model cost, canonical stream order) — bit-identical to estimating
     every candidate and stable-sorting, but:
@@ -271,6 +473,7 @@ def _rank_streamed(programs: Sequence[TileProgram], hw: HardwareModel,
     * bit-equal estimates (size-1-bind twins, symmetric-mesh x<->y twins)
       are shared through an exact cost-signature memo.
     """
+    engine = resolve_engine(engine)
     k = budget.top_k
     pol = budget.pipeline_outer_levels
     heap: List[tuple] = []   # (-cost, (-p, -m, -c), Candidate): max-heap
@@ -305,10 +508,11 @@ def _rank_streamed(programs: Sequence[TileProgram], hw: HardwareModel,
                 stats.n_mappings_pruned += 1
                 floor_pruned += 1
                 continue
+            demands = {} if engine == "batch" else None
             try:
                 combos, stores = memop_choices_with_stores(
                     mapping, hw, max_per_load=budget.max_per_load,
-                    max_plans=budget.max_plans_per_mapping)
+                    max_plans=budget.max_plans_per_mapping, demands=demands)
             except (RuntimeError, ValueError) as e:
                 if not catch_infeasible:
                     raise
@@ -319,6 +523,18 @@ def _rank_streamed(programs: Sequence[TileProgram], hw: HardwareModel,
                     stats.first_failure = f"{prog.name}: {e}"
                 break                     # drop the rest of this program
             combos = combos[:budget.max_plans_per_mapping]
+            if engine == "batch" and len(combos) >= _BATCH_MIN_COMBOS:
+                room = budget.max_candidates - n_streamed
+                take = combos[:room] if len(combos) > room else combos
+                n_streamed += len(take)
+                contributed += _rank_mapping_batch(
+                    p_idx, m_idx, mapping, stores, take, hw, budget,
+                    spatial_reuse=spatial_reuse,
+                    temporal_reuse=temporal_reuse, use_bound=use_bound,
+                    heap=heap, stats=stats, demands=demands)
+                if n_streamed >= budget.max_candidates:
+                    break
+                continue
             ctx: Optional[BoundContext] = None
             for c_idx, combo in enumerate(combos):
                 n_streamed += 1
@@ -347,7 +563,8 @@ def _rank_streamed(programs: Sequence[TileProgram], hw: HardwareModel,
                             est_memo[key] = cost
                             stats.n_estimated += 1
                         item = (-cost.total_s, (-p_idx, -m_idx, -c_idx),
-                                Candidate(plan, cost))
+                                Candidate(plan, cost,
+                                          index=(p_idx, m_idx, c_idx)))
                         if len(heap) < k:
                             heapq.heappush(heap, item)
                         elif item > heap[0]:
@@ -366,10 +583,16 @@ def _rank_streamed(programs: Sequence[TileProgram], hw: HardwareModel,
 
 
 def _finish(topk: List[Candidate], *, kernel: str, hw: HardwareModel,
-            profile: bool, stats: _SearchStats, t0: float) -> PlanResult:
+            profile: bool, stats: _SearchStats, t0: float,
+            engine: Optional[str] = None) -> PlanResult:
     if profile:
-        for c in topk:
-            c.sim = simulate(c.plan, hw)
+        if resolve_engine(engine) == "batch":
+            sims = batch_cost.simulate_plans([c.plan for c in topk], hw)
+            for c, s in zip(topk, sims):
+                c.sim = s
+        else:
+            for c in topk:
+                c.sim = simulate(c.plan, hw)
         topk.sort(key=lambda c: c.final_s)
     best = topk[0]
     log = []
@@ -393,7 +616,8 @@ def plan_kernel(program: TileProgram, hw: HardwareModel, *,
                 spatial_reuse: bool = True,
                 temporal_reuse: bool = True,
                 cache: Optional[Any] = None,
-                use_bound: bool = True) -> PlanResult:
+                use_bound: bool = True,
+                engine: Optional[str] = None) -> PlanResult:
     """Run the full TileLoom pipeline for one program on one target.
 
     ``spatial_reuse`` / ``temporal_reuse`` disable the respective passes for
@@ -408,6 +632,10 @@ def plan_kernel(program: TileProgram, hw: HardwareModel, *,
     ``use_bound=False`` disables branch-and-bound pruning (every candidate is
     fully estimated — the exhaustive oracle the equivalence tests compare
     against; selections are identical either way).
+
+    ``engine`` picks the cost backend (``"batch"``/``"scalar"``, see
+    :func:`resolve_engine`); selection is identical on either, so the
+    choice never enters cache keys.
     """
     budget = effective_budget(budget)
     if cache is not None:
@@ -421,12 +649,12 @@ def plan_kernel(program: TileProgram, hw: HardwareModel, *,
     stats = _SearchStats()
     topk = _rank_streamed([program], hw, budget, spatial_reuse=spatial_reuse,
                           temporal_reuse=temporal_reuse, use_bound=use_bound,
-                          catch_infeasible=False, stats=stats)
+                          catch_infeasible=False, stats=stats, engine=engine)
     if not topk:
         raise RuntimeError(f"no feasible plan for {program.name} on {hw.name} "
                            f"(local memory too small for any tiling?)")
     result = _finish(topk, kernel=program.name, hw=hw,
-                     profile=profile, stats=stats, t0=t0)
+                     profile=profile, stats=stats, t0=t0, engine=engine)
     if cache is not None:
         cache.put_result([program], hw, budget, result, profile=profile,
                          spatial_reuse=spatial_reuse,
@@ -440,7 +668,8 @@ def plan_kernel_multi(programs: Sequence[TileProgram], hw: HardwareModel, *,
                       spatial_reuse: bool = True,
                       temporal_reuse: bool = True,
                       cache: Optional[Any] = None,
-                      use_bound: bool = True) -> PlanResult:
+                      use_bound: bool = True,
+                      engine: Optional[str] = None) -> PlanResult:
     """Front-end block-shape exploration (S2.1): plan every candidate program
     (one per block shape) and keep the global best.  Ranking pools candidates
     across programs before the top-k profiling cut, exactly as the paper's
@@ -456,6 +685,12 @@ def plan_kernel_multi(programs: Sequence[TileProgram], hw: HardwareModel, *,
     by reordering the candidate programs around the nearest cached plan of
     the same kernel template (then ``budget.max_programs``, if set, trims
     the tail of the reordered list).
+
+    With ``budget.workers`` (or ``REPRO_PLANNER_WORKERS``) above 1 the
+    program list is sharded across a process pool
+    (``repro.parallel.search_exec``); the merged result selects the exact
+    top-k the inline search would, with search-efficiency counters
+    (``n_pruned``/``n_estimated``...) reflecting the per-shard searches.
     """
     budget = effective_budget(budget)
     programs = list(programs)
@@ -472,16 +707,29 @@ def plan_kernel_multi(programs: Sequence[TileProgram], hw: HardwareModel, *,
     PLAN_CALLS["plan_kernel_multi"] += 1
     t0 = time.perf_counter()
     stats = _SearchStats()
-    topk = _rank_streamed(programs, hw, budget, spatial_reuse=spatial_reuse,
-                          temporal_reuse=temporal_reuse, use_bound=use_bound,
-                          catch_infeasible=True, stats=stats)
+    topk = None
+    if len(programs) > 1:
+        from repro.parallel import search_exec
+        workers = search_exec.resolve_workers(budget.workers)
+        if workers > 1:
+            topk = search_exec.rank_sharded(
+                programs, hw, budget, spatial_reuse=spatial_reuse,
+                temporal_reuse=temporal_reuse, use_bound=use_bound,
+                catch_infeasible=True, engine=engine, stats=stats,
+                workers=workers)
+    if topk is None:                     # inline (workers<=1 or unshardable)
+        topk = _rank_streamed(programs, hw, budget,
+                              spatial_reuse=spatial_reuse,
+                              temporal_reuse=temporal_reuse,
+                              use_bound=use_bound, catch_infeasible=True,
+                              stats=stats, engine=engine)
     if not topk:
         raise RuntimeError("no feasible plan across any block shape"
                            + (f" ({stats.first_failure})"
                               if stats.first_failure else ""))
     kernel = programs[0].name.split("_b")[0] if programs else "?"
     result = _finish(topk, kernel=kernel, hw=hw,
-                     profile=profile, stats=stats, t0=t0)
+                     profile=profile, stats=stats, t0=t0, engine=engine)
     if cache is not None:
         cache.put_result(requested, hw, budget, result, profile=profile,
                          spatial_reuse=spatial_reuse,

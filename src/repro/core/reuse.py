@@ -251,7 +251,9 @@ def buffer_footprint_bytes(choices: Sequence[MemOpChoice],
 
 
 def _prune_dominated(opts: Sequence[MemOpChoice], mapping: Mapping,
-                     hw: HardwareModel) -> List[MemOpChoice]:
+                     hw: HardwareModel,
+                     demands: Optional[Dict[int, tuple]] = None
+                     ) -> List[MemOpChoice]:
     """Drop load realizations dominated on (dram_bytes, noc_bytes).
 
     Safety constraint (see DESIGN_SEARCHPERF.md): byte totals alone do not
@@ -265,7 +267,12 @@ def _prune_dominated(opts: Sequence[MemOpChoice], mapping: Mapping,
     the pruned option can never be part of a distinguishable-best plan.
     Exact duplicates keep their first (stable-order) representative.
     """
-    infos = [(c, memop_demand(c, mapping, hw)) for c in opts]
+    if demands is None:
+        demands = {}
+    for c in opts:
+        if id(c) not in demands:
+            demands[id(c)] = memop_demand(c, mapping, hw)
+    infos = [(c, demands[id(c)]) for c in opts]
     keep: List[MemOpChoice] = []
     for i, (c, (dem_c, dram_c, noc_c)) in enumerate(infos):
         dominated = False
@@ -307,7 +314,8 @@ def memop_choices_with_stores(
         mapping: Mapping, hw: HardwareModel, *,
         max_per_load: int = 12,
         capacity_fraction: float = 1.0,
-        max_plans: Optional[int] = None
+        max_plans: Optional[int] = None,
+        demands: Optional[Dict[int, tuple]] = None
 ) -> Tuple[Tuple[Tuple[MemOpChoice, ...], ...], Tuple[StorePlacement, ...]]:
     """As :func:`enumerate_memop_choices`, but also return the (per-mapping
     constant) store placements so streaming callers build plans without
@@ -318,7 +326,12 @@ def memop_choices_with_stores(
     when the *unpruned* combo product fits inside it, so removing options can
     never shift which combos that window admits (see `_prune_dominated`).
     Without it (``None``) pruning stays off and the enumeration is exactly
-    the historical one."""
+    the historical one.
+
+    ``demands``, when given an (empty) dict, is filled with
+    ``id(option) -> memop_demand(option, ...)`` for every surviving option —
+    the batched cost engine shares these with the dominance pruning instead
+    of recomputing the demand model per option."""
     infos = analyze_reuse(mapping, hw)
     load_infos = [i for i in infos if i.access.kind == "load"]
     store_infos = [i for i in infos if i.access.kind == "store"]
@@ -349,8 +362,13 @@ def memop_choices_with_stores(
     # historical one and only provably-no-better plans drop out
     if max_plans is not None and \
             math.prod(len(o) for o in per_load) <= max_plans:
-        per_load = [_prune_dominated(opts, mapping, hw) if len(opts) > 1
-                    else opts for opts in per_load]
+        per_load = [_prune_dominated(opts, mapping, hw, demands)
+                    if len(opts) > 1 else opts for opts in per_load]
+    if demands is not None:
+        for opts in per_load:
+            for c in opts:
+                if id(c) not in demands:
+                    demands[id(c)] = memop_demand(c, mapping, hw)
 
     # combo capacity filter with per-option precomputed buffer contributions:
     # footprint = sum of per-load buffers (x2 when streamed innermost, paper

@@ -1,6 +1,25 @@
-# Distribution layer: logical-axis sharding + the TileLoom mesh planner bridge.
-from .sharding import (FIXED_PLANS, ShardingPlan, constrain, current_plan,
-                       tree_shardings, use_plan)
+# Distribution layer: logical-axis sharding, the TileLoom mesh planner
+# bridge, and the process-parallel search executor.
+#
+# Submodule imports are lazy (PEP 562): `sharding` and `planner_bridge`
+# pull in jax, but the planner core only needs `search_exec` (jax-free) —
+# eagerly importing the package here would bill a full jax import to the
+# first cold `plan_kernel_multi` call.
+from typing import TYPE_CHECKING
 
 __all__ = ["FIXED_PLANS", "ShardingPlan", "constrain", "current_plan",
            "tree_shardings", "use_plan"]
+
+if TYPE_CHECKING:                        # pragma: no cover - type-checkers only
+    from .sharding import (FIXED_PLANS, ShardingPlan, constrain,
+                           current_plan, tree_shardings, use_plan)
+
+
+def __getattr__(name: str):
+    if name in __all__:
+        from . import sharding
+        return getattr(sharding, name)
+    if name in ("sharding", "planner_bridge", "search_exec"):
+        import importlib
+        return importlib.import_module(f".{name}", __name__)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -34,6 +34,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import os
 import time
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Sequence, Tuple
@@ -398,6 +399,57 @@ def plan_mesh(api: ModelAPI, shape: ShapeConfig, tcfg: TrainConfig, *,
                         "arch": api.cfg.name, "kind": shape.kind,
                         "best": ranked[0].plan.name if ranked else None})
     return ranked
+
+
+def _plan_mesh_job(payload) -> List[MeshPlanResult]:
+    """One (arch, shape) mesh ranking, publishing into the shared disk
+    registry — the unit both :func:`plan_mesh_many` and the AOT warm sweep
+    (``plancache/warmjobs.py``) shard across worker processes."""
+    arch, shape_name, tcfg_dict, multi_pod, top_k = payload
+    from repro.configs import ARCHS
+    from repro.configs.shapes import SHAPES
+    api = build_model(ARCHS[arch])
+    ranked = plan_mesh(api, SHAPES[shape_name], TrainConfig(**tcfg_dict),
+                       multi_pod=multi_pod, top_k=top_k)
+    plancache.get_store().flush_stats()
+    return ranked
+
+
+def _plan_mesh_job_isolated(payload) -> List[MeshPlanResult]:
+    """Worker-process entry: pins the planner to inline search first (the
+    sweep is already parallel at cell granularity)."""
+    os.environ["REPRO_PLANNER_WORKERS"] = "1"
+    return _plan_mesh_job(payload)
+
+
+def plan_mesh_many(cells: Sequence[Tuple[str, str]], tcfg: TrainConfig, *,
+                   multi_pod: bool = False, top_k: int = 3,
+                   workers: Optional[int] = None
+                   ) -> List[List[MeshPlanResult]]:
+    """Rank many registry cells — ``(arch_name, shape_name)`` pairs —
+    sharding across worker processes (``workers``; default
+    ``REPRO_PLANNER_WORKERS`` / cpu count; <=1 = inline).
+
+    Results return in cell order regardless of worker count, and every
+    worker publishes its ranking into the shared on-disk plan registry
+    (pid-unique temp renames + the advisory stats lock keep concurrent
+    publishes coherent), so a sharded sweep leaves the exact cache state a
+    sequential one would.  This is the mesh-granularity face of the search
+    executor; the AOT warm sweep (``python -m repro.plancache warm
+    --jobs``) rides the same worker pool.
+    """
+    from repro.parallel import search_exec
+    n = search_exec.resolve_workers(workers)
+    tcfg_dict = dataclasses.asdict(tcfg)
+    jobs = [(arch, shape, tcfg_dict, multi_pod, top_k)
+            for arch, shape in cells]
+    if n <= 1:
+        from repro.configs import ARCHS
+        from repro.configs.shapes import SHAPES
+        return [plan_mesh(build_model(ARCHS[a]), SHAPES[s], tcfg,
+                          multi_pod=multi_pod, top_k=top_k)
+                for a, s in cells]
+    return search_exec.map_jobs(_plan_mesh_job_isolated, jobs, n)
 
 
 def tileloom_view(plan: ShardingPlan, cfg: ModelConfig) -> str:

@@ -1,0 +1,269 @@
+"""Process-parallel search executor: shard a planner search across cores.
+
+``plan_kernel_multi``'s candidate space is a pooled stream over independent
+programs (one per block shape), so the program list shards cleanly: each
+worker ranks a contiguous chunk with the normal branch-and-bound engine
+and returns its top-k serialized through the plancache serializers, each
+candidate carrying its canonical (program, mapping, combo) stream index.
+The parent merges by ``(model cost, canonical index)`` — exactly the key
+the sequential heap sorts by — so the selected top-k and every tie-break
+are bit-identical to the inline search regardless of worker count (the
+per-candidate costs themselves are deterministic: both cost engines
+produce the same floats in any process).  Only the search-efficiency
+counters (``n_pruned``/``n_estimated``/...) depend on sharding, because
+each shard's incumbent threshold converges independently.
+
+The pool is cached module-wide so repeated planning calls amortize worker
+start-up, and workers start via ``fork`` where available (see
+``_mp_context`` — overridable with ``REPRO_PLANNER_MP``).
+``REPRO_PLANNER_WORKERS`` sets the default worker count (unset =
+``os.cpu_count()``; ``0``/``1`` = inline); worker processes pin it to 1
+so nested searches never oversubscribe.
+
+:func:`map_jobs` is the generic job-level variant used by the AOT warm
+sweep (``python -m repro.plancache warm --jobs N``) and
+``planner_bridge.plan_mesh_many``: results return in submission order and
+each worker publishes into the shared on-disk plan store (pid-unique
+temp-file renames + the advisory stats lock keep that coherent).
+"""
+from __future__ import annotations
+
+import atexit
+import dataclasses
+import multiprocessing
+import os
+import pickle
+from concurrent.futures import ProcessPoolExecutor
+from concurrent.futures.process import BrokenProcessPool
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+WORKERS_ENV = "REPRO_PLANNER_WORKERS"
+MP_CONTEXT_ENV = "REPRO_PLANNER_MP"      # fork | spawn | forkserver
+
+
+def _mp_context():
+    """Worker start method.  ``fork`` where available and safe: no
+    interpreter restart and no re-execution of the caller's ``__main__``
+    (spawn runs the parent's main module in every worker, which breaks
+    stdin scripts and console-script entry points).  Fork is avoided once
+    JAX is loaded in the parent — its runtime is multithreaded and
+    fork-hostile — which a pure planning process (benchmarks, the AOT
+    warm driver) never triggers.  ``REPRO_PLANNER_MP`` overrides."""
+    name = os.environ.get(MP_CONTEXT_ENV, "").strip().lower()
+    if not name:
+        import sys
+        forkable = "fork" in multiprocessing.get_all_start_methods()
+        name = "fork" if forkable and "jax" not in sys.modules else "spawn"
+    return multiprocessing.get_context(name)
+
+
+def resolve_workers(workers: Optional[int] = None) -> int:
+    """The effective worker count: the caller's explicit value, else
+    ``REPRO_PLANNER_WORKERS``, else ``os.cpu_count()``.  Values <= 1 (and
+    unparsable env text) mean inline."""
+    if workers is None:
+        raw = os.environ.get(WORKERS_ENV, "").strip()
+        if raw:
+            try:
+                workers = int(raw)
+            except ValueError:
+                workers = 1
+        else:
+            workers = os.cpu_count() or 1
+    return workers if workers > 1 else 1
+
+
+# ------------------------------------------------------------------ pool
+_POOL: Optional[ProcessPoolExecutor] = None
+_POOL_WORKERS = 0
+
+
+def _get_pool(workers: int) -> ProcessPoolExecutor:
+    """Module-wide spawn pool, grown (never shrunk) to ``workers``."""
+    global _POOL, _POOL_WORKERS
+    if _POOL is not None and _POOL_WORKERS >= workers:
+        return _POOL
+    if _POOL is not None:
+        _POOL.shutdown(wait=False, cancel_futures=True)
+    _POOL = ProcessPoolExecutor(max_workers=workers, mp_context=_mp_context())
+    _POOL_WORKERS = workers
+    return _POOL
+
+
+def shutdown_pool() -> None:
+    global _POOL, _POOL_WORKERS
+    if _POOL is not None:
+        _POOL.shutdown(wait=False, cancel_futures=True)
+        _POOL = None
+        _POOL_WORKERS = 0
+
+
+atexit.register(shutdown_pool)
+
+
+# ------------------------------------------------------------ hw transport
+def hw_spec(hw) -> Optional[Tuple[str, Any]]:
+    """A cross-process handle for a HardwareModel: preset name when the
+    model is a registered preset (Wormhole's composite channel map is a
+    local class and cannot pickle), else pickled bytes, else None (caller
+    must run inline)."""
+    from repro.core.hw import PRESETS
+    if hw.name in PRESETS:
+        try:
+            if PRESETS[hw.name]().df_text() == hw.df_text():
+                return ("preset", hw.name)
+        except Exception:
+            pass
+    try:
+        return ("pickle", pickle.dumps(hw))
+    except Exception:
+        return None
+
+
+def hw_from_spec(spec: Tuple[str, Any]):
+    kind, val = spec
+    if kind == "preset":
+        from repro.core.hw import get_hw
+        return get_hw(val)
+    return pickle.loads(val)
+
+
+# --------------------------------------------------------------- sharding
+def _chunk_bounds(n: int, chunks: int) -> List[Tuple[int, int]]:
+    """Contiguous near-equal [start, stop) chunks covering range(n)."""
+    base, extra = divmod(n, chunks)
+    bounds = []
+    start = 0
+    for i in range(chunks):
+        stop = start + base + (1 if i < extra else 0)
+        bounds.append((start, stop))
+        start = stop
+    return bounds
+
+
+def _worker_rank(task: Dict[str, Any]) -> Dict[str, Any]:
+    """Rank one program chunk (runs in a worker process).  Returns the
+    chunk's top-k as serialized candidates with *global* canonical indices
+    plus the chunk's search counters."""
+    os.environ[WORKERS_ENV] = "1"        # no nested pools
+    from repro.core import planner
+    from repro.plancache import serialize
+    programs = [serialize.program_from_dict(d) for d in task["programs"]]
+    hw = hw_from_spec(task["hw"])
+    budget = planner.SearchBudget(**task["budget"])
+    stats = planner._SearchStats()
+    topk = planner._rank_streamed(
+        programs, hw, budget, spatial_reuse=task["spatial_reuse"],
+        temporal_reuse=task["temporal_reuse"], use_bound=task["use_bound"],
+        catch_infeasible=task["catch_infeasible"], stats=stats,
+        engine=task["engine"])
+    out = []
+    p_base = task["p_base"]
+    for c in topk:
+        d = serialize.candidate_to_dict(c)
+        p, m, ci = c.index
+        d["index"] = [p + p_base, m, ci]
+        out.append(d)
+    return {"topk": out, "stats": dataclasses.asdict(stats)}
+
+
+def rank_sharded(programs: Sequence, hw, budget, *, spatial_reuse: bool,
+                 temporal_reuse: bool, use_bound: bool,
+                 catch_infeasible: bool, engine: Optional[str],
+                 stats, workers: int) -> Optional[List]:
+    """Shard ``_rank_streamed`` over ``workers`` processes and merge.
+
+    Returns the merged top-k Candidate list, or None when sharding is
+    unavailable (unpicklable hardware model, pool failure) — the caller
+    then runs inline.  ``stats`` is only mutated on success.  Planner bugs
+    raised inside a worker (anything ``_rank_streamed`` would propagate
+    inline, e.g. TypeError from a malformed program) re-raise here.
+    """
+    from repro.core import planner
+    from repro.plancache import serialize
+    spec = hw_spec(hw)
+    if spec is None:
+        return None
+    n = len(programs)
+    workers = min(workers, n)
+    # resolve the engine here: workers must not re-read REPRO_COST_ENGINE
+    # from the (potentially stale) environment they were started with
+    engine = planner.resolve_engine(engine)
+    wbudget = dataclasses.asdict(dataclasses.replace(budget, workers=1))
+    tasks = []
+    for start, stop in _chunk_bounds(n, workers):
+        tasks.append({
+            "programs": [serialize.program_to_dict(p)
+                         for p in programs[start:stop]],
+            "p_base": start,
+            "hw": spec,
+            "budget": wbudget,
+            "spatial_reuse": spatial_reuse,
+            "temporal_reuse": temporal_reuse,
+            "use_bound": use_bound,
+            "catch_infeasible": catch_infeasible,
+            "engine": engine,
+        })
+    try:
+        pool = _get_pool(workers)
+        futs = [pool.submit(_worker_rank, t) for t in tasks]
+        results = [f.result() for f in futs]
+    except (OSError, pickle.PicklingError, BrokenProcessPool):
+        shutdown_pool()                  # a broken pool never recovers
+        return None
+    entries = []
+    for res in results:                  # chunk order == program order
+        w = res["stats"]
+        stats.n_candidates += w["n_candidates"]
+        stats.n_mappings += w["n_mappings"]
+        stats.n_pruned += w["n_pruned"]
+        stats.n_estimated += w["n_estimated"]
+        stats.n_mappings_pruned += w["n_mappings_pruned"]
+        stats.n_infeasible_programs += w["n_infeasible_programs"]
+        if w["first_failure"] and not stats.first_failure:
+            stats.first_failure = w["first_failure"]
+        for d in res["topk"]:
+            c = serialize.candidate_from_dict(d)
+            entries.append(((c.cost.total_s,) + tuple(c.index), c))
+    entries.sort(key=lambda e: e[0])     # (cost, p, m, c): the heap's order
+    return [c for _, c in entries[:budget.top_k]]
+
+
+# ---------------------------------------------------------------- map_jobs
+def _repro_env() -> Dict[str, Optional[str]]:
+    """Snapshot of the planner/registry env contract.  The pool is
+    persistent, so workers hold whatever environment existed at their
+    start — a parent that redirects ``REPRO_PLAN_CACHE_DIR`` or toggles
+    ``REPRO_FAST_SEARCH`` afterwards must ship the current values with
+    each job or the workers plan against stale settings."""
+    keys = ("REPRO_PLAN_CACHE_DIR", "REPRO_PLAN_CACHE", "REPRO_FAST_SEARCH",
+            "REPRO_COST_ENGINE")
+    return {k: os.environ.get(k) for k in keys}
+
+
+def _run_with_env(env: Dict[str, Optional[str]], fn: Callable[[Any], Any],
+                  job: Any) -> Any:
+    for k, v in env.items():
+        if v is None:
+            os.environ.pop(k, None)
+        else:
+            os.environ[k] = v
+    return fn(job)
+
+
+def map_jobs(fn: Callable[[Any], Any], jobs: Sequence[Any],
+             workers: int) -> List[Any]:
+    """Run ``fn(job)`` for every job, sharded across worker processes
+    (``fn`` must be a module-level importable function).  Each job carries
+    the parent's current ``REPRO_*`` environment (see :func:`_repro_env`),
+    and results arrive in submission order, so output is deterministic
+    regardless of completion order.  ``workers <= 1`` (or a single job)
+    runs inline."""
+    jobs = list(jobs)
+    workers = min(workers, len(jobs))
+    if workers <= 1:
+        return [fn(j) for j in jobs]
+    env = _repro_env()
+    pool = _get_pool(workers)
+    futs = [pool.submit(_run_with_env, env, fn, j) for j in jobs]
+    return [f.result() for f in futs]

@@ -8,7 +8,12 @@
                                       cache.  ``--wormhole`` additionally
                                       warms the paper's Wormhole benchmark
                                       tables (``benchmarks/gemm_table`` /
-                                      ``topk_table`` shapes).
+                                      ``topk_table`` shapes).  ``--jobs N``
+                                      shards the sweep across N worker
+                                      processes publishing into the shared
+                                      disk store (see ``warmjobs.py``);
+                                      individual searches instead parallelize
+                                      via ``REPRO_PLANNER_WORKERS``.
 ``python -m repro.plancache ls``      lists entries (template, shape, hw).
 ``python -m repro.plancache stats``   entry count + cumulative hit/miss
                                       counters across processes.
@@ -116,96 +121,66 @@ def cmd_warm(args: argparse.Namespace) -> int:
         return 1
     archs = (args.archs.split(",") if args.archs else None)
     t0 = time.perf_counter()
-    n_jobs = 0
+    jobs: List[tuple] = []
 
     if not args.skip_gemm:
         from repro.configs import ARCHS
-        from repro.core.lower_jax import plan_gemm_blocks
         names = archs or sorted(ARCHS)
         shapes = set(args.gemm or [])
         if not args.gemm:
             shapes.update(BASE_GEMM_SHAPES)
             shapes.update(_registry_gemm_shapes(names))
-        for (M, N, K) in sorted(shapes):
-            blocks = plan_gemm_blocks(M, N, K)
-            n_jobs += 1
-            print(f"[warm] gemm {M}x{N}x{K} -> blocks {blocks}")
+        jobs += [("gemm", s) for s in sorted(shapes)]
 
     if not args.skip_flash:
         from repro.configs import ARCHS
-        from repro.core.lower_jax import plan_flash_blocks
         names = archs or sorted(ARCHS)
         shapes = set(args.flash or [])
         if not args.flash:
             shapes.update(BASE_FLASH_SHAPES)
             shapes.update(_registry_flash_shapes(names))
             shapes.update(_benchmark_flash_shapes())
-        for (Sq, Skv, d) in sorted(shapes):
-            blocks = plan_flash_blocks(Sq, Skv, d)
-            n_jobs += 1
-            print(f"[warm] flash q{Sq} kv{Skv} d{d} -> blocks {blocks}")
+        jobs += [("flash", s) for s in sorted(shapes)]
 
     if not args.skip_mesh:
-        from repro.configs import ARCHS
-        from repro.configs.base import TrainConfig
         from repro.configs.registry import cells
-        from repro.models import build_model
-        from repro.parallel.planner_bridge import plan_mesh
-        tcfg = TrainConfig()
-        for cfg, shape, _ in cells():
-            if archs and cfg.name not in archs:
-                continue
-            ranked = plan_mesh(build_model(cfg), shape, tcfg)
-            n_jobs += 1
-            best = ranked[0].plan.name if ranked else "-"
-            print(f"[warm] mesh {cfg.name}/{shape.name} -> {best}")
+        jobs += [("mesh", (cfg.name, shape.name)) for cfg, shape, _ in cells()
+                 if not archs or cfg.name in archs]
 
     if args.wormhole:
-        from repro.core import (SearchBudget, flash_attention_program,
-                                get_hw, plan_kernel_multi)
-        from .cache import PlanCache
         try:
-            from benchmarks.common import DEFAULT_BUDGET, HW_CONFIGS, tl_gemm
-            budget = DEFAULT_BUDGET
+            from benchmarks.common import HW_CONFIGS
         except ImportError:
-            from repro.core import block_shape_candidates, matmul_program
             HW_CONFIGS = ("wormhole_1x8", "wormhole_4x8", "wormhole_8x8")
-            budget = SearchBudget(top_k=5, max_plans_per_mapping=48,
-                                  max_candidates=8000)
-
-            def tl_gemm(M, N, K, hw, budget=budget, **kw):
-                progs = [matmul_program(M, N, K, bm=bm, bn=bn, bk=bk)
-                         for bm, bn, bk in block_shape_candidates(M, N, K)]
-                return plan_kernel_multi(progs, hw, budget=budget, **kw)
-
-        pc = PlanCache(store)
-        # budgets and profile (default True) must match the benchmark
-        # sweeps' own invocations exactly, or the warmed entries are dead
         hw_names = HW_CONFIGS if args.hw == "all" else (args.hw,)
-        for hw_name in hw_names:
-            hw = get_hw(hw_name)
-            for (M, N, K) in _benchmark_gemm_shapes(args.full):
-                res = tl_gemm(M, N, K, hw, budget=budget, cache=pc)
-                n_jobs += 1
-                print(f"[warm] {hw_name} gemm {M}x{N}x{K} -> "
-                      f"{res.best.plan.describe()}")
+        jobs += [("wh_gemm", (hw_name, s)) for hw_name in hw_names
+                 for s in _benchmark_gemm_shapes(args.full)]
         # flash_fig7 cells (wormhole_8x8 only, as the benchmark runs them)
-        flash_budget = SearchBudget(top_k=5, max_plans_per_mapping=48)
-        hw = get_hw("wormhole_8x8")
-        for bh, seq, d in _wormhole_flash_shapes():
-            progs = [flash_attention_program(bh, seq, seq, d, bq=bq, bkv=bkv)
-                     for bq in (32, 64, 128) for bkv in (32, 64, 128)]
-            res = plan_kernel_multi(progs, hw, budget=flash_budget, cache=pc)
-            n_jobs += 1
-            print(f"[warm] wormhole flash h*b{bh} s{seq} d{d} -> "
-                  f"{res.best.plan.describe()}")
+        jobs += [("wh_flash", s) for s in _wormhole_flash_shapes()]
+
+    from . import warmjobs
+    cum0 = store.cumulative_stats()       # workers flush into this file
+    for line in warmjobs.run_jobs(jobs, args.jobs):
+        print(line)
 
     cum = store.flush_stats()
     dt = time.perf_counter() - t0
-    s = store.stats
-    print(f"[warm] {n_jobs} shapes in {dt:.1f}s: {s.hits} hits "
-          f"({s.hits_mem} mem / {s.hits_disk} disk), {s.misses} misses, "
-          f"{s.puts} new entries; store now {store.n_entries()} entries, "
+    if args.jobs > 1:
+        # this run's activity lives in the worker processes; the parent's
+        # own store.stats saw nothing — report the cumulative-file delta
+        # the workers flushed under the advisory lock
+        d = {k: cum.get(k, 0) - cum0.get(k, 0) for k in
+             ("hits_mem", "hits_disk", "misses", "puts")}
+        hits = d["hits_mem"] + d["hits_disk"]
+        line = (f"{hits} hits ({d['hits_mem']} mem / {d['hits_disk']} "
+                f"disk), {d['misses']} misses, {d['puts']} new entries")
+    else:
+        s = store.stats
+        line = (f"{s.hits} hits ({s.hits_mem} mem / {s.hits_disk} disk), "
+                f"{s.misses} misses, {s.puts} new entries")
+    print(f"[warm] {len(jobs)} shapes in {dt:.1f}s"
+          + (f" across {args.jobs} jobs" if args.jobs > 1 else "")
+          + f": {line}; store now {store.n_entries()} entries, "
           f"cumulative hit rate "
           f"{_rate(cum):.0%}")
     return 0
@@ -296,6 +271,13 @@ def main(argv: Sequence[str] | None = None) -> int:
                    help="use the full benchmark shape tables")
     w.add_argument("--fast", action="store_true",
                    help="set REPRO_FAST_SEARCH=1 for this run")
+    w.add_argument("--jobs", type=int, default=1,
+                   help="shard the sweep across N worker processes (all "
+                        "publish into the shared disk store; results are "
+                        "identical to --jobs 1).  Each job runs its search "
+                        "inline — the per-search process pool "
+                        "(REPRO_PLANNER_WORKERS, default cpu count, 0/1 = "
+                        "inline) applies when --jobs is 1.  Default: 1")
     w.set_defaults(fn=cmd_warm)
 
     l = sub.add_parser("ls", help="list cache entries")

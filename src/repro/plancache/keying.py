@@ -50,7 +50,12 @@ def hw_digest(hw: HardwareModel) -> str:
 def budget_signature(budget: Optional[SearchBudget]) -> Dict[str, Any]:
     if budget is None:
         budget = SearchBudget()
-    return dataclasses.asdict(budget)
+    sig = dataclasses.asdict(budget)
+    # execution knobs that cannot change which plan wins (the sharded merge
+    # is bit-identical to the inline search) must not invalidate entries —
+    # a warm produced at --jobs 8 must serve a single-process consumer
+    sig.pop("workers", None)
+    return sig
 
 
 def program_signature(program: TileProgram) -> Dict[str, Any]:

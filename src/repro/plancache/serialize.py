@@ -201,12 +201,17 @@ def sim_from_dict(d: Dict[str, Any]) -> SimResult:
 # --------------------------------------------------------------- results
 def candidate_to_dict(c: Candidate) -> Dict[str, Any]:
     return {"plan": plan_to_dict(c.plan), "cost": cost_to_dict(c.cost),
-            "sim": sim_to_dict(c.sim) if c.sim is not None else None}
+            "sim": sim_to_dict(c.sim) if c.sim is not None else None,
+            # canonical (program, mapping, combo) stream index — what the
+            # process-sharded search merges on (absent in older entries)
+            "index": list(c.index) if c.index is not None else None}
 
 
 def candidate_from_dict(d: Dict[str, Any]) -> Candidate:
+    idx = d.get("index")
     return Candidate(plan_from_dict(d["plan"]), cost_from_dict(d["cost"]),
-                     sim_from_dict(d["sim"]) if d.get("sim") else None)
+                     sim_from_dict(d["sim"]) if d.get("sim") else None,
+                     index=tuple(int(i) for i in idx) if idx else None)
 
 
 def result_to_dict(r: PlanResult) -> Dict[str, Any]:

@@ -1,0 +1,125 @@
+"""Shardable units of the AOT warm sweep (``warm --jobs N``).
+
+Each job is a ``(kind, payload)`` pair small enough to pickle into a
+worker process; :func:`run_job` executes one and returns its log line.
+The same function backs the inline path (``--jobs 1``), so the sharded
+and sequential sweeps are one implementation.
+
+Workers publish directly into the shared on-disk plan store resolved from
+the inherited environment (``REPRO_PLAN_CACHE_DIR``): entry writes go
+through pid-unique temp files + atomic renames, and each job flushes its
+hit/miss counters under the store's advisory lock, so N concurrent jobs
+keep the registry and its stats coherent.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, List, Tuple
+
+Job = Tuple[str, Any]
+
+
+def run_job(job: Job) -> str:
+    """Execute one warm job and return its ``[warm] ...`` log line."""
+    kind, payload = job
+    fn = _KINDS[kind]
+    msg = fn(payload)
+    from .store import get_store
+    get_store().flush_stats()
+    return msg
+
+
+def run_job_isolated(job: Job) -> str:
+    """Worker-process entry: like :func:`run_job`, but pins the planner to
+    inline search first — the sweep is already parallel at job granularity,
+    so nested per-search pools would only oversubscribe."""
+    os.environ["REPRO_PLANNER_WORKERS"] = "1"
+    return run_job(job)
+
+
+def _gemm(payload) -> str:
+    from repro.core.lower_jax import plan_gemm_blocks
+    M, N, K = payload
+    blocks = plan_gemm_blocks(M, N, K)
+    return f"[warm] gemm {M}x{N}x{K} -> blocks {blocks}"
+
+
+def _flash(payload) -> str:
+    from repro.core.lower_jax import plan_flash_blocks
+    Sq, Skv, d = payload
+    blocks = plan_flash_blocks(Sq, Skv, d)
+    return f"[warm] flash q{Sq} kv{Skv} d{d} -> blocks {blocks}"
+
+
+def _mesh(payload) -> str:
+    arch, shape_name = payload
+    # one implementation for every sharded mesh ranking: the same worker
+    # entry backs planner_bridge.plan_mesh_many
+    from repro.parallel.planner_bridge import _plan_mesh_job
+    ranked = _plan_mesh_job((arch, shape_name, {}, False, 3))
+    best = ranked[0].plan.name if ranked else "-"
+    return f"[warm] mesh {arch}/{shape_name} -> {best}"
+
+
+def _wormhole_gemm(payload) -> str:
+    hw_name, (M, N, K) = payload
+    from repro.core import get_hw
+    from .cache import PlanCache
+    tl_gemm, budget = _benchmark_gemm_entry()
+    res = tl_gemm(M, N, K, get_hw(hw_name), budget=budget, cache=PlanCache())
+    return f"[warm] {hw_name} gemm {M}x{N}x{K} -> {res.best.plan.describe()}"
+
+
+def _wormhole_flash(payload) -> str:
+    bh, seq, d = payload
+    from repro.core import (SearchBudget, flash_attention_program, get_hw,
+                            plan_kernel_multi)
+    from .cache import PlanCache
+    progs = [flash_attention_program(bh, seq, seq, d, bq=bq, bkv=bkv)
+             for bq in (32, 64, 128) for bkv in (32, 64, 128)]
+    res = plan_kernel_multi(progs, get_hw("wormhole_8x8"),
+                            budget=SearchBudget(top_k=5,
+                                                max_plans_per_mapping=48),
+                            cache=PlanCache())
+    return f"[warm] wormhole flash h*b{bh} s{seq} d{d} -> " \
+           f"{res.best.plan.describe()}"
+
+
+def _benchmark_gemm_entry():
+    """The benchmark suite's ``tl_gemm`` + budget when the repo checkout is
+    importable, else an equivalent local fallback — budgets must match the
+    benchmark sweeps' own invocations exactly, or the warmed entries are
+    dead (same contract as the historical inline warm path)."""
+    try:
+        from benchmarks.common import DEFAULT_BUDGET, tl_gemm
+        return tl_gemm, DEFAULT_BUDGET
+    except ImportError:
+        from repro.core import (SearchBudget, block_shape_candidates,
+                                matmul_program, plan_kernel_multi)
+        budget = SearchBudget(top_k=5, max_plans_per_mapping=48,
+                              max_candidates=8000)
+
+        def tl_gemm(M, N, K, hw, budget=budget, **kw):
+            progs = [matmul_program(M, N, K, bm=bm, bn=bn, bk=bk)
+                     for bm, bn, bk in block_shape_candidates(M, N, K)]
+            return plan_kernel_multi(progs, hw, budget=budget, **kw)
+
+        return tl_gemm, budget
+
+
+_KINDS = {
+    "gemm": _gemm,
+    "flash": _flash,
+    "mesh": _mesh,
+    "wh_gemm": _wormhole_gemm,
+    "wh_flash": _wormhole_flash,
+}
+
+
+def run_jobs(jobs: List[Job], n_jobs: int) -> List[str]:
+    """Run warm jobs inline (``n_jobs <= 1``) or sharded across the worker
+    pool; log lines return in submission order either way."""
+    if n_jobs <= 1 or len(jobs) <= 1:
+        return [run_job(j) for j in jobs]
+    from repro.parallel import search_exec
+    return search_exec.map_jobs(run_job_isolated, jobs, n_jobs)

@@ -16,6 +16,21 @@ def _isolated_plan_cache(tmp_path_factory):
     os.environ.pop("REPRO_PLAN_CACHE_DIR", None)
 
 
+@pytest.fixture(autouse=True, scope="session")
+def _inline_planner_by_default():
+    """Default the suite to inline search (REPRO_PLANNER_WORKERS=1):
+    spinning the process pool for every small plan_kernel_multi call adds
+    ~1.7x wall time without adding coverage.  The sharded path is
+    exercised explicitly by tests/test_search_equivalence.py and
+    tests/test_plancache.py, which set workers themselves."""
+    if os.environ.get("REPRO_PLANNER_WORKERS"):
+        yield
+        return
+    os.environ["REPRO_PLANNER_WORKERS"] = "1"
+    yield
+    os.environ.pop("REPRO_PLANNER_WORKERS", None)
+
+
 @pytest.fixture()
 def fast_search(monkeypatch):
     """Shrink the planner's SearchBudget for latency-sensitive tests (the

@@ -1,0 +1,33 @@
+"""Benchmark-harness CLI contract: typos in suite names must fail loudly
+instead of silently running nothing and printing an empty table."""
+import sys
+
+import pytest
+
+
+def _run_main(monkeypatch, argv):
+    from benchmarks import run
+    monkeypatch.setattr(sys, "argv", ["run.py"] + argv)
+    run.main()
+
+
+@pytest.mark.parametrize("argv", [
+    ["--suite", "gemm_fig5_typo"],
+    ["--only", "nope"],
+    ["--suite", "gemm_fig5,flash_fig7x"],
+])
+def test_unknown_suite_rejected(monkeypatch, capsys, argv):
+    with pytest.raises(SystemExit) as exc:
+        _run_main(monkeypatch, argv)
+    assert exc.value.code == 2
+    err = capsys.readouterr().err
+    assert "unknown suite name" in err
+    assert "valid suites:" in err and "gemm_fig5" in err
+
+
+def test_known_suite_accepted_smoke(monkeypatch, capsys, fast_search):
+    """A valid suite name still runs (the cheapest one, as a smoke check
+    that the validation does not reject legitimate selections)."""
+    _run_main(monkeypatch, ["--suite", "perfmodel_fig9"])
+    out = capsys.readouterr().out
+    assert "name,us_per_call,derived" in out

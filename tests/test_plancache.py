@@ -1,7 +1,10 @@
 """Plan-registry tests: serialization round-trip, digest invalidation,
-two-tier hit/miss behavior, cold-vs-warm block planning, warm-start, the
-mesh-plan cache, and the AOT CLI."""
+two-tier hit/miss behavior, concurrent multi-process store access,
+cold-vs-warm block planning (including under the sharded search),
+warm-start, the mesh-plan cache, and the AOT CLI."""
 import json
+import multiprocessing
+import os
 
 import pytest
 
@@ -156,6 +159,59 @@ def test_nearest_matches_template_and_hw(store):
     assert store.nearest("gemm_blocks", "H3", (1, 1, 1)) is None
 
 
+# ------------------------------------------- concurrent store access
+def _store_worker(args):
+    """Hammer one store directory from a separate process: put/get a key
+    every process shares plus a distinct per-process key, then flush stats
+    (the advisory-lock read-modify-write)."""
+    root, wid, n_ops = args
+    os.environ[plancache.ENV_DIR] = root
+    plancache.reset_store()
+    store = plancache.get_store()
+    ok = 0
+    for i in range(n_ops):
+        store.put("shared", {"writer": wid, "i": i}, {"template": "t"})
+        store.put(f"w{wid}_{i}", {"wid": wid, "i": i}, {"template": "t"})
+        ent = store.get("shared")
+        if ent is not None and "writer" in ent["payload"]:
+            ok += 1
+        store.clear_memory()             # force the disk tier every round
+        if store.get(f"w{wid}_{i}")["payload"]["wid"] != wid:
+            return -1
+    store.flush_stats()
+    return ok
+
+
+def test_concurrent_store_puts_and_gets(store):
+    """N processes put/get the same and distinct keys simultaneously:
+    pid-unique temp-file renames keep every entry intact (no torn JSON),
+    and the advisory-lock stats merge loses no process's delta."""
+    n_procs, n_ops = 4, 8
+    # spawn, not fork: by this point the pytest process has JAX's thread
+    # pools running, and forking a threaded parent is a documented
+    # deadlock hazard.  Spawn children re-import this module by name
+    # (pytest's rootdir is on sys.path, which multiprocessing forwards).
+    ctx = multiprocessing.get_context("spawn")
+    with ctx.Pool(n_procs) as pool:
+        results = pool.map(_store_worker,
+                           [(str(store.root), w, n_ops)
+                            for w in range(n_procs)])
+    assert all(r == n_ops for r in results), results
+    # every write landed whole: shared key readable, all distinct keys there
+    plancache.reset_store()
+    fresh = plancache.get_store()
+    assert fresh.get("shared")["payload"]["i"] == n_ops - 1
+    for w in range(n_procs):
+        for i in range(n_ops):
+            assert fresh.get(f"w{w}_{i}")["payload"] == {"wid": w, "i": i}
+    assert fresh.n_entries() == n_procs * n_ops + 1
+    # cumulative stats accumulated every process's flush (2 puts per op)
+    cum = fresh.cumulative_stats()
+    assert cum["puts"] == n_procs * n_ops * 2
+    # no stray temp files survived the renames
+    assert not list(fresh.root.glob("*.tmp"))
+
+
 # ------------------------------------------------- cold vs warm blocks
 def test_plan_gemm_blocks_cold_populates_warm_skips_planner(
         store, monkeypatch, fast_search):
@@ -200,6 +256,79 @@ def test_plan_flash_blocks_cold_vs_warm(store, monkeypatch, fast_search):
     store.clear_memory()
     assert LJ.plan_flash_blocks(1024, 1024, 128) == cold
     assert calls["n"] == 1
+
+
+def test_parallel_blocks_match_inline_and_warm_disk(store, monkeypatch,
+                                                    fast_search):
+    """Satellite acceptance: planning blocks under REPRO_PLANNER_WORKERS>1
+    selects the same blocks as inline, and after clear_block_caches a warm
+    disk store reproduces identical blocks with zero planner invocations
+    even with the sharded search active."""
+    import repro.core.lower_jax as LJ
+    monkeypatch.setenv("REPRO_PLANNER_WORKERS", "1")
+    LJ.clear_block_caches()
+    inline = LJ.plan_gemm_blocks(1024, 1024, 1024)
+    store.prune(max_entries=0)           # wipe the disk tier
+    LJ.clear_block_caches()
+    monkeypatch.setenv("REPRO_PLANNER_WORKERS", "2")
+    sharded = LJ.plan_gemm_blocks(1024, 1024, 1024)
+    assert sharded == inline             # deterministic merge
+    calls = {"n": 0}
+    real = LJ.plan_kernel_multi
+
+    def counting(*a, **kw):
+        calls["n"] += 1
+        return real(*a, **kw)
+
+    monkeypatch.setattr(LJ, "plan_kernel_multi", counting)
+    LJ.clear_block_caches()
+    store.clear_memory()
+    assert LJ.plan_gemm_blocks(1024, 1024, 1024) == inline
+    assert calls["n"] == 0               # served by the warm disk store
+
+
+def test_warm_jobs_cli_parallel(store, fast_search, capsys):
+    """`warm --jobs 2` shards the sweep across worker processes that
+    publish into the shared disk store; the resulting entries serve a
+    sequential consumer."""
+    from repro.plancache.__main__ import main
+    args = ["warm", "--gemm", "512x512x512", "--gemm", "768x768x768",
+            "--skip-flash", "--skip-mesh", "--jobs", "2"]
+    assert main(args) == 0
+    out = capsys.readouterr().out
+    assert out.count("[warm] gemm") == 2
+    assert "across 2 jobs" in out
+    store.clear_memory()
+    from repro.core.lower_jax import clear_block_caches, plan_gemm_blocks
+    clear_block_caches()
+    import repro.core.planner as P
+    before = P.PLAN_CALLS["plan_kernel_multi"]
+    plan_gemm_blocks(512, 512, 512)      # resolves from the warmed store
+    assert P.PLAN_CALLS["plan_kernel_multi"] == before
+
+
+def test_cached_blocks_fallback_warns_and_counts(store, monkeypatch,
+                                                 fast_search, caplog):
+    """A planner failure in the block tables serves the fallback shape but
+    is never silent: one warning line plus an inspectable counter."""
+    import logging
+
+    import repro.core.lower_jax as LJ
+    LJ.clear_block_caches()
+
+    def boom(*a, **kw):
+        raise RuntimeError("no feasible plan (synthetic)")
+
+    monkeypatch.setattr(LJ, "plan_kernel_multi", boom)
+    with caplog.at_level(logging.WARNING, logger="repro.core.lower_jax"):
+        blocks = LJ.plan_gemm_blocks(2048, 2048, 2048)
+    assert blocks == (LJ.MXU_GRANULE,) * 3
+    assert LJ.planner_fallback_count() == 1
+    assert LJ.planner_fallback_count("gemm_blocks") == 1
+    assert any("planner fallback" in r.message and "gemm_blocks" in r.message
+               for r in caplog.records)
+    LJ.clear_block_caches()
+    assert LJ.planner_fallback_count() == 0
 
 
 def test_warm_start_seeds_search_from_neighbor(store, fast_search):
@@ -253,6 +382,44 @@ def test_plan_mesh_cache_hit_skips_estimation(store, monkeypatch):
     # cache=False forces a fresh ranking
     PB.plan_mesh(api, shape, TrainConfig(), cache=False)
     assert calls["n"] > 0
+
+
+def test_plan_mesh_many_matches_per_cell(store):
+    """plan_mesh_many returns per-cell rankings in cell order, equal to
+    calling plan_mesh per cell (the sharded warm path rides this)."""
+    from repro.configs import ARCHS
+    from repro.configs.shapes import SHAPES
+    from repro.configs.base import TrainConfig
+    from repro.models import build_model
+    from repro.parallel import planner_bridge as PB
+    tcfg = TrainConfig()
+    shape_name = sorted(SHAPES)[0]
+    cells = [("qwen2.5-3b", shape_name)]
+    many = PB.plan_mesh_many(cells, tcfg, workers=1)
+    direct = PB.plan_mesh(build_model(ARCHS["qwen2.5-3b"]),
+                          SHAPES[shape_name], tcfg)
+    assert [r.plan.name for r in many[0]] == [r.plan.name for r in direct]
+    assert [r.cost.total_s for r in many[0]] == \
+        pytest.approx([r.cost.total_s for r in direct])
+
+
+@pytest.mark.slow
+def test_plan_mesh_many_sharded_matches_inline(store):
+    """The workers>1 path of plan_mesh_many (cells ranked in worker
+    processes, publishing into the shared registry) returns the same
+    rankings in the same order as the inline path."""
+    from repro.configs.base import TrainConfig
+    from repro.parallel import planner_bridge as PB
+    tcfg = TrainConfig()
+    from repro.configs.shapes import SHAPES
+    names = sorted(SHAPES)[:2]
+    cells = [("qwen2.5-3b", s) for s in names]
+    inline = PB.plan_mesh_many(cells, tcfg, workers=1)
+    store.prune(max_entries=0)           # force the workers to re-rank
+    sharded = PB.plan_mesh_many(cells, tcfg, workers=2)
+    assert [[r.plan.name for r in cell] for cell in sharded] == \
+        [[r.plan.name for r in cell] for cell in inline]
+    assert store.n_entries() >= len(cells)   # workers published
 
 
 def test_mesh_key_ignores_shape_name_and_schedule_fields(store):
