@@ -18,13 +18,22 @@ reports
 * simulator compression — wave equivalence classes costed vs waves
   simulated for the winning plan (``classes/waves``).
 
+The sweep also embeds the reduction-bound cells of
+``benchmarks/reduction_table.py`` (tall-skinny GEMM, flash_decode,
+moe_gmm), each planned with the spatial-reduction (split-K) space on *and*
+off — the off run's time lands in the ``baseline_sim_us`` column and the
+ratio in ``sim_improvement``, so the split-K win is tracked PR-over-PR in
+the same JSON.
+
 Output: CSV rows on stdout plus ``BENCH_plan_speed.json``, always written
 at the repo root (regardless of CWD or flags) so the perf trajectory is
 tracked PR-over-PR.  ``--check-golden <path>`` compares the best-plan
 selections — of the sequential run *and* the sharded run — against a
 checked-in golden summary and fails on drift (the CI perf-smoke job runs
 this under ``REPRO_FAST_SEARCH=1`` + ``REPRO_PLANNER_WORKERS=2`` against
-``benchmarks/golden_plan_speed.json``).
+``benchmarks/golden_plan_speed.json``); ``--update-golden`` regenerates
+that checked-in golden from the current run after an intentional
+best-plan change.
 """
 from __future__ import annotations
 
@@ -40,13 +49,17 @@ from repro.core import (SearchBudget, fast_search_enabled,
 from repro.parallel.search_exec import resolve_workers
 
 from .common import HW_CONFIGS, geomean, row, tl_gemm
-from . import flash_table, gemm_table
+from . import flash_table, gemm_table, reduction_table
 
 # the repo root (this file's parent's parent): the perf trajectory is
 # tracked PR-over-PR, so the table must land in one well-known place
 JSON_PATH = os.path.join(
     os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
     "BENCH_plan_speed.json")
+# the checked-in golden the CI perf-smoke job gates against; regenerate
+# with --update-golden after an intentional best-plan change
+GOLDEN_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                           "golden_plan_speed.json")
 FLASH_BUDGET = SearchBudget(top_k=5, max_plans_per_mapping=48)
 
 
@@ -84,6 +97,20 @@ def sweep(full: bool = False, workers: int = 1):
                  for bq in (32, 64, 128) for bkv in (32, 64, 128)]
         res = plan_kernel_multi(progs, hw, budget=flash_budget)
         cells[f"flash/h{bh}_s{seq}"] = _cell(res)
+    # reduction-bound cells (tall-skinny gemm / flash_decode / moe_gmm):
+    # planned twice — split-K space on and off — so the table records how
+    # much the spatial-reduction plan space buys (`baseline_sim_us`), and
+    # the golden gate pins the selected split-K plans against drift
+    for name, red, base in reduction_table.plan_cells(workers=workers):
+        c = _cell(red)
+        c["baseline_best"] = base.best.plan.describe()
+        c["baseline_model_us"] = base.best.cost.total_s * 1e6
+        c["baseline_sim_us"] = (base.best.sim.total_s * 1e6
+                                if base.best.sim else None)
+        c["baseline_plan_seconds"] = base.plan_seconds
+        if c["sim_us"] and c["baseline_sim_us"]:
+            c["sim_improvement"] = c["baseline_sim_us"] / c["sim_us"]
+        cells[f"reduction/{name}"] = c
     return cells
 
 
@@ -105,6 +132,12 @@ def summarize(cells: Dict[str, Dict]) -> Dict:
         "estimate_fraction": n_est / n_cand if n_cand else 0.0,
         "waves_per_class_geomean": geomean(compress),
     }
+    imp = [c["sim_improvement"] for c in cells.values()
+           if c.get("sim_improvement")]
+    if imp:
+        out["reduction_sim_improvement_geomean"] = geomean(imp)
+        out["reduction_cells_improved_15pct"] = sum(
+            1 for i in imp if i >= 1.15)
     par = [c["plan_seconds_workers"] for c in cells.values()
            if "plan_seconds_workers" in c]
     if par:
@@ -192,6 +225,9 @@ def main(full: bool = False, cache=None, workers: Optional[int] = None
                    f"classes={c['n_wave_classes']}/{c['n_waves']}")
         if "plan_seconds_workers" in c:
             derived += f";workers_us={c['plan_seconds_workers'] * 1e6:.0f}"
+        if c.get("sim_improvement"):
+            derived += (f";baseline_sim_us={c['baseline_sim_us']:.1f}"
+                        f";improvement={c['sim_improvement']:.3f}")
         print(row(f"plan_speed/{name}", c["plan_seconds"] * 1e6, derived))
     total_derived = (f"cands_per_s={summary['candidates_per_s']:.0f};"
                      f"est_frac={summary['estimate_fraction']:.3f};"
@@ -217,14 +253,22 @@ if __name__ == "__main__":
                     help="fail if best-plan selections drift from PATH")
     ap.add_argument("--write-golden", metavar="PATH",
                     help="write the golden best-plan summary to PATH")
+    ap.add_argument("--update-golden", action="store_true",
+                    help="regenerate the checked-in golden "
+                         f"({os.path.relpath(GOLDEN_PATH)}) from this run — "
+                         "the supported way to record an intentional "
+                         "best-plan change (hand-editing is error-prone); "
+                         "CI still runs in check mode only")
     args = ap.parse_args()
     cells, _ = run(args.full, workers=args.workers)
-    if args.write_golden:
-        with open(args.write_golden, "w") as f:
+    golden_out = args.write_golden or (GOLDEN_PATH if args.update_golden
+                                       else None)
+    if golden_out:
+        with open(golden_out, "w") as f:
             json.dump({"fast_search": fast_search_enabled(),
                        "best_plans": {n: c["best"]
                                       for n, c in sorted(cells.items())}},
                       f, indent=1, sort_keys=True)
-        print(f"wrote {args.write_golden}", file=sys.stderr)
+        print(f"wrote {golden_out}", file=sys.stderr)
     if args.check_golden:
         sys.exit(1 if check_golden(cells, args.check_golden) else 0)

@@ -1,0 +1,126 @@
+"""Spatial-reduction (split-K) suite: reduction-bound cells on the mesh.
+
+The tentpole claim of the spatial-reduction plan space is that binding a
+reduction dim to a mesh axis — with partial-sum forwarding over the NoC or
+accumulate-in-place through the store path — beats serializing the reduction
+on single cores exactly where the parallel grid is too thin to fill the
+machine.  This table measures that end to end on three reduction-bound
+kernel families (Moon et al.'s spatially-mapped-reduction regime;
+StreamTensor's decode-streaming case):
+
+* **tall-skinny GEMM** — few output tiles, enormous K;
+* **flash_decode** — one query row per head vs a long KV cache (the whole
+  KV walk is an online-softmax reduction);
+* **moe_gmm** — grouped per-expert GEMM with a deep ``d_in`` contraction.
+
+Every cell is planned twice: with the split-K space enabled (the default
+``SearchBudget``) and with ``spatial_reduction=False`` (the pre-split-K
+parallel-only space).  The CSV reports both simulated/model times and the
+improvement ratio; ``benchmarks/plan_speed.py`` embeds the same cells into
+``BENCH_plan_speed.json`` with a ``baseline_sim_us`` column and gates their
+best-plan selections through the golden check.
+"""
+from __future__ import annotations
+
+from dataclasses import replace
+from typing import Callable, Dict, Iterator, List, Tuple
+
+from repro.core import (SearchBudget, flash_decode_program, get_hw,
+                        matmul_program, moe_gmm_program, plan_kernel_multi)
+
+from .common import geomean, row
+
+HW_NAME = "wormhole_8x8"
+REDUCTION_BUDGET = SearchBudget(top_k=5, max_plans_per_mapping=48,
+                                max_candidates=8000)
+
+TALL_SKINNY = ((256, 256, 65536), (512, 256, 32768),
+               (256, 1024, 32768), (512, 512, 16384))
+FLASH_DECODE = ((16, 32768, 128), (32, 65536, 64), (8, 131072, 128))
+MOE_GMM = ((8, 128, 16384, 512), (4, 256, 32768, 256))
+
+
+def cells() -> List[Tuple[str, Callable[[], list]]]:
+    """(cell name, program-factory) pairs; factories build the block-shape
+    candidate lists ``plan_kernel_multi`` pools (kept small on purpose — the
+    suite runs every cell twice)."""
+    out: List[Tuple[str, Callable[[], list]]] = []
+    for M, N, K in TALL_SKINNY:
+        out.append((
+            f"gemm_ts/M{M}_N{N}_K{K}",
+            lambda M=M, N=N, K=K: [
+                matmul_program(M, N, K, bm=bm, bn=bn, bk=bk)
+                for bm in (32, 64) for bn in (32, 64) for bk in (64, 128)]))
+    for H, S, D in FLASH_DECODE:
+        out.append((
+            f"flash_decode/h{H}_kv{S}_d{D}",
+            lambda H=H, S=S, D=D: [
+                flash_decode_program(H, S, D, bkv=bkv)
+                for bkv in (32, 64, 128)]))
+    for E, cap, din, dout in MOE_GMM:
+        out.append((
+            f"moe_gmm/e{E}_c{cap}_{din}x{dout}",
+            lambda E=E, cap=cap, din=din, dout=dout: [
+                moe_gmm_program(E, cap, din, dout, bm=bm, bn=64, bk=bk)
+                for bm in (64, 128) for bk in (64, 128)]))
+    return out
+
+
+def plan_cells(workers: int = 1, hw_name: str = HW_NAME) -> Iterator[tuple]:
+    """Yield ``(name, with_reduction, baseline)`` plan results per cell.
+
+    The baseline run disables only the split-K space
+    (``spatial_reduction=False``); budget, block candidates, and the
+    two-step selection are otherwise identical, so the delta is purely the
+    new plan space."""
+    hw = get_hw(hw_name)
+    budget = replace(REDUCTION_BUDGET, workers=workers)
+    base_budget = replace(budget, spatial_reduction=False)
+    for name, mk in cells():
+        red = plan_kernel_multi(mk(), hw, budget=budget)
+        base = plan_kernel_multi(mk(), hw, budget=base_budget)
+        yield name, red, base
+
+
+def sweep(workers: int = 1) -> Tuple[List[str], Dict[str, float]]:
+    lines: List[str] = []
+    improvements: List[float] = []
+    splitk_wins = 0
+    for name, red, base in plan_cells(workers=workers):
+        sim = red.best.sim.total_s
+        base_sim = base.best.sim.total_s
+        imp = base_sim / sim if sim > 0 else 0.0
+        improvements.append(imp)
+        is_splitk = bool(red.best.plan.mapping.reduce_binds())
+        splitk_wins += is_splitk
+        lines.append(row(
+            f"reduction/{name}", sim * 1e6,
+            f"baseline_us={base_sim * 1e6:.2f};improvement={imp:.3f};"
+            f"splitk={'y' if is_splitk else 'n'};"
+            f"plan={red.best.plan.describe().replace(',', ' ')}"))
+    summary = {
+        "sim_improvement_geomean": geomean(improvements),
+        "n_cells": len(improvements),
+        "n_splitk_best": splitk_wins,
+        "n_improved_15pct": sum(1 for i in improvements if i >= 1.15),
+    }
+    lines.append(row(
+        "reduction/geomean", 0.0,
+        f"sim_improvement={summary['sim_improvement_geomean']:.3f};"
+        f"splitk_best={splitk_wins}/{len(improvements)};"
+        f"improved_15pct={summary['n_improved_15pct']}"))
+    return lines, summary
+
+
+def main(full: bool = False, cache=None) -> Dict[str, float]:
+    """``full``/``cache`` accepted for run.py uniformity; the suite always
+    re-plans cold (it compares two plan spaces, which a shared cache would
+    simply serve back)."""
+    lines, summary = sweep()
+    for ln in lines:
+        print(ln)
+    return summary
+
+
+if __name__ == "__main__":
+    main()

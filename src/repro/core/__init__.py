@@ -18,7 +18,8 @@ from .planner import (Candidate, PlanResult, SearchBudget, effective_budget,
                       plan_kernel_multi, resolve_engine)
 from .program import (LoopDim, TensorSpec, TileAccess, TileOp, TileProgram,
                       block_shape_candidates, flash_attention_program,
-                      fused_matmul_program, matmul_program)
+                      flash_decode_program, fused_matmul_program,
+                      matmul_program, moe_gmm_program)
 from .reuse import (HoistOption, MemOpChoice, ReuseInfo, analyze_reuse,
                     broadcast_options, enumerate_memop_choices,
                     memop_choices_with_stores, memop_demand, hoist_options)
@@ -38,8 +39,9 @@ __all__ = [
     "plan_kernel_multi", "resolve_engine",
     "HAVE_NUMPY", "MappingBatch", "simulate_plans",
     "LoopDim", "TensorSpec", "TileAccess", "TileOp", "TileProgram",
-    "block_shape_candidates", "flash_attention_program", "fused_matmul_program",
-    "matmul_program",
+    "block_shape_candidates", "flash_attention_program",
+    "flash_decode_program", "fused_matmul_program", "matmul_program",
+    "moe_gmm_program",
     "HoistOption", "MemOpChoice", "ReuseInfo", "analyze_reuse",
     "broadcast_options", "enumerate_memop_choices",
     "memop_choices_with_stores", "memop_demand", "hoist_options",

@@ -48,8 +48,10 @@ from .perfmodel import (PlanCost, _contended_time, _issues_at,
                         _resource_pools, _store_transfer,
                         body_compute_seconds, pipelined_loop_time)
 from .plan import DataflowPlan
-from .reuse import MemOpChoice, StorePlacement, memop_demand
-from .simulator import SimResult, _core_coords, _loop_digit_groups
+from .reuse import (MemOpChoice, StorePlacement, _store_staging_tiles,
+                    memop_demand)
+from .simulator import (SimResult, _core_coords, _loop_digit_groups,
+                        _reduce_epilogue_cost)
 
 HAVE_NUMPY = np is not None
 
@@ -115,9 +117,9 @@ class MappingBatch:
         noc_col = {r: i for i, r in enumerate(noc_res)}
         R, Rn = len(res), len(noc_res)
 
-        loops: List[Tuple[str, int]] = [(t.name, t.extent)
-                                        for t in mapping.temporal]
-        loops += [(d.name, d.extent) for d in mapping.program.seq_dims]
+        # per-core effective loop nest: reduce binds divide sequential
+        # extents (identical to what estimate()/BoundContext build)
+        loops: List[Tuple[str, int]] = list(mapping.cost_loops())
         self.loops = loops
         n = len(loops)
         self.n_levels = n
@@ -162,7 +164,8 @@ class MappingBatch:
                     / pools[r]
         self._store_lb = store_lb
 
-        self._base_buf = sum(s.access.tile_bytes for s in self.stores) \
+        self._base_buf = sum(s.access.tile_bytes * _store_staging_tiles(s)
+                             for s in self.stores) \
             + prog.accumulator_bytes()
 
         # ---- load-option registry (one allocation per table, not one per
@@ -421,9 +424,10 @@ def _simulate_one(plan: DataflowPlan, hw: HardwareModel, view: _MeshView,
     n_cores = view.n_cores
     n_temporal = len(m.temporal)
     n_loops = n_temporal + len(prog.seq_dims)
-    seq_extents = [d.extent for d in prog.seq_dims]
+    seq_extents = [e for _, e in m.seq_loops()]      # per-core (split) extents
     inner_I = seq_extents[-1] if seq_extents else 1
     outer_seq = math.prod(seq_extents[:-1]) if len(seq_extents) > 1 else 1
+    red_act = m.active_reduce_factor()
 
     dram_bw = hw.global_mem.bandwidth_gbps * 1e9
     link_bw = {ic.name: ic.bandwidth_gbps * 1e9 for ic in hw.interconnects}
@@ -550,13 +554,10 @@ def _simulate_one(plan: DataflowPlan, hw: HardwareModel, view: _MeshView,
                 inner_dram += tb * n_active
         for s in inner_stores:
             inner_dram += s.access.tile_bytes * iters * n_active
-        ostore_t = ostore_dram = 0.0
-        for s in outer_stores:
-            ostore_dram += s.access.tile_bytes * n_active
-            ostore_t += s.access.tile_bytes * n_active \
-                / (dram_bw * hw.global_channels())
+        ostore_t, ostore_dram, ostore_noc = _reduce_epilogue_cost(
+            m, outer_stores, n_active, red_act, hw, dram_bw, link_bw)
         return (wave_time, inner_dram, inner_noc, hoist_info, ostore_t,
-                ostore_dram)
+                ostore_dram, ostore_noc)
 
     # class walk: identical order and accumulation to simulator.simulate
     import itertools
@@ -583,11 +584,11 @@ def _simulate_one(plan: DataflowPlan, hw: HardwareModel, view: _MeshView,
         cost = cache.get(amask)
         if cost is None:
             cost = cache[amask] = wave_cost(amask)
-        wave_time, inner_dram, inner_noc, hoist_info, ostore_t, \
-            ostore_dram = cost
+        (wave_time, inner_dram, inner_noc, hoist_info, ostore_t,
+         ostore_dram, ostore_noc) = cost
         t_hoist = ostore_t
         dram_bytes += (inner_dram + ostore_dram) * pop
-        noc_bytes += inner_noc * pop
+        noc_bytes += (inner_noc + ostore_noc) * pop
         for (t_c, db, nb), k in zip(hoist_info, k_cut):
             if first or j < k:
                 t_hoist += t_c

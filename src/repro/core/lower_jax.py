@@ -21,7 +21,7 @@ from __future__ import annotations
 
 import functools
 import logging
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax.numpy as jnp
 
@@ -201,3 +201,51 @@ def clear_block_caches() -> None:
     _gemm_blocks_memo.cache_clear()
     _flash_blocks_memo.cache_clear()
     PLANNER_FALLBACKS.clear()
+
+
+def reset_planner_fallbacks() -> None:
+    """Re-arm the degraded-planner signal in a long-lived (serve) process.
+
+    Clears ``PLANNER_FALLBACKS`` together with *every* in-process block-memo
+    tier — the ``lru_cache`` tables and the plancache memory LRU — so the
+    next repeat shape re-resolves through the disk registry (or a fresh
+    search) instead of a memo populated while the planner was failing.
+    Without this, a shape that fell back once keeps serving the fallback
+    blocks for the life of the process even after the underlying cause
+    (e.g. a full cache volume, a bad preset edit) is fixed.
+    """
+    clear_block_caches()
+    plancache.get_store().clear_memory()
+
+
+def splitk_pallas_spec(plan) -> Optional[Dict[str, object]]:
+    """Lower a spatial-reduction plan to its Pallas realization.
+
+    A ``reduce=True`` bind becomes one extra *accumulation* grid dimension of
+    ``n_split`` steps whose output BlockSpec maps every step to the same
+    output block (output revisiting — the ``moe_gmm``/``flash_decode``
+    kernels' ``acc_ref`` pattern):
+
+    * ``accum`` — accumulate into the revisited output block in place
+      (``o_ref += partial`` guarded by ``pl.when`` on the first/last step);
+    * ``tree``/``chain`` — emit per-split partials and let the wrapper
+      combine them after the kernel (sum, or log-sum-exp for the
+      flash-decode statistics), matching the owner-core combine the mesh
+      plan performs over the NoC.
+
+    Returns ``None`` for plans without reduce binds.
+    """
+    m = plan.mapping
+    binds = m.reduce_binds()
+    if not binds:
+        return None
+    b = binds[0]
+    n_split = m.active_reduce_factor()
+    return {
+        "grid_dim": b.grid_dim,
+        "n_split": int(n_split),
+        "steps_per_split": int(m.seq_extent(b.grid_dim)),
+        "style": m.reduce_style,
+        "revisit_output": m.reduce_style == "accum",
+        "combine": "add" if m.reduce_style == "accum" else "partials",
+    }

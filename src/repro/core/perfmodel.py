@@ -118,7 +118,41 @@ def _load_transfer(c: MemOpChoice, mapping: _Mapping,
 def _store_transfer(s: StorePlacement, mapping: _Mapping,
                     hw: HardwareModel) -> _Transfer:
     active = mapping.active_cores()
-    bytes_all = s.access.tile_bytes * active
+    tb = s.access.tile_bytes
+    if s.reduce_axes:
+        # spatial reduction: the cores along the reduce binds hold partial
+        # sums of the same output tile
+        r_act = mapping.active_reduce_factor()
+        if s.reduce_style == "accum":
+            # every partial read-modify-writes the tile in global memory
+            bytes_all = 2.0 * tb * active
+            demand = {"dram": bytes_all, "l1": float(tb * active)}
+            return _Transfer(s.access.label(), s.level, "store", demand,
+                             bytes_all, 0.0)
+        # forwarding (tree/chain): each non-owner partial crosses the axis
+        # NoC exactly once, in per-axis stages (the staged-multicast
+        # accounting in reverse); only the owner core touches the store
+        # path.  The demand model costs both styles identically (same bytes
+        # on the same resources); the simulator's hop-depth term separates
+        # them.
+        owners = max(1, active // r_act)
+        demand = {"dram": float(tb * owners)}
+        noc_bytes = 0.0
+        planes = active
+        for a, digits in mapping.reduce_stages():
+            if a not in s.reduce_axes:
+                continue
+            groups = max(1, planes // digits)
+            leg = float(tb * (digits - 1) * groups)
+            ic = hw.interconnect_along(a)
+            if ic is not None:
+                demand[ic.name] = demand.get(ic.name, 0.0) + leg
+            noc_bytes += leg
+            planes = groups
+        demand["l1"] = float(tb * active)
+        return _Transfer(s.access.label(), s.level, "store", demand,
+                         float(tb * owners), noc_bytes)
+    bytes_all = tb * active
     demand = {"dram": bytes_all, "l1": bytes_all}
     return _Transfer(s.access.label(), s.level, "store", demand, bytes_all, 0.0)
 
@@ -172,8 +206,8 @@ def estimate(plan: DataflowPlan, hw: HardwareModel, *,
     prog = m.program
     pools = _resource_pools(hw)
 
-    loops: List[Tuple[str, int]] = [(t.name, t.extent) for t in m.temporal]
-    loops += [(d.name, d.extent) for d in prog.seq_dims]
+    # per-core effective loop nest: reduce binds divide sequential extents
+    loops: List[Tuple[str, int]] = list(m.cost_loops())
     n = len(loops)
 
     if transfers is None:
@@ -291,9 +325,7 @@ class BoundContext:
         self.hw = hw
         self.pipelined = pipeline_outer_levels
         self.pools = _resource_pools(hw)
-        loops: List[Tuple[str, int]] = [(t.name, t.extent)
-                                        for t in mapping.temporal]
-        loops += [(d.name, d.extent) for d in mapping.program.seq_dims]
+        loops: List[Tuple[str, int]] = list(mapping.cost_loops())
         self.loops = loops
         self.compute_lb = body_compute_seconds(mapping, hw) \
             * math.prod(e for _, e in loops)

@@ -47,8 +47,8 @@ class DataflowPlan:
         n_par = len(loops)
         for t in self.mapping.temporal:
             loops.append(("for", t.name, t.extent))
-        for d in self.program.seq_dims:
-            loops.append(("for", d.name, d.extent))
+        for name, ext in self.mapping.seq_loops():   # per-core split extents
+            loops.append(("for", name, ext))
         by_level: Dict[int, List[str]] = {}
         for c in self.loads:
             ann = c.annotate(hw)
@@ -58,8 +58,14 @@ class DataflowPlan:
             by_level.setdefault(c.hoist.level, []).extend([alloc, ann])
         store_lines: Dict[int, List[str]] = {}
         for s in self.stores:
-            store_lines.setdefault(s.level, []).append(
-                f"store {s.access.tensor.name} {{type=\"global\"}}")
+            if s.reduce_axes:
+                axes = ", ".join(f"%{a}" for a in s.reduce_axes)
+                ann = (f"store {s.access.tensor.name} "
+                       f"{{type=\"reduce_{s.reduce_style}\", "
+                       f"axes={{{axes}}}}}")
+            else:
+                ann = f"store {s.access.tensor.name} {{type=\"global\"}}"
+            store_lines.setdefault(s.level, []).append(ann)
         lines: List[str] = []
         indent = ""
         # emit loops; memory-op level L sits just inside the L-th temporal loop

@@ -224,6 +224,83 @@ def flash_attention_program(batch_heads: int, seq_q: int, seq_kv: int,
         accumulators=(("O_acc", bq * head_dim * 4), ("m_l", 2 * bq * 4)))
 
 
+def flash_decode_program(batch_heads: int, seq_kv: int, head_dim: int, *,
+                         bkv: int, dtype_bytes: int = 2,
+                         name: str = "flash_decode") -> TileProgram:
+    """Single-token decode attention: one query row per (batch, head) against
+    a long KV cache.
+
+    Grid = (h over batch*heads) only — decode has no query tiling — and the
+    whole KV walk is the sequential loop ``s``: a pure online-softmax
+    reduction.  That makes the kernel the canonical *reduction-bound* shape
+    (StreamTensor's LLM-decode case): with few heads the mesh idles and the
+    ``s`` loop serializes on single cores unless the planner binds it to a
+    mesh axis (split-KV spatial reduction) and combines the per-split
+    (m, l, acc) partials.
+    """
+    H = batch_heads
+    Q = TensorSpec("Q", (H, 1, head_dim), dtype_bytes)
+    K = TensorSpec("K", (H, seq_kv, head_dim), dtype_bytes)
+    V = TensorSpec("V", (H, seq_kv, head_dim), dtype_bytes)
+    O = TensorSpec("O", (H, 1, head_dim), dtype_bytes)
+    h, s = "h", "s"
+    loads = (
+        TileAccess(Q, AffineMap.from_terms({h: 1}, {}), (1, 1, head_dim), "load"),
+        TileAccess(K, AffineMap.from_terms({h: 1}, {s: 1}), (1, bkv, head_dim), "load"),
+        TileAccess(V, AffineMap.from_terms({h: 1}, {s: 1}), (1, bkv, head_dim), "load"),
+    )
+    stores = (
+        TileAccess(O, AffineMap.from_terms({h: 1}, {}), (1, 1, head_dim), "store"),
+    )
+    body = (
+        TileOp("qk_matvec", "mat", work=2.0 * bkv * head_dim, segment=0),
+        TileOp("softmax_stats", "vec", work=4.0 * bkv, segment=1),
+        TileOp("rescale", "vec", work=2.0 * head_dim, segment=1),
+        TileOp("pv_matvec", "mat", work=2.0 * bkv * head_dim, segment=2),
+    )
+    return TileProgram(
+        name=f"{name}_h{H}_kv{seq_kv}_d{head_dim}_b{bkv}",
+        grid_dims=(LoopDim(h, H),),
+        seq_dims=(LoopDim(s, _ceil(seq_kv, bkv)),),
+        loads=loads, stores=stores, body=body,
+        accumulators=(("O_acc", head_dim * 4), ("m_l", 2 * 4)))
+
+
+def moe_gmm_program(n_experts: int, capacity: int, d_in: int, d_out: int, *,
+                    bm: int, bn: int, bk: int, dtype_bytes: int = 2,
+                    acc_bytes: int = 4, name: str = "moe_gmm") -> TileProgram:
+    """Grouped per-expert GEMM (the MoE FFN contraction):
+    ``O[e, cap, d_out] = X[e, cap, d_in] @ W[e, d_in, d_out]``.
+
+    Grid = (e over experts, gi over capacity tiles, gj over d_out tiles);
+    sequential ``k`` over d_in tiles — the expert-contraction reduction.
+    Small per-expert capacities with a deep ``d_in`` leave the parallel grid
+    thin, exactly where a split-K bind on ``k`` pays.
+    """
+    X = TensorSpec("X", (n_experts, capacity, d_in), dtype_bytes)
+    W = TensorSpec("W", (n_experts, d_in, d_out), dtype_bytes)
+    O = TensorSpec("O", (n_experts, capacity, d_out), dtype_bytes)
+    e, gi, gj, k = "e", "gi", "gj", "k"
+    loads = (
+        TileAccess(X, AffineMap.from_terms({e: 1}, {gi: 1}, {k: 1}),
+                   (1, bm, bk), "load"),
+        TileAccess(W, AffineMap.from_terms({e: 1}, {k: 1}, {gj: 1}),
+                   (1, bk, bn), "load"),
+    )
+    stores = (
+        TileAccess(O, AffineMap.from_terms({e: 1}, {gi: 1}, {gj: 1}),
+                   (1, bm, bn), "store"),
+    )
+    body = (TileOp("matmul", "mat", work=2.0 * bm * bn * bk, segment=0),)
+    return TileProgram(
+        name=f"{name}_e{n_experts}_c{capacity}_{d_in}x{d_out}_b{bm}x{bn}x{bk}",
+        grid_dims=(LoopDim(e, n_experts), LoopDim(gi, _ceil(capacity, bm)),
+                   LoopDim(gj, _ceil(d_out, bn))),
+        seq_dims=(LoopDim(k, _ceil(d_in, bk)),),
+        loads=loads, stores=stores, body=body,
+        accumulators=(("O_acc", bm * bn * acc_bytes),))
+
+
 def block_shape_candidates(M: int, N: int, K: int, *,
                            granule: int = 32,
                            max_block: int = 256) -> Tuple[Tuple[int, int, int], ...]:

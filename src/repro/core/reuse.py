@@ -96,9 +96,20 @@ class MemOpChoice:
 
 @dataclass(frozen=True)
 class StorePlacement:
+    """Where (and how) one store issues.
+
+    ``reduce_axes`` names the mesh axes carrying ``reduce=True`` binds whose
+    partial results this store must combine (empty = ordinary store);
+    ``reduce_style`` is the mapping's combining style: ``accum`` =
+    read-modify-write accumulation in global memory, ``tree``/``chain`` =
+    partials forwarded over the axis NoC to an owner core (log-depth tree /
+    neighbor chain) which performs the single final store.
+    """
     access: TileAccess
     level: int
     issues_per_core: int
+    reduce_axes: Tuple[str, ...] = ()
+    reduce_style: str = ""
 
 
 # --------------------------------------------------------------------------
@@ -121,10 +132,9 @@ def analyze_reuse(mapping: Mapping, hw: HardwareModel) -> Tuple[ReuseInfo, ...]:
 
 def _nest_loops(mapping: Mapping) -> List[Tuple[str, int]]:
     """Temporal + sequential loops, outer -> inner (spatial excluded: those are
-    parallel, not schedulable time)."""
-    loops = [(t.name, t.extent) for t in mapping.temporal]
-    loops += [(d.name, d.extent) for d in mapping.program.seq_dims]
-    return loops
+    parallel, not schedulable time).  Sequential extents are the *per-core*
+    effective extents — reduce binds divide them (``Mapping.cost_loops``)."""
+    return list(mapping.cost_loops())
 
 
 def hoist_options(info: ReuseInfo, mapping: Mapping) -> Tuple[HoistOption, ...]:
@@ -180,7 +190,14 @@ def broadcast_options(info: ReuseInfo) -> Tuple[Tuple[str, ...], ...]:
 def store_placement(info: ReuseInfo, mapping: Mapping) -> StorePlacement:
     """Stores are issued at the deepest level whose inner loops are all
     independent of the store address (once per distinct output tile, after the
-    reduction loops complete)."""
+    reduction loops complete).
+
+    Under a spatial-reduction mapping the cores along each ``reduce=True``
+    bind hold *partial sums* of the same output tile whenever the (rewritten)
+    store address is independent of that axis; the placement then carries the
+    axes and the mapping's combining style so the cost layers charge the
+    partial-sum epilogue (accumulate-in-place vs forwarding + owner store).
+    """
     loops = _nest_loops(mapping)
     n = len(loops)
     lvl = n
@@ -189,7 +206,12 @@ def store_placement(info: ReuseInfo, mapping: Mapping) -> StorePlacement:
     issues = 1
     for name, ext in loops[:lvl]:
         issues *= ext
-    return StorePlacement(info.access, lvl, issues)
+    red_axes = tuple(b.hw_dim for b in mapping.reduce_binds()
+                     if not info.rewritten.depends_on(b.hw_dim))
+    return StorePlacement(info.access, lvl, issues,
+                          reduce_axes=red_axes,
+                          reduce_style=mapping.reduce_style if red_axes
+                          else "")
 
 
 def memop_demand(c: MemOpChoice, mapping: Mapping, hw: HardwareModel
@@ -236,7 +258,8 @@ def buffer_footprint_bytes(choices: Sequence[MemOpChoice],
                            mapping: Mapping) -> int:
     """Peak local-memory bytes implied by a set of choices: hoisted-load
     buffers (double-buffered when streamed at the innermost level), store
-    staging tiles, and block accumulators."""
+    staging tiles (x2 for forwarding reductions: the owner stages an
+    incoming partial next to its own accumulator), and block accumulators."""
     n = len(_nest_loops(mapping))
     total = 0
     for c in choices:
@@ -245,9 +268,15 @@ def buffer_footprint_bytes(choices: Sequence[MemOpChoice],
             buf *= 2                # double buffering (paper Fig 4)
         total += buf
     for s in stores:
-        total += s.access.tile_bytes
+        total += s.access.tile_bytes * _store_staging_tiles(s)
     total += mapping.program.accumulator_bytes()
     return total
+
+
+def _store_staging_tiles(s: StorePlacement) -> int:
+    """Forwarding reductions hold a receive buffer for the inbound partial
+    alongside the local staging tile; plain and accumulate stores need one."""
+    return 2 if s.reduce_style in ("tree", "chain") else 1
 
 
 def _prune_dominated(opts: Sequence[MemOpChoice], mapping: Mapping,
@@ -375,7 +404,7 @@ def memop_choices_with_stores(
     # Fig 4) + store staging + accumulators — identical arithmetic to
     # buffer_footprint_bytes, hoisted out of the product loop
     n = len(_nest_loops(mapping))
-    base = sum(s.access.tile_bytes for s in stores) \
+    base = sum(s.access.tile_bytes * _store_staging_tiles(s) for s in stores) \
         + mapping.program.accumulator_bytes()
     per_load_buf = [
         [(c, c.hoist.footprint_tiles * c.access.tile_bytes

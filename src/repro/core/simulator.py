@@ -83,14 +83,62 @@ def _wave_envs(plan: DataflowPlan) -> List[Dict[str, int]]:
 
 
 def _is_active(plan: DataflowPlan, env: Dict[str, int]) -> bool:
-    """A (core, wave) slot is active iff every grid index is in range
-    (ragged final waves leave cores idle — real cost the model ignores)."""
+    """A (core, wave) slot is active iff every grid index is in range and,
+    under a reduce bind, the core's sequential chunk is non-empty (ragged
+    final waves / ragged splits leave cores idle — real cost the model
+    ignores)."""
     m = plan.mapping
     for d in m.program.grid_dims:
         idx = m.grid_index_expr(d.name).evaluate(env)
         if idx >= d.extent:
             return False
+    for d in m.program.seq_dims:
+        if m.reduce_factor(d.name) > 1:
+            if m.seq_index_expr(d.name).evaluate({**env, d.name: 0}) \
+                    >= d.extent:
+                return False
     return True
+
+
+def _reduce_epilogue_cost(mapping, outer_stores, n_active: int, red_act: int,
+                          hw: HardwareModel, dram_bw: float,
+                          link_bw: Dict[str, float]
+                          ) -> Tuple[float, float, float]:
+    """Per-wave hoisted-store cost (time, dram bytes, noc bytes), including
+    the spatial-reduction epilogue.  ``accum`` read-modify-writes every
+    partial through the store path; ``tree``/``chain`` forward partials over
+    the axis NoC in per-axis stages (log-depth combining tree vs ``r - 1``
+    neighbor hops per stage) and only the owner core stores.  Shared
+    verbatim by the wave-class simulator, the reference loop, and the
+    vectorized engine so the three stay bit-identical."""
+    chans = hw.global_channels()
+    t = db = nb = 0.0
+    for s in outer_stores:
+        tb = s.access.tile_bytes
+        if s.reduce_axes and red_act > 1:
+            if s.reduce_style == "accum":
+                db += 2.0 * tb * n_active
+                t += 2.0 * tb * n_active / (dram_bw * chans)
+                continue
+            owners = max(1, n_active // red_act)
+            planes = n_active
+            for a, digits in mapping.reduce_stages():
+                if a not in s.reduce_axes:
+                    continue
+                groups = max(1, planes // digits)
+                depth = (math.ceil(math.log2(digits))
+                         if s.reduce_style == "tree" else digits - 1)
+                ic = hw.interconnect_along(a)
+                if ic is not None:
+                    t += depth * tb / link_bw[ic.name]
+                nb += tb * (digits - 1) * groups
+                planes = groups
+            t += tb * owners / (dram_bw * chans)
+            db += tb * owners
+        else:
+            db += tb * n_active
+            t += tb * n_active / (dram_bw * chans)
+    return t, db, nb
 
 
 # --------------------------------------------------------------------------
@@ -136,6 +184,17 @@ def _loop_digit_groups(plan: DataflowPlan, coords: Sequence[Dict[str, int]]
         mask = 0
         for i, c in enumerate(coords):
             if expr.evaluate(c) < d.extent:
+                mask |= 1 << i
+        static_mask &= mask
+    # reduce binds: cores whose sequential chunk is empty (ragged split)
+    # idle for the whole kernel — a static mask, like waveless grid dims
+    for d in prog.seq_dims:
+        if m.reduce_factor(d.name) <= 1:
+            continue
+        expr = m.seq_index_expr(d.name)
+        mask = 0
+        for i, c in enumerate(coords):
+            if expr.evaluate({**c, d.name: 0}) < d.extent:
                 mask |= 1 << i
         static_mask &= mask
 
@@ -205,9 +264,10 @@ def simulate(plan: DataflowPlan, hw: HardwareModel, *,
     n_cores = len(coords)
     n_temporal = len(m.temporal)
     n_loops = n_temporal + len(prog.seq_dims)
-    seq_extents = [d.extent for d in prog.seq_dims]
+    seq_extents = [e for _, e in m.seq_loops()]      # per-core (split) extents
     inner_I = seq_extents[-1] if seq_extents else 1
     outer_seq = math.prod(seq_extents[:-1]) if len(seq_extents) > 1 else 1
+    red_act = m.active_reduce_factor()
 
     dram_bw = hw.global_mem.bandwidth_gbps * 1e9
     link_bw = {ic.name: ic.bandwidth_gbps * 1e9 for ic in hw.interconnects}
@@ -345,12 +405,10 @@ def simulate(plan: DataflowPlan, hw: HardwareModel, *,
                 inner_dram += tb * n_active
         for s in inner_stores:
             inner_dram += s.access.tile_bytes * iters * n_active
-        ostore_t = ostore_dram = 0.0
-        for s in outer_stores:
-            ostore_dram += s.access.tile_bytes * n_active
-            ostore_t += s.access.tile_bytes * n_active \
-                / (dram_bw * hw.global_channels())
-        return wave_time, inner_dram, inner_noc, hoist_info, ostore_t, ostore_dram
+        ostore_t, ostore_dram, ostore_noc = _reduce_epilogue_cost(
+            m, outer_stores, n_active, red_act, hw, dram_bw, link_bw)
+        return (wave_time, inner_dram, inner_noc, hoist_info, ostore_t,
+                ostore_dram, ostore_noc)
 
     total = 0.0
     dram_bytes = 0.0
@@ -374,10 +432,11 @@ def simulate(plan: DataflowPlan, hw: HardwareModel, *,
         cost = cache.get(amask)
         if cost is None:
             cost = cache[amask] = wave_cost(amask)
-        wave_time, inner_dram, inner_noc, hoist_info, ostore_t, ostore_dram = cost
+        (wave_time, inner_dram, inner_noc, hoist_info, ostore_t,
+         ostore_dram, ostore_noc) = cost
         t_hoist = ostore_t
         dram_bytes += (inner_dram + ostore_dram) * pop
-        noc_bytes += inner_noc * pop
+        noc_bytes += (inner_noc + ostore_noc) * pop
         for (t_c, db, nb), k in zip(hoist_info, k_cut):
             if first or j < k:
                 t_hoist += t_c
@@ -413,9 +472,10 @@ def simulate_reference(plan: DataflowPlan, hw: HardwareModel, *,
     waves = _wave_envs(plan)
     n_temporal = len(m.temporal)
     n_loops = n_temporal + len(prog.seq_dims)
-    seq_extents = [d.extent for d in prog.seq_dims]
+    seq_extents = [e for _, e in m.seq_loops()]      # per-core (split) extents
     inner_I = seq_extents[-1] if seq_extents else 1
     outer_seq = math.prod(seq_extents[:-1]) if len(seq_extents) > 1 else 1
+    red_act = m.active_reduce_factor()
 
     stride = max(1, len(waves) // max_waves_exact)
     sampled = waves[::stride]
@@ -558,9 +618,11 @@ def simulate_reference(plan: DataflowPlan, hw: HardwareModel, *,
                 dram_bytes += tb * len(active) * scale
         for s in inner_stores:
             dram_bytes += s.access.tile_bytes * iters * len(active) * scale
-        for s in outer_stores:
-            dram_bytes += s.access.tile_bytes * len(active) * scale
-            t_hoist += s.access.tile_bytes * len(active) / (dram_bw * hw.global_channels())
+        ostore_t, ostore_dram, ostore_noc = _reduce_epilogue_cost(
+            m, outer_stores, len(active), red_act, hw, dram_bw, link_bw)
+        t_hoist += ostore_t
+        dram_bytes += ostore_dram * scale
+        noc_bytes += ostore_noc * scale
 
         total += wave_time + t_hoist + wave_overhead_s
         prev_env = env

@@ -452,6 +452,38 @@ def plan_mesh_many(cells: Sequence[Tuple[str, str]], tcfg: TrainConfig, *,
     return search_exec.map_jobs(_plan_mesh_job_isolated, jobs, n)
 
 
+def lower_reduction_bind(mapping) -> List[Dict[str, Any]]:
+    """Lower a pod-level spatial-reduction mapping to XLA collectives.
+
+    A ``reduce=True`` bind on a pod df axis (a core
+    :class:`~repro.core.mapping.Mapping` planned on ``tpu_v5e_pod``) is the
+    mesh-granularity face of split-K: every chip along the axis holds a
+    partial sum of the same output shard.  The combining styles map onto
+    collectives 1:1:
+
+    * ``accum``  -> ``jax.lax.psum`` over the axis (all chips end with the
+      reduced value in place — the ``tp2d`` plan's partial matmuls);
+    * ``tree``   -> ``reduce_scatter`` + owner-shard store (log-depth
+      combining; only one shard materializes the output);
+    * ``chain``  -> a ``ppermute`` ring of partial accumulations (the
+      neighbor-chain forwarding the Wormhole plans use on the NoC).
+
+    Returns one descriptor per reduce bind (empty list = pure parallel
+    mapping, no collective epilogue).
+    """
+    out: List[Dict[str, Any]] = []
+    coll = {"accum": "psum", "tree": "reduce_scatter", "chain": "ppermute"}
+    for b in mapping.reduce_binds():
+        out.append({
+            "axis": b.hw_dim,
+            "reduction_dim": b.grid_dim,
+            "n_split": int(mapping.active_reduce_factor()),
+            "collective": coll.get(mapping.reduce_style, "psum"),
+            "style": mapping.reduce_style,
+        })
+    return out
+
+
 def tileloom_view(plan: ShardingPlan, cfg: ModelConfig) -> str:
     """Render the plan as its TileLoom tile-program mapping (for reports)."""
     batch = plan.mesh_axes("batch") or "-"
@@ -471,4 +503,11 @@ def tileloom_view(plan: ShardingPlan, cfg: ModelConfig) -> str:
     else:
         lines.append("load_W {type=\"broadcast\", level=0, "
                      "resources={%ici_data}}  // weights resident")
+    embed = plan.mesh_axes("embed")
+    if embed and plan.name == "tp2d":
+        # contraction (d) sharded: the chips along the axis hold split-K
+        # partials — the pod-level reduce bind, lowered as a psum epilogue
+        # (see lower_reduction_bind)
+        lines.append(f"store_C {{type=\"reduce\", style=\"accum\", "
+                     f"resources={{%ici_{embed}}}}}  // split-K psum")
     return "\n".join(lines)

@@ -30,7 +30,11 @@ from repro.core.program import TileProgram
 
 from .serialize import program_to_dict
 
-SCHEMA_VERSION = 1
+# v2: spatial-reduction plan space — SpatialBind.reduce / Mapping.reduce_style
+# / StorePlacement.reduce_axes+reduce_style entered the serialized layout and
+# SearchBudget gained `spatial_reduction` (both change search semantics, so
+# v1 entries must read as misses, never deserialize into wrong plans)
+SCHEMA_VERSION = 2
 
 
 def canonical_json(obj: Any) -> str:

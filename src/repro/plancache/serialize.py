@@ -104,9 +104,11 @@ def mapping_to_dict(m: Mapping) -> Dict[str, Any]:
         "hw_name": m.hw_name,
         "hw_dims": [[n, s] for n, s in m.hw_dims],
         "spatial": [{"hw_dim": b.hw_dim, "hw_size": b.hw_size,
-                     "grid_dim": b.grid_dim} for b in m.spatial],
+                     "grid_dim": b.grid_dim, "reduce": b.reduce}
+                    for b in m.spatial],
         "temporal": [{"name": t.name, "grid_dim": t.grid_dim,
                       "extent": t.extent} for t in m.temporal],
+        "reduce_style": m.reduce_style,
     }
 
 
@@ -116,9 +118,11 @@ def mapping_from_dict(d: Dict[str, Any]) -> Mapping:
         hw_name=d["hw_name"],
         hw_dims=tuple((n, int(s)) for n, s in d["hw_dims"]),
         spatial=tuple(SpatialBind(b["hw_dim"], int(b["hw_size"]),
-                                  b["grid_dim"]) for b in d["spatial"]),
+                                  b["grid_dim"], bool(b.get("reduce", False)))
+                      for b in d["spatial"]),
         temporal=tuple(TemporalLoop(t["name"], t["grid_dim"], int(t["extent"]))
-                       for t in d["temporal"]))
+                       for t in d["temporal"]),
+        reduce_style=str(d.get("reduce_style", "")))
 
 
 # ------------------------------------------------------------ memory ops
@@ -144,12 +148,17 @@ def memop_from_dict(d: Dict[str, Any]) -> MemOpChoice:
 
 def store_placement_to_dict(s: StorePlacement) -> Dict[str, Any]:
     return {"access": access_to_dict(s.access), "level": s.level,
-            "issues_per_core": s.issues_per_core}
+            "issues_per_core": s.issues_per_core,
+            "reduce_axes": list(s.reduce_axes),
+            "reduce_style": s.reduce_style}
 
 
 def store_placement_from_dict(d: Dict[str, Any]) -> StorePlacement:
     return StorePlacement(access_from_dict(d["access"]), int(d["level"]),
-                          int(d["issues_per_core"]))
+                          int(d["issues_per_core"]),
+                          reduce_axes=tuple(str(a) for a in
+                                            d.get("reduce_axes", [])),
+                          reduce_style=str(d.get("reduce_style", "")))
 
 
 # --------------------------------------------------------------- plan

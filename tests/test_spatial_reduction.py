@@ -1,0 +1,399 @@
+"""Spatial-reduction (split-K) plan space: mapping semantics, cost-engine
+bit-identity, search equivalence, lowering, and serialization.
+
+The reduction space rides the PR 2/3 machinery, so it inherits their hard
+invariants and this file pins them *over mappings that include reduce
+binds*: the batch engine equals the scalar ``estimate()`` with ``==`` (not
+approx), branch-and-bound equals the exhaustive oracle, the wave-class
+simulator equals the wave-by-wave reference, worker sharding is
+selection-invariant, and the new plan fields survive JSON round-trips.
+"""
+import itertools
+import math
+
+import pytest
+
+try:                    # numpy is optional (the planner degrades to the
+    import numpy as np  # scalar engine); only the batch tests need it
+except ImportError:     # pragma: no cover - numpy ships in CI
+    np = None
+
+needs_numpy = pytest.mark.skipif(
+    np is None, reason="numpy unavailable (batch engine disabled)")
+
+from repro.core import (MappingBatch, SearchBudget, estimate,
+                        flash_decode_program, get_hw, matmul_program,
+                        moe_gmm_program, plan_kernel, plan_kernel_multi,
+                        plan_lower_bound, simulate, simulate_plans,
+                        simulate_reference)
+from repro.core.mapping import REDUCE_STYLES, enumerate_mappings
+from repro.core.plan import DataflowPlan
+from repro.core.planner import _filtered_mappings
+from repro.core.reuse import memop_choices_with_stores
+from repro.plancache import serialize
+
+BUDGET = SearchBudget(max_mappings=64, max_plans_per_mapping=12)
+
+
+def _cases():
+    """Reduction-bound programs across all three mesh shapes, including a
+    ragged split (8320/64 = 130 k-tiles over 8 slots -> 17-tile chunks,
+    last slot partially filled)."""
+    return [
+        (matmul_program(256, 256, 65536, bm=64, bn=64, bk=64),
+         get_hw("wormhole_8x8")),
+        (matmul_program(320, 192, 8320, bm=32, bn=32, bk=64),
+         get_hw("wormhole_4x8")),
+        (flash_decode_program(16, 32768, 128, bkv=64),
+         get_hw("wormhole_8x8")),
+        (moe_gmm_program(8, 128, 16384, 512, bm=64, bn=64, bk=64),
+         get_hw("wormhole_1x8")),
+    ]
+
+
+def _reduce_mappings(prog, hw, limit=8):
+    return [m for m in _filtered_mappings(prog, hw, BUDGET)
+            if m.reduce_binds()][:limit]
+
+
+def _reduce_plan_grid(max_combos=6):
+    for prog, hw in _cases():
+        for mapping in _reduce_mappings(prog, hw):
+            demands = {}
+            combos, stores = memop_choices_with_stores(mapping, hw,
+                                                       demands=demands)
+            combos = combos[:max_combos]
+            if combos:
+                yield mapping, stores, combos, demands, hw
+
+
+# --------------------------------------------------------------------------
+# Mapping semantics
+# --------------------------------------------------------------------------
+def test_enumeration_contains_reduction_space():
+    """The second enumeration pass adds reduce binds in every style on NoC
+    axes (accumulate-only on axes without a ring), appended strictly after
+    the parallel-only space, and the budget knob removes them entirely."""
+    prog = matmul_program(256, 256, 65536, bm=64, bn=64, bk=64)
+    hw = get_hw("wormhole_8x8")
+    maps = enumerate_mappings(prog, hw)
+    base = enumerate_mappings(prog, hw, allow_reduction=False)
+    # prefix-identical: parallel mappings keep their canonical indices
+    assert list(maps[:len(base)]) == list(base)
+    red = [m for m in maps if m.reduce_binds()]
+    assert red and all(m.reduce_style in REDUCE_STYLES for m in red)
+    assert {m.reduce_style for m in red} == set(REDUCE_STYLES)
+    assert all(b.grid_dim == "k" for m in red for b in m.reduce_binds())
+    assert not any(m.reduce_binds() for m in base)
+    # planner knob: spatial_reduction=False restores the parallel space
+    off = _filtered_mappings(prog, hw,
+                             SearchBudget(spatial_reduction=False))
+    assert not any(m.reduce_binds() for m in off)
+
+
+def test_split_covers_sequential_space_exactly():
+    """Every sequential index is executed exactly once across the reduce
+    digits (blocked split; ragged tails leave trailing digits idle)."""
+    checked = 0
+    for prog, hw in _cases():
+        for m in _reduce_mappings(prog, hw, limit=4):
+            for d in prog.seq_dims:
+                if m.reduce_factor(d.name) <= 1:
+                    continue
+                binds = m.reduce_for(d.name)
+                expr = m.seq_index_expr(d.name)
+                covered = []
+                for digits in itertools.product(
+                        *[range(b.hw_size) for b in binds]):
+                    env = {b.hw_dim: v for b, v in zip(binds, digits)}
+                    for k in range(m.seq_extent(d.name)):
+                        v = expr.evaluate({**env, d.name: k})
+                        if v < d.extent:
+                            covered.append(v)
+                assert sorted(covered) == list(range(d.extent)), m.describe()
+                checked += 1
+    assert checked >= 10
+
+
+def test_store_placement_carries_reduction():
+    """Stores under a reduce mapping carry the bound axes + style; the
+    rewritten output access is independent of the reduce axis (that is what
+    makes the per-core results partial sums of the same tile)."""
+    for prog, hw in _cases():
+        for m in _reduce_mappings(prog, hw, limit=3):
+            _, stores = memop_choices_with_stores(m, hw)
+            axes = {b.hw_dim for b in m.reduce_binds()}
+            for s in stores:
+                assert set(s.reduce_axes) == axes, m.describe()
+                assert s.reduce_style == m.reduce_style
+                assert not any(m.rewrite_access(s.access).depends_on(a)
+                               for a in axes)
+
+
+def test_utilization_and_active_cores_account_for_split():
+    """A ragged split (130 tiles over 8 slots -> 17-tile chunks) activates
+    only ceil(130/17)=8 digits at utilization 130/(8*17)."""
+    prog = matmul_program(320, 192, 8320, bm=32, bn=32, bk=64)  # 130 k-tiles
+    hw = get_hw("wormhole_4x8")
+    m = next(m for m in _reduce_mappings(prog, hw, limit=64)
+             if m.reduce_binds()[0].hw_size == 8)
+    assert m.seq_extent("k") == 17
+    assert m.active_reduce_factor() == math.ceil(130 / 17)
+    u = m.utilization()
+    assert 0 < u <= 1.0
+    # dropping the reduce bind idles its axis (u / 8) and removes the split
+    # padding term (130 real tiles in 8 x 17 slots)
+    flat = m.__class__(m.program, m.hw_name, m.hw_dims,
+                       tuple(b for b in m.spatial if not b.reduce),
+                       m.temporal)
+    assert u == pytest.approx(flat.utilization() * 8 * (130 / (8 * 17)),
+                              rel=1e-12)
+    # active cores factor as (parallel actives) x (active digits)
+    assert m.active_cores() == flat.active_cores() * m.active_reduce_factor()
+
+
+# --------------------------------------------------------------------------
+# Cost engines: bit-identity + admissibility over reduction plans
+# --------------------------------------------------------------------------
+def test_simulate_matches_reference_with_reduction():
+    """Wave-class simulation == the wave-by-wave reference across split
+    plans: totals, DRAM and NoC traffic (the forwarding epilogue bytes)."""
+    checked = styles = 0
+    seen_styles = set()
+    for mapping, stores, combos, _, hw in _reduce_plan_grid(max_combos=2):
+        for combo in combos:
+            plan = DataflowPlan(mapping, combo, stores)
+            fast = simulate(plan, hw)
+            ref = simulate_reference(plan, hw, max_waves_exact=10 ** 9)
+            assert fast.total_s == pytest.approx(ref.total_s, rel=1e-12)
+            assert fast.dram_bytes == pytest.approx(ref.dram_bytes, rel=1e-12)
+            assert fast.noc_bytes == pytest.approx(ref.noc_bytes, rel=1e-12)
+            assert fast.n_waves == ref.n_waves
+            seen_styles.add(mapping.reduce_style)
+            checked += 1
+    assert checked >= 30
+    assert seen_styles == set(REDUCE_STYLES)
+
+
+def test_forwarding_styles_order_in_simulator():
+    """The analytic model ties tree and chain (same demand); the simulator
+    separates them: log-depth tree <= neighbor chain, and both move the
+    same bytes."""
+    prog = matmul_program(256, 256, 65536, bm=64, bn=64, bk=64)
+    hw = get_hw("wormhole_8x8")
+    by_style = {}
+    for m in _reduce_mappings(prog, hw, limit=64):
+        key = (tuple((b.hw_dim, b.grid_dim, b.reduce) for b in m.spatial),
+               m.temporal)
+        by_style.setdefault(key, {})[m.reduce_style] = m
+    compared = 0
+    for styles in by_style.values():
+        if not {"tree", "chain"} <= set(styles):
+            continue
+        combos_t, stores_t = memop_choices_with_stores(styles["tree"], hw)
+        combos_c, stores_c = memop_choices_with_stores(styles["chain"], hw)
+        pt = DataflowPlan(styles["tree"], combos_t[0], stores_t)
+        pc = DataflowPlan(styles["chain"], combos_c[0], stores_c)
+        assert estimate(pt, hw).total_s == estimate(pc, hw).total_s
+        st, sc = simulate(pt, hw), simulate(pc, hw)
+        assert st.total_s <= sc.total_s
+        assert st.noc_bytes == pytest.approx(sc.noc_bytes, rel=1e-12)
+        compared += 1
+    assert compared >= 1
+
+
+@needs_numpy
+def test_batch_estimates_bit_identical_with_reduction():
+    """MappingBatch == estimate() with exact float equality over reduction
+    plans — the property that keeps engine choice selection-invariant."""
+    n = 0
+    for mapping, stores, combos, demands, hw in _reduce_plan_grid():
+        for pol in (False, True):
+            batch = MappingBatch(mapping, stores, hw, combos,
+                                 pipeline_outer_levels=pol, demands=demands)
+            costs = batch.estimate_rows(np.arange(len(combos)))
+            for j, combo in enumerate(combos):
+                plan = DataflowPlan(mapping, combo, stores)
+                ref = estimate(plan, hw, pipeline_outer_levels=pol)
+                assert costs.cost(j) == ref, (plan.describe(), pol)
+                n += 1
+    assert n >= 100
+
+
+@needs_numpy
+def test_bounds_admissible_with_reduction():
+    """Scalar and batched lower bounds stay admissible for split plans —
+    the branch-and-bound obligation now also covers forwarding chains."""
+    n = 0
+    for mapping, stores, combos, demands, hw in _reduce_plan_grid():
+        for pol in (False, True):
+            batch = MappingBatch(mapping, stores, hw, combos,
+                                 pipeline_outer_levels=pol, demands=demands)
+            lbs = batch.lower_bounds()
+            for j, combo in enumerate(combos):
+                plan = DataflowPlan(mapping, combo, stores)
+                cost = estimate(plan, hw, pipeline_outer_levels=pol)
+                lb = plan_lower_bound(plan, hw, pipeline_outer_levels=pol)
+                assert lb <= cost.total_s * (1 + 1e-12), plan.describe()
+                assert lbs[j] <= cost.total_s * (1 + 1e-9)
+                assert lbs[j] == pytest.approx(lb, rel=1e-12)
+                n += 1
+    assert n >= 100
+
+
+@needs_numpy
+def test_simulate_plans_bit_identical_with_reduction():
+    checked = 0
+    for mapping, stores, combos, _, hw in _reduce_plan_grid(max_combos=2):
+        for combo in combos:
+            plan = DataflowPlan(mapping, combo, stores)
+            (got,) = simulate_plans([plan], hw)
+            ref = simulate(plan, hw)
+            assert (got.total_s, got.dram_bytes, got.noc_bytes,
+                    got.n_waves, got.n_wave_classes) == \
+                   (ref.total_s, ref.dram_bytes, ref.noc_bytes,
+                    ref.n_waves, ref.n_wave_classes), plan.describe()
+            checked += 1
+    assert checked >= 30
+
+
+# --------------------------------------------------------------------------
+# Search equivalence with the reduction space enabled
+# --------------------------------------------------------------------------
+def _keyed(res):
+    return [(c.plan.describe(), c.index, c.cost.total_s,
+             c.sim.total_s if c.sim else None) for c in res.topk]
+
+
+def test_bnb_matches_exhaustive_with_reduction():
+    hw = get_hw("wormhole_8x8")
+    mk = lambda: matmul_program(256, 256, 65536, bm=64, bn=64, bk=64)
+    budget = SearchBudget(top_k=5)
+    fast = plan_kernel(mk(), hw, budget=budget, use_bound=True)
+    slow = plan_kernel(mk(), hw, budget=budget, use_bound=False)
+    assert _keyed(fast) == _keyed(slow)
+    assert fast.best.plan.mapping.reduce_binds()    # split-K actually wins
+
+
+@needs_numpy
+def test_engines_select_identically_with_reduction():
+    hw = get_hw("wormhole_8x8")
+    mk = lambda: [matmul_program(256, 256, 65536, bm=bm, bn=bn, bk=64)
+                  for bm in (32, 64) for bn in (32, 64)]
+    budget = SearchBudget(top_k=5, max_plans_per_mapping=24)
+    b = plan_kernel_multi(mk(), hw, budget=budget, engine="batch")
+    s = plan_kernel_multi(mk(), hw, budget=budget, engine="scalar")
+    assert _keyed(b) == _keyed(s)
+
+
+@pytest.mark.parametrize("workers", [2, 4])
+def test_parallel_matches_inline_with_reduction(workers):
+    """plan_kernel_multi output is identical at workers 1/2/4 with
+    reduction binds enabled (the acceptance criterion's golden-gate twin)."""
+    hw = get_hw("wormhole_8x8")
+    mk = lambda: [flash_decode_program(16, 32768, 128, bkv=bkv)
+                  for bkv in (32, 64, 128)]
+    inline = plan_kernel_multi(mk(), hw,
+                               budget=SearchBudget(top_k=5, workers=1))
+    sharded = plan_kernel_multi(mk(), hw,
+                                budget=SearchBudget(top_k=5,
+                                                    workers=workers))
+    assert _keyed(sharded) == _keyed(inline)
+    assert inline.best.plan.mapping.reduce_binds()
+
+
+# --------------------------------------------------------------------------
+# The point of it all: faster plans on reduction-bound cells
+# --------------------------------------------------------------------------
+def test_splitk_improves_reduction_bound_cells():
+    """On reduction-bound shapes the selected plan's simulated time improves
+    >= 15% over the reduction-free space (the issue's acceptance bar)."""
+    hw = get_hw("wormhole_8x8")
+    budget = SearchBudget(top_k=5)
+    base_budget = SearchBudget(top_k=5, spatial_reduction=False)
+    for mk in (lambda: matmul_program(256, 256, 65536, bm=64, bn=64, bk=64),
+               lambda: flash_decode_program(16, 32768, 128, bkv=64)):
+        on = plan_kernel(mk(), hw, budget=budget)
+        off = plan_kernel(mk(), hw, budget=base_budget)
+        assert on.best.sim.total_s <= off.best.sim.total_s / 1.15, \
+            (on.best.plan.describe(), off.best.plan.describe())
+        assert on.best.plan.mapping.reduce_binds()
+
+
+def test_compute_bound_best_plan_unchanged():
+    """A compute-dense square GEMM must select the identical best plan with
+    the reduction space on and off — split-K only ever wins by strictly
+    lower cost, and ties resolve to the earlier (parallel) index."""
+    hw = get_hw("wormhole_8x8")
+    mk = lambda: matmul_program(4096, 4096, 4096, bm=128, bn=128, bk=64)
+    on = plan_kernel(mk(), hw, budget=SearchBudget(top_k=3))
+    off = plan_kernel(mk(), hw, budget=SearchBudget(top_k=3,
+                                                    spatial_reduction=False))
+    assert on.best.plan == off.best.plan
+    assert on.best.cost.total_s == off.best.cost.total_s
+    assert not on.best.plan.mapping.reduce_binds()
+
+
+# --------------------------------------------------------------------------
+# Serialization + lowering of the new plan fields
+# --------------------------------------------------------------------------
+def test_serialization_roundtrip_reduce_plan():
+    """plan/result round-trips preserve reduce binds, style, and store
+    axes, and the deserialized plan reproduces identical costs."""
+    hw = get_hw("wormhole_8x8")
+    res = plan_kernel(matmul_program(256, 256, 65536, bm=64, bn=64, bk=64),
+                      hw, budget=SearchBudget(top_k=4))
+    assert res.best.plan.mapping.reduce_binds()
+    rt = serialize.result_from_dict(serialize.result_to_dict(res))
+    assert rt.best.plan == res.best.plan
+    assert rt.best.plan.mapping.reduce_style == \
+        res.best.plan.mapping.reduce_style
+    assert [s.reduce_axes for s in rt.best.plan.stores] == \
+        [s.reduce_axes for s in res.best.plan.stores]
+    assert [c.plan for c in rt.topk] == [c.plan for c in res.topk]
+    re_cost = estimate(rt.best.plan, hw)
+    assert re_cost == res.best.cost
+
+
+def test_splitk_pallas_spec():
+    """lower_jax.splitk_pallas_spec turns a reduce bind into the Pallas
+    accumulation-grid descriptor (output revisiting for accum; per-split
+    partials for forwarding styles); flat plans lower to None."""
+    from repro.core import lower_jax
+    hw = get_hw("wormhole_8x8")
+    res = plan_kernel(matmul_program(256, 256, 65536, bm=64, bn=64, bk=64),
+                      hw, budget=SearchBudget(top_k=4))
+    spec = lower_jax.splitk_pallas_spec(res.best.plan)
+    m = res.best.plan.mapping
+    assert spec is not None
+    assert spec["grid_dim"] == "k"
+    assert spec["n_split"] == m.active_reduce_factor()
+    assert spec["n_split"] * spec["steps_per_split"] >= \
+        m.program.dim("k").extent
+    assert spec["style"] == m.reduce_style
+    assert spec["revisit_output"] == (m.reduce_style == "accum")
+    off = plan_kernel(matmul_program(256, 256, 65536, bm=64, bn=64, bk=64),
+                      hw, budget=SearchBudget(top_k=1,
+                                              spatial_reduction=False))
+    assert lower_jax.splitk_pallas_spec(off.best.plan) is None
+
+
+def test_reduction_bind_lowers_to_collective():
+    """A pod-level reduce bind lowers to a psum-style collective descriptor
+    (planner_bridge): accum -> psum, tree -> reduce_scatter."""
+    from repro.core import tpu_v5e_pod
+    from repro.parallel.planner_bridge import lower_reduction_bind
+    hw = tpu_v5e_pod(4, 4)
+    prog = matmul_program(512, 512, 65536, bm=128, bn=128, bk=128)
+    maps = [m for m in enumerate_mappings(prog, hw) if m.reduce_binds()]
+    assert maps
+    by_style = {m.reduce_style: m for m in maps}
+    (acc,) = lower_reduction_bind(by_style["accum"])
+    assert acc["collective"] == "psum"
+    assert acc["reduction_dim"] == "k"
+    assert acc["axis"] in ("data", "model")
+    (tree,) = lower_reduction_bind(by_style["tree"])
+    assert tree["collective"] == "reduce_scatter"
+    assert lower_reduction_bind(
+        next(m for m in enumerate_mappings(prog, hw)
+             if not m.reduce_binds())) == []
