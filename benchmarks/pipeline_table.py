@@ -1,0 +1,129 @@
+"""Kernel-graph pipeline suite: co-planned chains vs DRAM-handoff baseline.
+
+TileLoom's headline claim is that spatial accelerators win by forwarding
+operands over the on-chip network and distributed memories instead of
+round-tripping through global memory — and the biggest unexploited instance
+of that is *between* kernels: a producer -> consumer edge planned
+independently pays a full DRAM store + reload for the intermediate.  This
+suite measures what graph-level co-planning (``repro.pipeline``) buys on
+three chained-kernel families:
+
+* **mlp2**    — two chained GEMMs (the transformer MLP), activation ``Y``
+  forwarded;
+* **attn**    — the unfused attention chain ``S = Q K^T`` ->
+  ``O = softmax(S) V``, score matrix ``S`` forwarded;
+* **moe_ffn** — the gate-routed MoE expert FFN (grouped up- and
+  down-projection), hidden ``H`` forwarded.
+
+Every cell is planned twice: co-planned with forwarding enabled (the
+default ``SearchBudget``) and with ``pipeline_forwarding=False`` — fully
+independent per-kernel plans where every edge spills, whose end-to-end time
+is by construction the sum of the standalone kernel simulations.  The CSV
+reports both times, the ``dram_roundtrip_us`` the spill baseline pays per
+edge, and the improvement ratio; ``benchmarks/plan_speed.py`` embeds the
+same cells into ``BENCH_plan_speed.json`` and gates their graph-plan
+selections through the golden check.
+"""
+from __future__ import annotations
+
+from dataclasses import replace
+from typing import Callable, Dict, Iterator, List, Tuple
+
+from repro.core import SearchBudget, get_hw
+from repro.pipeline import (PipelineGraph, attn_qk_pv_graph, mlp2_graph,
+                            moe_ffn_graph, plan_pipeline)
+
+from .common import geomean, row
+
+HW_NAME = "wormhole_8x8"
+PIPELINE_BUDGET = SearchBudget(top_k=4, max_plans_per_mapping=48,
+                               max_candidates=8000)
+
+# block-shape candidate lists per family (kept small on purpose — the suite
+# plans every cell twice, and the per-node pools search each shape's space)
+GEMM_BLOCKS = ((64, 64, 64), (128, 128, 64), (128, 64, 128),
+               (128, 128, 128))
+ATTN_BLOCKS = ((64, 64), (128, 128), (128, 256), (256, 128))
+
+MLP2 = ((16384, 128, 512), (32768, 128, 512))
+ATTN = ((8, 4096, 1024, 64), (8, 2048, 2048, 64))
+MOE_FFN = ((8, 2048, 128, 512), (8, 1024, 128, 512))
+
+
+def cells() -> List[Tuple[str, Callable[[], PipelineGraph]]]:
+    """(cell name, graph factory) pairs for the 6-cell suite."""
+    out: List[Tuple[str, Callable[[], PipelineGraph]]] = []
+    for M, D, F in MLP2:
+        out.append((
+            f"mlp2/M{M}_d{D}_f{F}",
+            lambda M=M, D=D, F=F: mlp2_graph(M, D, F, blocks=GEMM_BLOCKS)))
+    for H, Sq, Skv, Dh in ATTN:
+        out.append((
+            f"attn/h{H}_q{Sq}_kv{Skv}_d{Dh}",
+            lambda H=H, Sq=Sq, Skv=Skv, Dh=Dh: attn_qk_pv_graph(
+                H, Sq, Skv, Dh, blocks=ATTN_BLOCKS)))
+    for E, C, Dm, Df in MOE_FFN:
+        out.append((
+            f"moe_ffn/e{E}_c{C}_{Dm}x{Df}",
+            lambda E=E, C=C, Dm=Dm, Df=Df: moe_ffn_graph(
+                E, C, Dm, Df, blocks=GEMM_BLOCKS)))
+    return out
+
+
+def plan_cells(workers: int = 1, hw_name: str = HW_NAME) -> Iterator[tuple]:
+    """Yield ``(name, co_planned, independent)`` GraphPlans per cell.
+
+    The baseline run disables only the forwarding decisions
+    (``pipeline_forwarding=False``); node pools, budget, and the graph
+    composition are otherwise identical, so the delta is purely the
+    inter-kernel on-chip handoff."""
+    hw = get_hw(hw_name)
+    budget = replace(PIPELINE_BUDGET, workers=workers)
+    base_budget = replace(budget, pipeline_forwarding=False)
+    for name, mk in cells():
+        co = plan_pipeline(mk(), hw, budget=budget)
+        base = plan_pipeline(mk(), hw, budget=base_budget)
+        yield name, co, base
+
+
+def sweep(workers: int = 1) -> Tuple[List[str], Dict[str, float]]:
+    lines: List[str] = []
+    improvements: List[float] = []
+    forwarded = 0
+    for name, co, base in plan_cells(workers=workers):
+        imp = base.total_s / co.total_s if co.total_s > 0 else 0.0
+        improvements.append(imp)
+        forwarded += co.n_forwarded() > 0
+        lines.append(row(
+            f"pipeline/{name}", co.total_s * 1e6,
+            f"dram_roundtrip_us={base.total_s * 1e6:.2f};"
+            f"edge_roundtrip_us={co.dram_roundtrip_s * 1e6:.2f};"
+            f"improvement={imp:.3f};"
+            f"fwd={co.n_forwarded()}/{len(co.decisions)};"
+            f"plan={co.describe().replace(',', ' ')}"))
+    summary = {
+        "sim_improvement_geomean": geomean(improvements),
+        "n_cells": len(improvements),
+        "n_forwarded_best": forwarded,
+        "n_improved_20pct": sum(1 for i in improvements if i >= 1.20),
+    }
+    lines.append(row(
+        "pipeline/geomean", 0.0,
+        f"sim_improvement={summary['sim_improvement_geomean']:.3f};"
+        f"forwarded_best={forwarded}/{len(improvements)};"
+        f"improved_20pct={summary['n_improved_20pct']}"))
+    return lines, summary
+
+
+def main(full: bool = False, cache=None) -> Dict[str, float]:
+    """``full``/``cache`` accepted for run.py uniformity; the suite always
+    re-plans cold (it compares two plan spaces, which a shared cache would
+    simply serve back)."""
+    lines, summary = sweep()
+    for ln in lines:
+        print(ln)
+    return summary
+
+
+if __name__ == "__main__":
+    main()

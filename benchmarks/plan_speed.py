@@ -23,7 +23,11 @@ The sweep also embeds the reduction-bound cells of
 moe_gmm), each planned with the spatial-reduction (split-K) space on *and*
 off — the off run's time lands in the ``baseline_sim_us`` column and the
 ratio in ``sim_improvement``, so the split-K win is tracked PR-over-PR in
-the same JSON.
+the same JSON — and the kernel-graph pipeline cells of
+``benchmarks/pipeline_table.py`` (mlp2 / unfused attention / moe ffn),
+each co-planned with on-chip edge forwarding and again with fully
+independent per-kernel plans (``dram_roundtrip_us``), so the graph-level
+win and the selected edge decisions are golden-gated the same way.
 
 Output: CSV rows on stdout plus ``BENCH_plan_speed.json``, always written
 at the repo root (regardless of CWD or flags) so the perf trajectory is
@@ -49,7 +53,7 @@ from repro.core import (SearchBudget, fast_search_enabled,
 from repro.parallel.search_exec import resolve_workers
 
 from .common import HW_CONFIGS, geomean, row, tl_gemm
-from . import flash_table, gemm_table, reduction_table
+from . import flash_table, gemm_table, pipeline_table, reduction_table
 
 # the repo root (this file's parent's parent): the perf trajectory is
 # tracked PR-over-PR, so the table must land in one well-known place
@@ -111,33 +115,69 @@ def sweep(full: bool = False, workers: int = 1):
         if c["sim_us"] and c["baseline_sim_us"]:
             c["sim_improvement"] = c["baseline_sim_us"] / c["sim_us"]
         cells[f"reduction/{name}"] = c
+    # kernel-graph pipeline cells (mlp2 / unfused attention / moe ffn):
+    # co-planned with on-chip forwarding vs fully independent per-kernel
+    # plans with the DRAM handoff (`dram_roundtrip_us`); the golden gate
+    # pins the selected graph plans (node candidates + edge decisions)
+    for name, co, base in pipeline_table.plan_cells(workers=workers):
+        cells[f"pipeline/{name}"] = {
+            "best": co.describe(),
+            "model_us": None,
+            "sim_us": co.total_s * 1e6,
+            "plan_seconds": co.plan_seconds,
+            "n_candidates": co.n_pairs,
+            "n_estimated": co.n_graph_combos,
+            "n_pruned": co.n_graph_pruned,
+            "n_mappings": 0,
+            "n_mappings_pruned": 0,
+            "n_waves": 0,
+            "n_wave_classes": 0,
+            "dram_roundtrip_us": base.total_s * 1e6,
+            "baseline_plan_seconds": base.plan_seconds,
+            "n_edges_forwarded": co.n_forwarded(),
+            "sim_improvement": (base.total_s / co.total_s
+                                if co.total_s > 0 else None),
+        }
     return cells
 
 
 def summarize(cells: Dict[str, Dict]) -> Dict:
     total_s = sum(c["plan_seconds"] for c in cells.values())
-    n_cand = sum(c["n_candidates"] for c in cells.values())
-    n_est = sum(c["n_estimated"] for c in cells.values())
-    n_pruned = sum(c["n_pruned"] for c in cells.values())
-    compress = [c["n_waves"] / c["n_wave_classes"] for c in cells.values()
+    # the search-efficiency trajectory metrics (candidates/s, estimate
+    # fraction, B&B counters) are defined over *single-kernel* searches —
+    # pipeline cells report graph-level quantities (candidate pairs, graph
+    # combos) in those fields, so they are excluded here to keep the
+    # PR-over-PR numbers comparable with pre-pipeline snapshots
+    kcells = {n: c for n, c in cells.items() if not n.startswith("pipeline/")}
+    kernel_s = sum(c["plan_seconds"] for c in kcells.values())
+    n_cand = sum(c["n_candidates"] for c in kcells.values())
+    n_est = sum(c["n_estimated"] for c in kcells.values())
+    n_pruned = sum(c["n_pruned"] for c in kcells.values())
+    compress = [c["n_waves"] / c["n_wave_classes"] for c in kcells.values()
                 if c["n_wave_classes"]]
     out = {
         "fast_search": fast_search_enabled(),
         "n_cells": len(cells),
         "plan_seconds_total": total_s,
-        "candidates_per_s": n_cand / total_s if total_s > 0 else 0.0,
+        "candidates_per_s": n_cand / kernel_s if kernel_s > 0 else 0.0,
         "n_candidates": n_cand,
         "n_estimated": n_est,
         "n_pruned": n_pruned,
         "estimate_fraction": n_est / n_cand if n_cand else 0.0,
         "waves_per_class_geomean": geomean(compress),
     }
-    imp = [c["sim_improvement"] for c in cells.values()
-           if c.get("sim_improvement")]
+    imp = [c["sim_improvement"] for n, c in cells.items()
+           if c.get("sim_improvement") and n.startswith("reduction/")]
     if imp:
         out["reduction_sim_improvement_geomean"] = geomean(imp)
         out["reduction_cells_improved_15pct"] = sum(
             1 for i in imp if i >= 1.15)
+    pimp = [c["sim_improvement"] for n, c in cells.items()
+            if c.get("sim_improvement") and n.startswith("pipeline/")]
+    if pimp:
+        out["pipeline_sim_improvement_geomean"] = geomean(pimp)
+        out["pipeline_cells_improved_20pct"] = sum(
+            1 for i in pimp if i >= 1.20)
     par = [c["plan_seconds_workers"] for c in cells.values()
            if "plan_seconds_workers" in c]
     if par:
@@ -226,7 +266,8 @@ def main(full: bool = False, cache=None, workers: Optional[int] = None
         if "plan_seconds_workers" in c:
             derived += f";workers_us={c['plan_seconds_workers'] * 1e6:.0f}"
         if c.get("sim_improvement"):
-            derived += (f";baseline_sim_us={c['baseline_sim_us']:.1f}"
+            base_us = c.get("baseline_sim_us", c.get("dram_roundtrip_us"))
+            derived += (f";baseline_sim_us={base_us:.1f}"
                         f";improvement={c['sim_improvement']:.3f}")
         print(row(f"plan_speed/{name}", c["plan_seconds"] * 1e6, derived))
     total_derived = (f"cands_per_s={summary['candidates_per_s']:.0f};"

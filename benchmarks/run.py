@@ -26,7 +26,7 @@ def main() -> None:
 
     from . import (ablation_spatial, ablation_temporal, flash_table,
                    gemm_irregular, gemm_table, perfmodel_validation,
-                   plan_speed, reduction_table, topk_table)
+                   pipeline_table, plan_speed, reduction_table, topk_table)
     cache = None
     if args.plan_cache:
         from repro.plancache import PlanCache
@@ -41,11 +41,12 @@ def main() -> None:
         "topk_tbl2": topk_table.main,
         "plan_speed": lambda: plan_speed.main(full=args.full),
         "reduction_splitk": lambda: reduction_table.main(full=args.full),
+        "pipeline": lambda: pipeline_table.main(full=args.full),
     }
-    # plan_speed and reduction_splitk re-plan every cell cold on purpose
-    # (they measure the search / compare two plan spaces and ignore
+    # plan_speed, reduction_splitk, and pipeline re-plan every cell cold on
+    # purpose (they measure the search / compare two plan spaces and ignore
     # --plan-cache), so they only run when named
-    opt_in = {"plan_speed", "reduction_splitk"}
+    opt_in = {"plan_speed", "reduction_splitk", "pipeline"}
     selected = set(args.only or [])
     if args.suite:
         selected |= {s.strip() for s in args.suite.split(",") if s.strip()}

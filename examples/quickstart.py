@@ -29,3 +29,19 @@ for name, mk in (("TT-1D", templates.tt1d_matmul_plan),
     print(f"{name:6s}: {t.total_s * 1e6:8.1f} us  ({t.tflops:5.1f} TFLOP/s)")
 best = res.best.sim
 print(f"TL    : {best.total_s * 1e6:8.1f} us  ({best.tflops:5.1f} TFLOP/s)")
+
+# -- pipeline co-planning: a 2-GEMM graph with on-chip forwarding -----------
+# Chained kernels planned in isolation pay a DRAM store + reload for every
+# producer->consumer intermediate.  The kernel-graph planner (repro.pipeline,
+# DESIGN_PIPELINE.md) co-plans the chain and decides per edge whether the
+# intermediate is *forwarded* through the distributed L1s or *spilled*.
+from repro.pipeline import mlp2_graph, plan_pipeline
+
+print("\n=== pipeline co-planning: 2-GEMM MLP (Y = X@W1; Z = Y@W2) ===")
+graph = mlp2_graph(M=8192, d_model=128, d_ff=512)
+gp = plan_pipeline(graph, hw, budget=SearchBudget(top_k=4))
+for d in gp.decisions:
+    print(f"edge {d.describe()}")
+print(f"co-planned end-to-end:   {gp.total_s * 1e6:8.1f} us")
+print(f"independent + DRAM trip: {gp.baseline_s * 1e6:8.1f} us "
+      f"({gp.improvement:.2f}x)")

@@ -19,9 +19,11 @@ from .planner import (Candidate, PlanResult, SearchBudget, effective_budget,
 from .program import (LoopDim, TensorSpec, TileAccess, TileOp, TileProgram,
                       block_shape_candidates, flash_attention_program,
                       flash_decode_program, fused_matmul_program,
-                      matmul_program, moe_gmm_program)
-from .reuse import (HoistOption, MemOpChoice, ReuseInfo, analyze_reuse,
-                    broadcast_options, enumerate_memop_choices,
+                      matmul_program, moe_gmm_program, qk_matmul_program,
+                      softmax_pv_program)
+from .reuse import (ForwardLeg, HoistOption, MemOpChoice, ReuseInfo,
+                    analyze_reuse, broadcast_options, edge_forward_demand,
+                    enumerate_memop_choices, forward_resident_bytes,
                     memop_choices_with_stores, memop_demand, hoist_options)
 from .simulator import SimResult, simulate, simulate_reference
 from . import templates
@@ -41,9 +43,10 @@ __all__ = [
     "LoopDim", "TensorSpec", "TileAccess", "TileOp", "TileProgram",
     "block_shape_candidates", "flash_attention_program",
     "flash_decode_program", "fused_matmul_program", "matmul_program",
-    "moe_gmm_program",
-    "HoistOption", "MemOpChoice", "ReuseInfo", "analyze_reuse",
-    "broadcast_options", "enumerate_memop_choices",
-    "memop_choices_with_stores", "memop_demand", "hoist_options",
+    "moe_gmm_program", "qk_matmul_program", "softmax_pv_program",
+    "ForwardLeg", "HoistOption", "MemOpChoice", "ReuseInfo", "analyze_reuse",
+    "broadcast_options", "edge_forward_demand", "enumerate_memop_choices",
+    "forward_resident_bytes", "memop_choices_with_stores", "memop_demand",
+    "hoist_options",
     "SimResult", "simulate", "simulate_reference", "templates",
 ]

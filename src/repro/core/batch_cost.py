@@ -48,8 +48,8 @@ from .perfmodel import (PlanCost, _contended_time, _issues_at,
                         _resource_pools, _store_transfer,
                         body_compute_seconds, pipelined_loop_time)
 from .plan import DataflowPlan
-from .reuse import (MemOpChoice, StorePlacement, _store_staging_tiles,
-                    memop_demand)
+from .reuse import (ForwardLeg, MemOpChoice, StorePlacement,
+                    _store_staging_tiles, memop_demand)
 from .simulator import (SimResult, _core_coords, _loop_digit_groups,
                         _reduce_epilogue_cost)
 
@@ -387,7 +387,9 @@ class _MeshView:
 
 def simulate_plans(plans: Sequence[DataflowPlan], hw: HardwareModel, *,
                    launch_overhead_s: float = 20e-6,
-                   wave_overhead_s: float = 2e-6) -> List[SimResult]:
+                   wave_overhead_s: float = 2e-6,
+                   fwd: Optional[Sequence[Optional[Dict[str, ForwardLeg]]]]
+                   = None) -> List[SimResult]:
     """Wave-equivalence-class simulation for a batch of plans, with the
     per-core inner loop of each class costed as numpy arrays over the
     active-core set (replacing ``simulate``'s O(cores x ops) Python loop).
@@ -396,28 +398,38 @@ def simulate_plans(plans: Sequence[DataflowPlan], hw: HardwareModel, *,
     totals and traffic agree with the scalar simulator bit-for-bit
     (asserted at 1e-12 by the equivalence tests).
 
+    ``fwd`` is an optional per-plan sequence of forwarded-edge leg maps
+    (``simulate``'s ``fwd`` parameter) — the pipeline co-planner's fused
+    producer/consumer simulation; the batch path mirrors the scalar leg
+    pricing operation-for-operation, so forwarded totals stay bit-identical
+    (``==``) to the scalar simulator as well.
+
     Plans sharing a :class:`Mapping` object share the class decomposition
     and mesh geometry (the planner's top-k profiling pass benefits when
     several finalists ride one mapping).
     """
+    legs = list(fwd) if fwd is not None else [None] * len(plans)
     if np is None:
         from .simulator import simulate
         return [simulate(p, hw, launch_overhead_s=launch_overhead_s,
-                         wave_overhead_s=wave_overhead_s) for p in plans]
+                         wave_overhead_s=wave_overhead_s, fwd=f)
+                for p, f in zip(plans, legs)]
     views: Dict[int, _MeshView] = {}
     out = []
-    for plan in plans:
+    for plan, f in zip(plans, legs):
         view = views.get(id(plan.mapping))
         if view is None:
             view = views[id(plan.mapping)] = _MeshView(plan, hw)
         out.append(_simulate_one(plan, hw, view, launch_overhead_s,
-                                 wave_overhead_s))
+                                 wave_overhead_s, fwd=f))
     return out
 
 
 def _simulate_one(plan: DataflowPlan, hw: HardwareModel, view: _MeshView,
                   launch_overhead_s: float,
-                  wave_overhead_s: float) -> SimResult:
+                  wave_overhead_s: float, *,
+                  fwd: Optional[Dict[str, ForwardLeg]] = None) -> SimResult:
+    fwd = fwd or {}
     m = plan.mapping
     prog = m.program
     t_body = body_compute_seconds(plan, hw)
@@ -464,6 +476,20 @@ def _simulate_one(plan: DataflowPlan, hw: HardwareModel, view: _MeshView,
         ring_counts = {a: np.zeros(g[1], dtype=np.int64)
                        for a, g in view.groups.items()}
         for c in inner_loads:
+            leg = fwd.get(c.access.tensor.name)
+            if leg is not None:
+                # forwarded recv: no DRAM users; the re-shuffle rings count
+                # one user per active core (every tile is distinct), sharing
+                # the per-axis ring census with the multicast ops — exactly
+                # the scalar census' shared (ring, instance) keying
+                if leg.kind != "free":
+                    for a in leg.shuffle_axes:
+                        if hw.interconnect_along(a) is None:
+                            continue
+                        gid = view.groups[a][0][active]
+                        ring_counts[a] += np.bincount(
+                            gid, minlength=view.groups[a][1])
+                continue
             if not c.bcast_axes:
                 chan_counts += hist
             else:
@@ -484,6 +510,23 @@ def _simulate_one(plan: DataflowPlan, hw: HardwareModel, view: _MeshView,
         t_load = np.zeros(A)
         for c in inner_loads:
             tb = c.access.tile_bytes
+            leg = fwd.get(c.access.tensor.name)
+            if leg is not None:
+                if leg.kind == "free":
+                    continue
+                # on-chip receive: remote L1 read + re-shuffle ring hops
+                # (same expression order as the scalar path)
+                t_leg = np.zeros(A) + tb / l1_bw
+                for a in leg.shuffle_axes:
+                    ic = hw.interconnect_along(a)
+                    if ic is None:
+                        continue
+                    gid = view.groups[a][0][active]
+                    r_users = np.maximum(1, ring_counts[a][gid])
+                    t_leg = t_leg + tb / (link_bw[ic.name] / r_users)
+                t_load = t_load + t_leg
+                t_load = t_load + tb / l1_bw    # local landing, like any load
+                continue
             if not c.bcast_axes:
                 users = np.maximum(1, ch_users)
                 t_load = t_load + tb / (dram_bw / users)
@@ -502,6 +545,11 @@ def _simulate_one(plan: DataflowPlan, hw: HardwareModel, view: _MeshView,
             t_load = t_load + tb / l1_bw
         t_store = np.zeros(A)
         for s in inner_stores:
+            leg = fwd.get(s.access.tensor.name)
+            if leg is not None and not s.reduce_axes:
+                if leg.kind != "free":
+                    t_store = t_store + s.access.tile_bytes / l1_bw
+                continue
             users = np.maximum(1, ch_users)
             t_store = t_store + s.access.tile_bytes / (dram_bw / users)
         if A:
@@ -517,6 +565,21 @@ def _simulate_one(plan: DataflowPlan, hw: HardwareModel, view: _MeshView,
             seq_issues = (math.prod(seq_extents[:c.hoist.level - n_temporal])
                           if c.hoist.level > n_temporal else 1)
             tb = c.access.tile_bytes * c.hoist.tiles_per_issue * seq_issues
+            leg = fwd.get(c.access.tensor.name)
+            if leg is not None:
+                if leg.kind == "free":
+                    hoist_info.append((0.0, 0.0, 0.0))
+                    continue
+                t_c = tb / l1_bw
+                nb = 0.0
+                for a in leg.shuffle_axes:
+                    ic = hw.interconnect_along(a)
+                    if ic is None:
+                        continue
+                    t_c += tb * sizes[a] / link_bw[ic.name]
+                    nb += tb * n_active
+                hoist_info.append((t_c, 0.0, nb))
+                continue
             if c.bcast_axes:
                 repl = math.prod(sizes[a] for a in c.bcast_axes)
                 producers = max(1, n_active // repl)
@@ -542,6 +605,13 @@ def _simulate_one(plan: DataflowPlan, hw: HardwareModel, view: _MeshView,
         inner_dram = inner_noc = 0.0
         for c in inner_loads:
             tb = c.access.tile_bytes * iters
+            leg = fwd.get(c.access.tensor.name)
+            if leg is not None:
+                if leg.kind != "free":
+                    for a in leg.shuffle_axes:
+                        if hw.interconnect_along(a) is not None:
+                            inner_noc += tb * n_active
+                continue
             if c.bcast_axes:
                 repl = math.prod(sizes[a] for a in c.bcast_axes)
                 producers = max(1, n_active // repl)
@@ -553,9 +623,13 @@ def _simulate_one(plan: DataflowPlan, hw: HardwareModel, view: _MeshView,
             else:
                 inner_dram += tb * n_active
         for s in inner_stores:
+            leg = fwd.get(s.access.tensor.name)
+            if leg is not None and not s.reduce_axes:
+                continue                        # on-chip: no DRAM bytes
             inner_dram += s.access.tile_bytes * iters * n_active
         ostore_t, ostore_dram, ostore_noc = _reduce_epilogue_cost(
-            m, outer_stores, n_active, red_act, hw, dram_bw, link_bw)
+            m, outer_stores, n_active, red_act, hw, dram_bw, link_bw,
+            fwd=fwd, l1_bw=l1_bw)
         return (wave_time, inner_dram, inner_noc, hoist_info, ostore_t,
                 ostore_dram, ostore_noc)
 

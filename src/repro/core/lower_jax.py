@@ -218,6 +218,66 @@ def reset_planner_fallbacks() -> None:
     plancache.get_store().clear_memory()
 
 
+def fused_pipeline_spec(graph_plan) -> Dict[str, object]:
+    """Lower a co-planned kernel graph (:class:`repro.pipeline.GraphPlan`)
+    to its Pallas realization plan.
+
+    Consecutive nodes joined by *forwarded* edges collapse into one
+    **fused/chained Pallas call**: the chain's kernels run as phases of a
+    single ``pallas_call`` whose grid covers the producer then the consumer
+    blocks, and each forwarded intermediate lives in a ``pltpu.VMEM``
+    scratch ref (``scratch_shapes``) instead of materializing as an output
+    — the consumer phase reads the scratch tile the producer phase wrote
+    (exactly the distributed-L1 residency the mesh plan prices).  A
+    *spilled* edge is a segment boundary: the intermediate materializes as
+    a normal HBM output and the next segment is a separate call.
+
+    Returns::
+
+        {"segments": [{"nodes": [...],          # fused chain, in order
+                       "scratch": [tensor...],  # intermediates kept on-chip
+                       "shuffle": {tensor: axes}},  # NoC re-shuffle legs
+                      ...],
+         "materialized": [tensor...]}           # spilled intermediates
+    """
+    order = list(graph_plan.nodes)
+    fwd_edges = {(d.src, d.dst): d for d in graph_plan.decisions
+                 if d.forwarded}
+    segments: list = []
+    current = {"nodes": [order[0]], "scratch": [], "shuffle": {}}
+    for prev, node in zip(order, order[1:]):
+        d = fwd_edges.get((prev, node))
+        if d is not None:
+            current["nodes"].append(node)
+            current["scratch"].append(d.tensor)
+            if d.shuffle_axes:
+                current["shuffle"][d.tensor] = list(d.shuffle_axes)
+        else:
+            segments.append(current)
+            current = {"nodes": [node], "scratch": [], "shuffle": {}}
+    segments.append(current)
+    # forwarded skip-edges (src and dst non-adjacent but fused into the same
+    # segment by the chain in between) keep their intermediate in scratch too
+    for d in graph_plan.decisions:
+        if not d.forwarded:
+            continue
+        for seg in segments:
+            if d.src in seg["nodes"] and d.dst in seg["nodes"] \
+                    and d.tensor not in seg["scratch"]:
+                seg["scratch"].append(d.tensor)
+                if d.shuffle_axes:
+                    seg["shuffle"][d.tensor] = list(d.shuffle_axes)
+    # a forwarded edge whose endpoints land in *different* segments (its
+    # chain was cut by a spilled edge in between) cannot ride a scratch ref
+    # across pallas_call boundaries — it must materialize like a spill
+    in_scratch = {t for seg in segments for t in seg["scratch"]}
+    return {
+        "segments": segments,
+        "materialized": [d.tensor for d in graph_plan.decisions
+                         if not d.forwarded or d.tensor not in in_scratch],
+    }
+
+
 def splitk_pallas_spec(plan) -> Optional[Dict[str, object]]:
     """Lower a spatial-reduction plan to its Pallas realization.
 

@@ -29,7 +29,8 @@ from typing import Dict, List, Mapping as TMapping, Optional, Sequence, Tuple
 from .hw import HardwareModel, Interconnect
 from .mapping import Mapping as _Mapping
 from .plan import DataflowPlan
-from .reuse import MemOpChoice, StorePlacement, memop_demand
+from .reuse import (ForwardLeg, MemOpChoice, StorePlacement,
+                    edge_forward_demand, memop_demand)
 
 
 @dataclass(frozen=True)
@@ -115,6 +116,19 @@ def _load_transfer(c: MemOpChoice, mapping: _Mapping,
                      demand, dram_bytes, noc_bytes)
 
 
+def forward_transfer(access, level: int, leg: ForwardLeg, mapping: _Mapping,
+                     hw: HardwareModel, kind: str) -> _Transfer:
+    """The :class:`_Transfer` of an access riding a forwarded inter-kernel
+    edge (``pipeline`` co-planning): on-chip demand from
+    :func:`~repro.core.reuse.edge_forward_demand`, zero DRAM.  A ``free``
+    leg is the graph bound's zero-cost floor."""
+    if leg.kind == "free":
+        return _Transfer(access.label(), level, kind, {}, 0.0, 0.0)
+    demand, noc_bytes = edge_forward_demand(access, mapping,
+                                            leg.shuffle_axes, hw)
+    return _Transfer(access.label(), level, kind, demand, 0.0, noc_bytes)
+
+
 def _store_transfer(s: StorePlacement, mapping: _Mapping,
                     hw: HardwareModel) -> _Transfer:
     active = mapping.active_cores()
@@ -168,7 +182,8 @@ def _contended_time(transfers: Sequence[_Transfer],
     for t in transfers:
         for res, b in t.demand.items():
             busy[res] = busy.get(res, 0.0) + b / pools[res]
-    return max(busy.values())
+    # a free forwarded leg contributes a transfer with empty demand
+    return max(busy.values(), default=0.0)
 
 
 # --------------------------------------------------------------------------
@@ -190,7 +205,8 @@ def pipelined_loop_time(I: int, t_load: float, t_store: float,
 # --------------------------------------------------------------------------
 def estimate(plan: DataflowPlan, hw: HardwareModel, *,
              pipeline_outer_levels: bool = False,
-             transfers: Optional[Sequence[_Transfer]] = None) -> PlanCost:
+             transfers: Optional[Sequence[_Transfer]] = None,
+             fwd: Optional[TMapping[str, ForwardLeg]] = None) -> PlanCost:
     """Estimate end-to-end execution time of one candidate plan.
 
     ``pipeline_outer_levels=False`` is the paper-faithful model (overlap only
@@ -201,6 +217,12 @@ def estimate(plan: DataflowPlan, hw: HardwareModel, *,
     ``transfers`` may be supplied by callers that already materialized the
     plan's transfer list (``BoundContext.transfers_for``); it must equal
     what this function would rebuild.
+
+    ``fwd`` maps tensor names to :class:`~repro.core.reuse.ForwardLeg`\\ s for
+    accesses riding a forwarded inter-kernel edge (the pipeline co-planner):
+    those transfers are priced on-chip (L1 + re-shuffle rings) instead of
+    through DRAM.  ``None``/empty leaves the model bit-identical to the
+    historical single-kernel path.
     """
     m = plan.mapping
     prog = m.program
@@ -211,8 +233,25 @@ def estimate(plan: DataflowPlan, hw: HardwareModel, *,
     n = len(loops)
 
     if transfers is None:
-        transfers = [_load_transfer(c, m, hw) for c in plan.loads]
-        transfers += [_store_transfer(s, m, hw) for s in plan.stores]
+        if fwd:
+            transfers = []
+            for c in plan.loads:
+                leg = fwd.get(c.access.tensor.name)
+                transfers.append(
+                    forward_transfer(c.access, c.hoist.level, leg, m, hw,
+                                     "load")
+                    if leg is not None else _load_transfer(c, m, hw))
+            for s in plan.stores:
+                leg = fwd.get(s.access.tensor.name)
+                # reduce-combining stores never forward (the pipeline
+                # legality rule spills them), so the leg is ignored there
+                transfers.append(
+                    forward_transfer(s.access, s.level, leg, m, hw, "store")
+                    if leg is not None and not s.reduce_axes
+                    else _store_transfer(s, m, hw))
+        else:
+            transfers = [_load_transfer(c, m, hw) for c in plan.loads]
+            transfers += [_store_transfer(s, m, hw) for s in plan.stores]
     by_level: Dict[int, List[_Transfer]] = {}
     for t in transfers:
         by_level.setdefault(t.level, []).append(t)

@@ -126,6 +126,13 @@ class SearchBudget:
     # axes with partial-sum accumulate/forwarding epilogues.  Off restores
     # the parallel-only space (the reduction benchmarks' baseline column).
     spatial_reduction: bool = True
+    # kernel-graph co-planning (repro.pipeline): allow producer->consumer
+    # intermediates to be *forwarded* through the distributed on-chip
+    # memories instead of spilled to DRAM.  Off restores fully independent
+    # per-kernel planning (every edge pays the DRAM round trip) — the
+    # pipeline benchmarks' `dram_roundtrip_us` baseline.  Ignored by the
+    # single-kernel planners.
+    pipeline_forwarding: bool = True
     # process-parallel search sharding (plan_kernel_multi): None = resolve
     # from REPRO_PLANNER_WORKERS (default os.cpu_count()); 0/1 = inline.
     # Selection-invariant, so it is excluded from plan-cache keys

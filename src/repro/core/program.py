@@ -145,13 +145,22 @@ def _ceil(a: int, b: int) -> int:
 
 def matmul_program(M: int, N: int, K: int, *, bm: int, bn: int, bk: int,
                    dtype_bytes: int = 2, acc_bytes: int = 4,
-                   name: str = "matmul") -> TileProgram:
+                   name: str = "matmul",
+                   tensor_names: Tuple[str, str, str] = ("A", "B", "C")
+                   ) -> TileProgram:
     """``C[M,N] = A[M,K] @ B[K,N]`` — output-stationary tiling, the paper's
     running example (Listing 1).  Grid = (gx over M-tiles, gy over N-tiles);
-    sequential k over K-tiles; body = one (bm,bk)x(bk,bn) tile matmul."""
-    A = TensorSpec("A", (M, K), dtype_bytes)
-    B = TensorSpec("B", (K, N), dtype_bytes)
-    C = TensorSpec("C", (M, N), dtype_bytes)
+    sequential k over K-tiles; body = one (bm,bk)x(bk,bn) tile matmul.
+
+    ``tensor_names`` renames (A, B, C) so chained kernels of a pipeline
+    graph can share an intermediate tensor by name (e.g. the two GEMMs of an
+    MLP both calling their shared activation "Y"); the default leaves every
+    historical program — and therefore every cache key and golden — intact.
+    """
+    an, bn_name, cn = tensor_names
+    A = TensorSpec(an, (M, K), dtype_bytes)
+    B = TensorSpec(bn_name, (K, N), dtype_bytes)
+    C = TensorSpec(cn, (M, N), dtype_bytes)
     gx, gy, k = "gx", "gy", "k"
     loads = (
         TileAccess(A, AffineMap.from_terms({gx: 1}, {k: 1}), (bm, bk), "load"),
@@ -266,9 +275,87 @@ def flash_decode_program(batch_heads: int, seq_kv: int, head_dim: int, *,
         accumulators=(("O_acc", head_dim * 4), ("m_l", 2 * 4)))
 
 
+def qk_matmul_program(batch_heads: int, seq_q: int, seq_kv: int,
+                      head_dim: int, *, bq: int, bkv: int,
+                      dtype_bytes: int = 2,
+                      name: str = "qk_matmul") -> TileProgram:
+    """The *unfused* attention score kernel: ``S[h, q, kv] = Q @ K^T``.
+
+    Where :func:`flash_attention_program` fuses the whole attention forward
+    into one tile body, this is the first half of the two-kernel chain the
+    pipeline planner co-plans (qk -> softmax+pv): grid = (h, gq, gkv), no
+    sequential loop (the contraction over ``head_dim`` fits one tile), and
+    the score tile ``S`` is the intermediate tensor the graph edge carries.
+    """
+    H = batch_heads
+    Q = TensorSpec("Q", (H, seq_q, head_dim), dtype_bytes)
+    K = TensorSpec("K", (H, seq_kv, head_dim), dtype_bytes)
+    S = TensorSpec("S", (H, seq_q, seq_kv), dtype_bytes)
+    h, gq, gkv = "h", "gq", "gkv"
+    loads = (
+        TileAccess(Q, AffineMap.from_terms({h: 1}, {gq: 1}), (1, bq, head_dim),
+                   "load"),
+        TileAccess(K, AffineMap.from_terms({h: 1}, {gkv: 1}),
+                   (1, bkv, head_dim), "load"),
+    )
+    stores = (
+        TileAccess(S, AffineMap.from_terms({h: 1}, {gq: 1}, {gkv: 1}),
+                   (1, bq, bkv), "store"),
+    )
+    body = (TileOp("qk_matmul", "mat", work=2.0 * bq * bkv * head_dim,
+                   segment=0),)
+    return TileProgram(
+        name=f"{name}_h{H}_q{seq_q}_kv{seq_kv}_d{head_dim}_b{bq}x{bkv}",
+        grid_dims=(LoopDim(h, H), LoopDim(gq, _ceil(seq_q, bq)),
+                   LoopDim(gkv, _ceil(seq_kv, bkv))),
+        seq_dims=(),
+        loads=loads, stores=stores, body=body,
+        accumulators=(("S_acc", bq * bkv * 4),))
+
+
+def softmax_pv_program(batch_heads: int, seq_q: int, seq_kv: int,
+                       head_dim: int, *, bq: int, bkv: int,
+                       dtype_bytes: int = 2,
+                       name: str = "softmax_pv") -> TileProgram:
+    """The second half of the unfused attention chain:
+    ``O[h, q, d] = softmax(S) @ V`` with the online-softmax statistics
+    computed over the ``kv`` walk.  Loads the score tensor ``S`` produced by
+    :func:`qk_matmul_program` — tile shape ``(1, bq, bkv)`` matches the
+    producer's store tile exactly, which is the pipeline forwarding
+    legality requirement."""
+    H = batch_heads
+    S = TensorSpec("S", (H, seq_q, seq_kv), dtype_bytes)
+    V = TensorSpec("V", (H, seq_kv, head_dim), dtype_bytes)
+    O = TensorSpec("O", (H, seq_q, head_dim), dtype_bytes)
+    h, gq, kv = "h", "gq", "kv"
+    loads = (
+        TileAccess(S, AffineMap.from_terms({h: 1}, {gq: 1}, {kv: 1}),
+                   (1, bq, bkv), "load"),
+        TileAccess(V, AffineMap.from_terms({h: 1}, {kv: 1}),
+                   (1, bkv, head_dim), "load"),
+    )
+    stores = (
+        TileAccess(O, AffineMap.from_terms({h: 1}, {gq: 1}),
+                   (1, bq, head_dim), "store"),
+    )
+    body = (
+        TileOp("softmax_stats", "vec", work=4.0 * bq * bkv, segment=0),
+        TileOp("rescale", "vec", work=2.0 * bq * head_dim, segment=0),
+        TileOp("pv_matmul", "mat", work=2.0 * bq * bkv * head_dim, segment=1),
+    )
+    return TileProgram(
+        name=f"{name}_h{H}_q{seq_q}_kv{seq_kv}_d{head_dim}_b{bq}x{bkv}",
+        grid_dims=(LoopDim(h, H), LoopDim(gq, _ceil(seq_q, bq))),
+        seq_dims=(LoopDim(kv, _ceil(seq_kv, bkv)),),
+        loads=loads, stores=stores, body=body,
+        accumulators=(("O_acc", bq * head_dim * 4), ("m_l", 2 * bq * 4)))
+
+
 def moe_gmm_program(n_experts: int, capacity: int, d_in: int, d_out: int, *,
                     bm: int, bn: int, bk: int, dtype_bytes: int = 2,
-                    acc_bytes: int = 4, name: str = "moe_gmm") -> TileProgram:
+                    acc_bytes: int = 4, name: str = "moe_gmm",
+                    tensor_names: Tuple[str, str, str] = ("X", "W", "O")
+                    ) -> TileProgram:
     """Grouped per-expert GEMM (the MoE FFN contraction):
     ``O[e, cap, d_out] = X[e, cap, d_in] @ W[e, d_in, d_out]``.
 
@@ -276,10 +363,15 @@ def moe_gmm_program(n_experts: int, capacity: int, d_in: int, d_out: int, *,
     sequential ``k`` over d_in tiles — the expert-contraction reduction.
     Small per-expert capacities with a deep ``d_in`` leave the parallel grid
     thin, exactly where a split-K bind on ``k`` pays.
+
+    ``tensor_names`` renames (X, W, O) for pipeline graphs chaining two
+    expert contractions through a shared hidden tensor; the default keeps
+    every historical program identical.
     """
-    X = TensorSpec("X", (n_experts, capacity, d_in), dtype_bytes)
-    W = TensorSpec("W", (n_experts, d_in, d_out), dtype_bytes)
-    O = TensorSpec("O", (n_experts, capacity, d_out), dtype_bytes)
+    xn, wn, on = tensor_names
+    X = TensorSpec(xn, (n_experts, capacity, d_in), dtype_bytes)
+    W = TensorSpec(wn, (n_experts, d_in, d_out), dtype_bytes)
+    O = TensorSpec(on, (n_experts, capacity, d_out), dtype_bytes)
     e, gi, gj, k = "e", "gi", "gj", "k"
     loads = (
         TileAccess(X, AffineMap.from_terms({e: 1}, {gi: 1}, {k: 1}),

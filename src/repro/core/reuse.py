@@ -95,6 +95,73 @@ class MemOpChoice:
 
 
 @dataclass(frozen=True)
+class ForwardLeg:
+    """How one access of a kernel participates in an *inter-kernel* forwarded
+    edge (the pipeline co-planner's on-chip handoff; DESIGN_PIPELINE.md).
+
+    ``kind``:
+
+    * ``"send"`` — a producer store pinned to the distributed local memories:
+      the tile is written to the producing core's L1 instead of DRAM and stays
+      resident until the consumer kernel runs;
+    * ``"recv"`` — a consumer load served from the distributed local
+      memories: the tile is read from the producing core's L1; when the two
+      mappings' spatial digits disagree on ``shuffle_axes`` the tile
+      additionally crosses one NoC ring per mismatched axis (the re-shuffle
+      leg);
+    * ``"free"`` — the access costs nothing (no time, no bytes, no
+      contention).  Never a real dataflow: it is the admissible *floor* the
+      graph-level branch-and-bound uses (any realizable edge handling —
+      spilled or forwarded — prices the access at >= 0 on every resource,
+      so the free-leg simulation lower-bounds them all).
+    """
+    tensor: str
+    kind: str                          # "send" | "recv" | "free"
+    shuffle_axes: Tuple[str, ...] = ()
+
+
+def edge_forward_demand(access: TileAccess, mapping: Mapping,
+                        shuffle_axes: Sequence[str], hw: HardwareModel
+                        ) -> Tuple[Dict[str, float], float]:
+    """Array-wide per-issue resource demand of one *forwarded* edge access
+    (the on-chip analogue of :func:`memop_demand`): ``(demand, noc_bytes)``.
+
+    A send touches the local memory once per active core; a recv touches it
+    twice (remote read at the producer's L1 port + landing write at the
+    consumer's) and moves the tile across one ring per mismatched spatial
+    digit.  DRAM demand is zero by construction — that is the point of
+    forwarding."""
+    active = mapping.active_cores()
+    tb = float(access.tile_bytes)
+    demand: Dict[str, float] = {}
+    noc_bytes = 0.0
+    if access.kind == "store":
+        demand["l1"] = tb * active
+    else:
+        demand["l1"] = 2.0 * tb * active
+        for a in shuffle_axes:
+            ic = hw.interconnect_along(a)
+            if ic is None:
+                continue
+            leg = tb * active
+            demand[ic.name] = demand.get(ic.name, 0.0) + leg
+            noc_bytes += leg
+    return demand, noc_bytes
+
+
+def forward_resident_bytes(access: TileAccess, mapping: Mapping) -> int:
+    """Per-core local-memory bytes the forwarded intermediate occupies while
+    resident between the producer and consumer phases: the (padded) tile grid
+    of the tensor, spread over the producer's active cores (each core keeps
+    the tiles it produced)."""
+    tiles = 1
+    for dim, blk in zip(access.tensor.shape, access.tile_shape):
+        tiles *= -(-dim // blk) if blk else 1
+    per_core = -(-tiles // max(1, mapping.active_cores()))
+    return per_core * access.tile_bytes
+
+
+@dataclass(frozen=True)
 class StorePlacement:
     """Where (and how) one store issues.
 

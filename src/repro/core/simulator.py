@@ -41,12 +41,12 @@ from __future__ import annotations
 import itertools
 import math
 from dataclasses import dataclass
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Mapping as TMapping, Optional, Sequence, Tuple
 
 from .hw import HardwareModel
 from .perfmodel import body_compute_seconds, pipelined_loop_time
 from .plan import DataflowPlan
-from .reuse import MemOpChoice, StorePlacement
+from .reuse import ForwardLeg, MemOpChoice, StorePlacement
 
 
 @dataclass(frozen=True)
@@ -102,7 +102,9 @@ def _is_active(plan: DataflowPlan, env: Dict[str, int]) -> bool:
 
 def _reduce_epilogue_cost(mapping, outer_stores, n_active: int, red_act: int,
                           hw: HardwareModel, dram_bw: float,
-                          link_bw: Dict[str, float]
+                          link_bw: Dict[str, float], *,
+                          fwd: Optional[TMapping[str, ForwardLeg]] = None,
+                          l1_bw: float = 0.0
                           ) -> Tuple[float, float, float]:
     """Per-wave hoisted-store cost (time, dram bytes, noc bytes), including
     the spatial-reduction epilogue.  ``accum`` read-modify-writes every
@@ -110,11 +112,22 @@ def _reduce_epilogue_cost(mapping, outer_stores, n_active: int, red_act: int,
     the axis NoC in per-axis stages (log-depth combining tree vs ``r - 1``
     neighbor hops per stage) and only the owner core stores.  Shared
     verbatim by the wave-class simulator, the reference loop, and the
-    vectorized engine so the three stay bit-identical."""
+    vectorized engine so the three stay bit-identical.
+
+    ``fwd`` marks stores riding a forwarded inter-kernel edge (pipeline
+    co-planning): a plain forwarded store writes the producing core's L1
+    (all cores concurrently: ``tb / l1_bw``) and touches no DRAM; a
+    ``free`` leg costs nothing (the graph bound's floor).  Reduce-combining
+    stores ignore the leg — the pipeline legality rule spills them."""
     chans = hw.global_channels()
     t = db = nb = 0.0
     for s in outer_stores:
         tb = s.access.tile_bytes
+        leg = fwd.get(s.access.tensor.name) if fwd else None
+        if leg is not None and not s.reduce_axes:
+            if leg.kind != "free":
+                t += tb / l1_bw
+            continue
         if s.reduce_axes and red_act > 1:
             if s.reduce_style == "accum":
                 db += 2.0 * tb * n_active
@@ -247,7 +260,8 @@ def _loop_digit_groups(plan: DataflowPlan, coords: Sequence[Dict[str, int]]
 
 def simulate(plan: DataflowPlan, hw: HardwareModel, *,
              launch_overhead_s: float = 20e-6,
-             wave_overhead_s: float = 2e-6) -> SimResult:
+             wave_overhead_s: float = 2e-6,
+             fwd: Optional[TMapping[str, ForwardLeg]] = None) -> SimResult:
     """Simulate plan execution by wave equivalence class (exact).
 
     For each class: per-core inner-loop time uses the double-buffered pipeline
@@ -256,7 +270,17 @@ def simulate(plan: DataflowPlan, hw: HardwareModel, *,
     (barrier), plus a dispatch overhead.  Hoisted transfers are charged at the
     waves where their enclosing temporal index changes.  Identical math to
     :func:`simulate_reference` at stride 1, without visiting every wave.
+
+    ``fwd`` maps tensor names to :class:`~repro.core.reuse.ForwardLeg`\\ s
+    for accesses riding a forwarded inter-kernel edge (the pipeline
+    co-planner's two-phase producer/consumer execution): a ``send`` store
+    lands in the producing core's L1, a ``recv`` load reads the tile back
+    from distributed L1 — crossing one NoC ring per mismatched spatial
+    digit (``shuffle_axes``, each ring contended by every active core
+    pulling through it) — and neither touches DRAM.  ``None``/empty keeps
+    the simulation bit-identical to the historical single-kernel path.
     """
+    fwd = fwd or {}
     m = plan.mapping
     prog = m.program
     t_body = body_compute_seconds(plan, hw)
@@ -296,6 +320,23 @@ def simulate(plan: DataflowPlan, hw: HardwareModel, *,
         chan_users: Dict[Tuple[int, ...], int] = {}
         ring_users: Dict[Tuple[str, Tuple[Tuple[str, int], ...]], int] = {}
         for c in inner_loads:
+            leg = fwd.get(c.access.tensor.name)
+            if leg is not None:
+                # forwarded recv: no DRAM users; each active core pulls its
+                # own tile through the re-shuffle rings (per-core users, not
+                # per-multicast — every tile is distinct)
+                if leg.kind != "free":
+                    for core in active:
+                        for a in leg.shuffle_axes:
+                            ic = hw.interconnect_along(a)
+                            if ic is None:
+                                continue
+                            other = tuple(sorted((k, v)
+                                                 for k, v in core.items()
+                                                 if k != a))
+                            rk = (ic.name, other)
+                            ring_users[rk] = ring_users.get(rk, 0) + 1
+                continue
             if not c.bcast_axes:
                 for core in active:
                     ch = hw.channel_of_core(core)
@@ -327,6 +368,23 @@ def simulate(plan: DataflowPlan, hw: HardwareModel, *,
             t_load = 0.0
             for c in inner_loads:
                 tb = c.access.tile_bytes
+                leg = fwd.get(c.access.tensor.name)
+                if leg is not None:
+                    if leg.kind == "free":
+                        continue
+                    # on-chip receive: remote L1 read + re-shuffle ring hops
+                    t_leg = tb / l1_bw
+                    for a in leg.shuffle_axes:
+                        ic = hw.interconnect_along(a)
+                        if ic is None:
+                            continue
+                        other = tuple(sorted((k, v) for k, v in core.items()
+                                             if k != a))
+                        users = max(1, ring_users.get((ic.name, other), 1))
+                        t_leg += tb / (link_bw[ic.name] / users)
+                    t_load += t_leg
+                    t_load += tb / l1_bw        # local landing, like any load
+                    continue
                 if not c.bcast_axes:
                     ch = hw.channel_of_core(core)
                     users = max(1, chan_users.get(ch, 1))
@@ -350,6 +408,11 @@ def simulate(plan: DataflowPlan, hw: HardwareModel, *,
                 t_load += tb / l1_bw
             t_store = 0.0
             for s in inner_stores:
+                leg = fwd.get(s.access.tensor.name)
+                if leg is not None and not s.reduce_axes:
+                    if leg.kind != "free":
+                        t_store += s.access.tile_bytes / l1_bw
+                    continue
                 ch = hw.channel_of_core(core)
                 users = max(1, chan_users.get(ch, 1))
                 t_store += s.access.tile_bytes / (dram_bw / max(1, users))
@@ -367,6 +430,24 @@ def simulate(plan: DataflowPlan, hw: HardwareModel, *,
             seq_issues = (math.prod(seq_extents[:c.hoist.level - n_temporal])
                           if c.hoist.level > n_temporal else 1)
             tb = c.access.tile_bytes * c.hoist.tiles_per_issue * seq_issues
+            leg = fwd.get(c.access.tensor.name)
+            if leg is not None:
+                if leg.kind == "free":
+                    hoist_info.append((0.0, 0.0, 0.0))
+                    continue
+                # bulk on-chip receive: every active core pulls its slab from
+                # distributed L1 concurrently; each mismatched axis carries
+                # the whole per-ring slab set through its ring serially
+                t_c = tb / l1_bw
+                nb = 0.0
+                for a in leg.shuffle_axes:
+                    ic = hw.interconnect_along(a)
+                    if ic is None:
+                        continue
+                    t_c += tb * sizes[a] / link_bw[ic.name]
+                    nb += tb * n_active
+                hoist_info.append((t_c, 0.0, nb))
+                continue
             if c.bcast_axes:
                 repl = math.prod(sizes[a] for a in c.bcast_axes)
                 producers = max(1, n_active // repl)
@@ -393,6 +474,13 @@ def simulate(plan: DataflowPlan, hw: HardwareModel, *,
         inner_dram = inner_noc = 0.0
         for c in inner_loads:
             tb = c.access.tile_bytes * iters
+            leg = fwd.get(c.access.tensor.name)
+            if leg is not None:
+                if leg.kind != "free":
+                    for a in leg.shuffle_axes:
+                        if hw.interconnect_along(a) is not None:
+                            inner_noc += tb * n_active
+                continue
             if c.bcast_axes:
                 repl = math.prod(sizes[a] for a in c.bcast_axes)
                 producers = max(1, n_active // repl)
@@ -404,9 +492,13 @@ def simulate(plan: DataflowPlan, hw: HardwareModel, *,
             else:
                 inner_dram += tb * n_active
         for s in inner_stores:
+            leg = fwd.get(s.access.tensor.name)
+            if leg is not None and not s.reduce_axes:
+                continue                        # on-chip: no DRAM bytes
             inner_dram += s.access.tile_bytes * iters * n_active
         ostore_t, ostore_dram, ostore_noc = _reduce_epilogue_cost(
-            m, outer_stores, n_active, red_act, hw, dram_bw, link_bw)
+            m, outer_stores, n_active, red_act, hw, dram_bw, link_bw,
+            fwd=fwd, l1_bw=l1_bw)
         return (wave_time, inner_dram, inner_noc, hoist_info, ostore_t,
                 ostore_dram, ostore_noc)
 

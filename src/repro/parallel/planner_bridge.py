@@ -484,6 +484,40 @@ def lower_reduction_bind(mapping) -> List[Dict[str, Any]]:
     return out
 
 
+def lower_forwarded_edge(decision) -> Dict[str, Any]:
+    """Lower one pipeline edge decision
+    (:class:`repro.pipeline.EdgeDecision`) to its pod-level XLA realization.
+
+    At mesh granularity the "distributed local memories" are the chips'
+    HBMs, so a *forwarded* edge means the producer's output shard stays
+    resident on-device with its buffer donated straight into the consumer
+    (no host/DCN round trip), and each mismatched spatial digit becomes a
+    re-shard collective on that axis:
+
+    * aligned (no shuffle axes)  -> pure donation: producer and consumer
+      agree on the sharding, XLA aliases the buffers;
+    * shuffle axes               -> one ``all_to_all`` per mismatched mesh
+      axis (the NoC re-shuffle leg's collective face).
+
+    A *spilled* edge round-trips through the global level instead —
+    device-to-host offload + reload, the pod analogue of the DRAM handoff.
+    """
+    if not decision.forwarded:
+        return {
+            "edge": [decision.src, decision.dst, decision.tensor],
+            "placement": "offload",
+            "transfer": "device_to_host+reload",
+            "collectives": [],
+        }
+    return {
+        "edge": [decision.src, decision.dst, decision.tensor],
+        "placement": "resident",
+        "transfer": "donate",
+        "collectives": [{"axis": a, "collective": "all_to_all"}
+                        for a in decision.shuffle_axes],
+    }
+
+
 def tileloom_view(plan: ShardingPlan, cfg: ModelConfig) -> str:
     """Render the plan as its TileLoom tile-program mapping (for reports)."""
     batch = plan.mesh_axes("batch") or "-"

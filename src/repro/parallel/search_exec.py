@@ -229,6 +229,53 @@ def rank_sharded(programs: Sequence, hw, budget, *, spatial_reuse: bool,
     return [c for _, c in entries[:budget.top_k]]
 
 
+# ------------------------------------------------------- node-level pools
+def _plan_node_pool_job(task: Dict[str, Any]) -> List[Dict[str, Any]]:
+    """Build one pipeline node's candidate pool (per-block-shape B&B +
+    profiling, ``repro.pipeline.planner.node_candidate_pool``) in a worker
+    process; returns the serialized candidates in pool order."""
+    os.environ[WORKERS_ENV] = "1"        # no nested pools
+    from repro.core import planner
+    from repro.pipeline.planner import node_candidate_pool
+    from repro.plancache import serialize
+    programs = [serialize.program_from_dict(d) for d in task["programs"]]
+    hw = hw_from_spec(task["hw"])
+    budget = planner.SearchBudget(**task["budget"])
+    pool = node_candidate_pool(programs, hw, budget, engine=task["engine"])
+    return [serialize.candidate_to_dict(c) for c in pool]
+
+
+def plan_node_pools(program_lists: Sequence[Sequence], hw, budget, *,
+                    engine: Optional[str], workers: int) -> Optional[List]:
+    """Shard the per-node candidate-pool searches of a pipeline graph
+    across the worker pool — one job per node (each node's search is itself
+    the normal inline two-step selection, so pools are bit-identical to the
+    sequential per-node loop).  Returns per-node Candidate lists in node
+    order, or None when sharding is unavailable (caller runs inline)."""
+    from repro.core import planner
+    from repro.plancache import serialize
+    spec = hw_spec(hw)
+    if spec is None:
+        return None
+    engine = planner.resolve_engine(engine)
+    wbudget = dataclasses.asdict(dataclasses.replace(budget, workers=1))
+    tasks = [{
+        "programs": [serialize.program_to_dict(p) for p in progs],
+        "hw": spec,
+        "budget": wbudget,
+        "engine": engine,
+    } for progs in program_lists]
+    try:
+        pool = _get_pool(min(workers, len(tasks)))
+        futs = [pool.submit(_plan_node_pool_job, t) for t in tasks]
+        results = [f.result() for f in futs]
+    except (OSError, pickle.PicklingError, BrokenProcessPool):
+        shutdown_pool()
+        return None
+    return [[serialize.candidate_from_dict(d) for d in cands]
+            for cands in results]
+
+
 # ---------------------------------------------------------------- map_jobs
 def _repro_env() -> Dict[str, Optional[str]]:
     """Snapshot of the planner/registry env contract.  The pool is

@@ -147,6 +147,10 @@ def cmd_warm(args: argparse.Namespace) -> int:
         jobs += [("mesh", (cfg.name, shape.name)) for cfg, shape, _ in cells()
                  if not archs or cfg.name in archs]
 
+    if args.pipeline:
+        jobs += [("pipeline", (spec, args.pipeline_hw))
+                 for spec in args.pipeline]
+
     if args.wormhole:
         try:
             from benchmarks.common import HW_CONFIGS
@@ -262,6 +266,13 @@ def main(argv: Sequence[str] | None = None) -> int:
     w.add_argument("--skip-gemm", action="store_true")
     w.add_argument("--skip-flash", action="store_true")
     w.add_argument("--skip-mesh", action="store_true")
+    w.add_argument("--pipeline", action="append", metavar="KIND:DIMS",
+                   help="warm a kernel-graph co-planning cell (repeatable): "
+                        "mlp2:MxDxF, attn:HxSqxSkvxD, or moe:ExCxDmxDf "
+                        "(graph-level entry + the per-node kernel entries)")
+    w.add_argument("--pipeline-hw", default="wormhole_8x8",
+                   help="hardware preset for --pipeline cells "
+                        "(default: wormhole_8x8)")
     w.add_argument("--wormhole", action="store_true",
                    help="also warm the Wormhole benchmark GEMM/flash tables")
     w.add_argument("--hw", default="all",

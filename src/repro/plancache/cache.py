@@ -63,6 +63,35 @@ class PlanCache:
         self.store.put(key, {"result": serialize.result_to_dict(result),
                              "tiles": meta["tiles"]}, meta)
 
+    # ------------------------------------------------------- pipeline API
+    def get_graph_result(self, graph, hw: HardwareModel,
+                         budget: Optional[SearchBudget]):
+        """Graph-level hit for ``repro.pipeline.plan_pipeline`` (schema-v3
+        keys composed from the node program signatures + edge list)."""
+        key = keying.graph_key(graph, hw, budget)
+        ent = self.store.get(key)
+        if ent is None:
+            return None
+        try:
+            return serialize.graph_plan_from_dict(ent["payload"]["graph"])
+        except (KeyError, TypeError, ValueError):
+            return None
+
+    def put_graph_result(self, graph, hw: HardwareModel,
+                         budget: Optional[SearchBudget], plan) -> None:
+        key = keying.graph_key(graph, hw, budget)
+        meta = {
+            "template": "pipeline_graph",
+            "graph": graph.name,
+            "shape": [len(n.programs) for n in graph.nodes],
+            "hw": keying.hw_digest(hw),
+            "hw_name": hw.name,
+            "kernel": graph.name,
+            "edges": [[e.src, e.dst, e.tensor] for e in graph.edges],
+        }
+        self.store.put(key, {"graph": serialize.graph_plan_to_dict(plan)},
+                       meta)
+
     def order_programs(self, programs: Sequence[TileProgram],
                        hw: HardwareModel) -> List[TileProgram]:
         """Warm-start hook: on a miss, reorder candidates around the nearest

@@ -33,8 +33,11 @@ from .serialize import program_to_dict
 # v2: spatial-reduction plan space — SpatialBind.reduce / Mapping.reduce_style
 # / StorePlacement.reduce_axes+reduce_style entered the serialized layout and
 # SearchBudget gained `spatial_reduction` (both change search semantics, so
-# v1 entries must read as misses, never deserialize into wrong plans)
-SCHEMA_VERSION = 2
+# v1 entries must read as misses, never deserialize into wrong plans).
+# v3: kernel-graph pipeline planning — graph-level entries (GraphPlan:
+# per-node candidates + per-edge forward/spill decisions) joined the layout
+# and SearchBudget gained `pipeline_forwarding`; v2 entries read as misses.
+SCHEMA_VERSION = 3
 
 
 def canonical_json(obj: Any) -> str:
@@ -86,6 +89,34 @@ def kernel_key(programs: Sequence[TileProgram], hw: HardwareModel,
         "profile": profile,
         "spatial_reuse": spatial_reuse,
         "temporal_reuse": temporal_reuse,
+    }
+    return digest_of(sig)
+
+
+def node_key(programs: Sequence[TileProgram]) -> str:
+    """The request digest of one pipeline node's candidate-program list —
+    the per-node building block :func:`graph_key` composes."""
+    return digest_of([program_signature(p) for p in programs])
+
+
+def graph_key(graph, hw: HardwareModel,
+              budget: Optional[SearchBudget]) -> str:
+    """Key for a pipeline co-planning invocation (``plan_pipeline``).
+
+    Composed from the per-node keys (:func:`node_key` over each node's
+    candidate programs) plus the edge list — so editing any node's
+    block-shape candidates, rewiring an edge, renaming an intermediate, or
+    changing the hardware/budget/schema all invalidate the graph entry,
+    while two graphs sharing a node still share that node's key
+    computation."""
+    sig = {
+        "schema": SCHEMA_VERSION,
+        "kind": "pipeline_graph",
+        "graph": graph.name,
+        "nodes": [[n.name, node_key(n.programs)] for n in graph.nodes],
+        "edges": [[e.src, e.dst, e.tensor] for e in graph.edges],
+        "hw": hw_digest(hw),
+        "budget": budget_signature(budget),
     }
     return digest_of(sig)
 

@@ -223,6 +223,57 @@ def candidate_from_dict(d: Dict[str, Any]) -> Candidate:
                      index=tuple(int(i) for i in idx) if idx else None)
 
 
+def graph_plan_to_dict(g) -> Dict[str, Any]:
+    """Serialize a :class:`repro.pipeline.planner.GraphPlan` (imported
+    duck-typed so the plancache package keeps zero import-time dependency
+    on the pipeline subsystem)."""
+    return {
+        "graph_name": g.graph_name,
+        "hw_name": g.hw_name,
+        "nodes": {name: candidate_to_dict(c) for name, c in g.nodes.items()},
+        "decisions": [{
+            "src": d.src, "dst": d.dst, "tensor": d.tensor,
+            "forwarded": d.forwarded,
+            "shuffle_axes": list(d.shuffle_axes),
+            "resident_bytes": d.resident_bytes,
+        } for d in g.decisions],
+        "node_sims": {name: sim_to_dict(s)
+                      for name, s in g.node_sims.items()},
+        "total_s": g.total_s,
+        "baseline_s": g.baseline_s,
+        "dram_roundtrip_s": g.dram_roundtrip_s,
+        "plan_seconds": g.plan_seconds,
+        "n_graph_combos": g.n_graph_combos,
+        "n_graph_pruned": g.n_graph_pruned,
+        "n_forwardable_pairs": g.n_forwardable_pairs,
+        "n_pairs": g.n_pairs,
+        "log": list(g.log),
+    }
+
+
+def graph_plan_from_dict(d: Dict[str, Any]):
+    from repro.pipeline.planner import EdgeDecision, GraphPlan
+    return GraphPlan(
+        graph_name=d["graph_name"], hw_name=d["hw_name"],
+        nodes={name: candidate_from_dict(c)
+               for name, c in d["nodes"].items()},
+        decisions=tuple(EdgeDecision(
+            e["src"], e["dst"], e["tensor"], forwarded=bool(e["forwarded"]),
+            shuffle_axes=tuple(str(a) for a in e["shuffle_axes"]),
+            resident_bytes=int(e["resident_bytes"])) for e in d["decisions"]),
+        node_sims={name: sim_from_dict(s)
+                   for name, s in d["node_sims"].items()},
+        total_s=float(d["total_s"]),
+        baseline_s=float(d["baseline_s"]),
+        dram_roundtrip_s=float(d["dram_roundtrip_s"]),
+        plan_seconds=float(d["plan_seconds"]),
+        n_graph_combos=int(d.get("n_graph_combos", 0)),
+        n_graph_pruned=int(d.get("n_graph_pruned", 0)),
+        n_forwardable_pairs=int(d.get("n_forwardable_pairs", 0)),
+        n_pairs=int(d.get("n_pairs", 0)),
+        log=[str(x) for x in d.get("log", [])])
+
+
 def result_to_dict(r: PlanResult) -> Dict[str, Any]:
     return {
         "kernel": r.kernel,

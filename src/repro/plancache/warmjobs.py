@@ -85,6 +85,26 @@ def _wormhole_flash(payload) -> str:
            f"{res.best.plan.describe()}"
 
 
+def _pipeline(payload) -> str:
+    """Warm one kernel-graph co-planning cell (``warm --pipeline SPEC``):
+    the graph-level entry plus the per-node kernel entries it resolves
+    through."""
+    spec, hw_name = payload
+    from repro.core import SearchBudget, get_hw
+    from repro.pipeline import graph_from_spec, plan_pipeline
+    from .cache import PlanCache
+    g = graph_from_spec(spec)
+    gp = plan_pipeline(g, get_hw(hw_name),
+                       budget=SearchBudget(top_k=4,
+                                           max_plans_per_mapping=48,
+                                           max_candidates=8000),
+                       cache=PlanCache())
+    return (f"[warm] pipeline {spec} on {hw_name} -> "
+            f"{gp.total_s * 1e6:.1f}us ({gp.n_forwarded()}/"
+            f"{len(gp.decisions)} edges forwarded, "
+            f"{gp.improvement:.2f}x vs DRAM handoff)")
+
+
 def _benchmark_gemm_entry():
     """The benchmark suite's ``tl_gemm`` + budget when the repo checkout is
     importable, else an equivalent local fallback — budgets must match the
@@ -113,6 +133,7 @@ _KINDS = {
     "mesh": _mesh,
     "wh_gemm": _wormhole_gemm,
     "wh_flash": _wormhole_flash,
+    "pipeline": _pipeline,
 }
 
 

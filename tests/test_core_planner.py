@@ -21,6 +21,17 @@ def prog():
     return matmul_program(1024, 1024, 1024, bm=64, bn=64, bk=64)
 
 
+def test_get_hw_unknown_name_lists_presets():
+    """An unknown preset name must fail loudly with the sorted list of
+    valid names (mirroring the run.py --suite contract)."""
+    from repro.core.hw import PRESETS
+    with pytest.raises(KeyError) as exc:
+        get_hw("wormhole_9x9")
+    msg = str(exc.value)
+    assert "unknown hardware preset 'wormhole_9x9'" in msg
+    assert str(sorted(PRESETS)) in msg
+
+
 def test_df_text_matches_paper_structure(hw):
     text = hw.df_text()
     for op in ("df.spatial_dim", "df.core", "df.memory", "df.mux",

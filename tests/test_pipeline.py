@@ -1,0 +1,416 @@
+"""Kernel-graph pipeline planner: graph IR, forwarding legality, the
+fwd-off reproduction property, scalar/batch bit-identity on forwarded
+simulations, graph B&B exactness, schema-v3 cache behavior, and the
+lowering specs (DESIGN_PIPELINE.md)."""
+import json
+from dataclasses import replace
+
+import pytest
+
+from repro.core import (SearchBudget, get_hw, matmul_program, simulate)
+from repro.core.batch_cost import HAVE_NUMPY, simulate_plans
+from repro.core.reuse import ForwardLeg
+from repro.pipeline import (PipelineEdge, PipelineGraph, PipelineNode,
+                            attn_qk_pv_graph, forward_spec, graph_from_spec,
+                            mlp2_graph, moe_ffn_graph, plan_pipeline)
+from repro.pipeline.planner import node_candidate_pool
+
+HW = get_hw("wormhole_8x8")
+BUDGET = SearchBudget(top_k=3, max_mappings=24, max_plans_per_mapping=12,
+                      max_candidates=2000, max_per_load=6, workers=1)
+SMALL_BLOCKS = ((64, 64, 64), (128, 128, 64), (128, 64, 128))
+
+
+def small_graph():
+    return mlp2_graph(4096, 128, 256, blocks=SMALL_BLOCKS)
+
+
+# --------------------------------------------------------------- graph IR
+def test_graph_validation_rejects_bad_graphs():
+    g = small_graph()
+    g.validate()                                    # the builder validates
+    with pytest.raises(ValueError, match="duplicate node"):
+        PipelineGraph("bad", (g.nodes[0], g.nodes[0]), ()).validate()
+    with pytest.raises(ValueError, match="topological"):
+        PipelineGraph("bad", (g.nodes[1], g.nodes[0]),
+                      (PipelineEdge("up", "down", "Y"),)).validate()
+    with pytest.raises(ValueError, match="unknown node"):
+        PipelineGraph("bad", g.nodes,
+                      (PipelineEdge("up", "nope", "Y"),)).validate()
+    # consumer loading the tensor at a different logical shape
+    bad_down = (matmul_program(4096, 128, 512, bm=64, bn=64, bk=64,
+                               tensor_names=("Y", "W2", "Z")),)
+    with pytest.raises(ValueError, match="disagrees"):
+        PipelineGraph("bad", (g.nodes[0], PipelineNode("down", bad_down)),
+                      (PipelineEdge("up", "down", "Y"),)).validate()
+
+
+def test_graph_validation_rejects_tensor_fanout():
+    """One intermediate leaving a producer on several edges would make the
+    per-edge forward/spill decisions ambiguous (legs are keyed by tensor
+    name within a node) — rejected at validation, never mispriced."""
+    g = small_graph()
+    third = PipelineNode("down2", g.nodes[1].programs)
+    with pytest.raises(ValueError, match="multiple edges"):
+        PipelineGraph("bad", g.nodes + (third,),
+                      (PipelineEdge("up", "down", "Y"),
+                       PipelineEdge("up", "down2", "Y"))).validate()
+
+
+def test_graph_from_spec():
+    assert graph_from_spec("mlp2:1024x128x256").name.startswith("mlp2_")
+    assert graph_from_spec("attn:8x512x512x64").name.startswith("attn_")
+    assert graph_from_spec("moe:4x512x128x256").name.startswith("moe_ffn_")
+    with pytest.raises(ValueError, match="unknown pipeline graph kind"):
+        graph_from_spec("nope:1x2x3")
+    with pytest.raises(ValueError, match="needs 3"):
+        graph_from_spec("mlp2:1x2")
+    with pytest.raises(ValueError, match="malformed"):
+        graph_from_spec("mlp2")
+
+
+# ------------------------------------------------- forwarding legality
+def test_forward_spec_legality_and_shuffle():
+    g = small_graph()
+    pools = [node_candidate_pool(list(n.programs), HW, BUDGET)
+             for n in g.nodes]
+    edge = g.edges[0]
+    specs = [(pc, cc, forward_spec(g, edge, pc.plan, cc.plan, HW))
+             for pc in pools[0] for cc in pools[1]]
+    legal = [(pc, cc, sp) for pc, cc, sp in specs if sp is not None]
+    assert legal, "at least one candidate pair must be forwardable"
+    for pc, cc, sp in legal:
+        st = g.edge_store(edge, pc.plan.program)
+        ld = g.edge_load(edge, cc.plan.program)
+        assert st.tile_shape == ld.tile_shape       # tiling legality
+        assert sp.resident_bytes > 0
+        assert sp.aligned == (not sp.shuffle_axes)
+    for pc, cc, sp in specs:
+        if sp is None:
+            st = g.edge_store(edge, pc.plan.program)
+            ld = g.edge_load(edge, cc.plan.program)
+            reasons = (
+                st.tile_shape != ld.tile_shape
+                or any(s.reduce_axes for s in pc.plan.stores
+                       if s.access.tensor.name == edge.tensor)
+                or any(c.bcast_axes for c in cc.plan.loads
+                       if c.access.tensor.name == edge.tensor)
+                or pc.plan.buffer_bytes() + sp_resident(g, edge, pc)
+                > HW.local_capacity()
+                or cc.plan.buffer_bytes() + sp_resident(g, edge, pc)
+                > HW.local_capacity())
+            assert reasons, "illegal spec must have a legality reason"
+
+
+def sp_resident(g, edge, pc):
+    from repro.core.reuse import forward_resident_bytes
+    return forward_resident_bytes(g.edge_store(edge, pc.plan.program),
+                                  pc.plan.mapping)
+
+
+def test_capacity_overflow_spills():
+    """An intermediate too large to stay resident next to the working
+    buffers must make every pair non-forwardable."""
+    g = mlp2_graph(65536, 128, 4096, blocks=((128, 128, 128),))
+    pools = [node_candidate_pool(list(n.programs), HW, BUDGET)
+             for n in g.nodes]
+    # Y = 64Ki x 4Ki bf16 = 512 MB >> 64 cores x 1.5 MB L1
+    for pc in pools[0]:
+        for cc in pools[1]:
+            assert forward_spec(g, g.edges[0], pc.plan, cc.plan, HW) is None
+    gp = plan_pipeline(g, HW, budget=BUDGET)
+    assert gp.n_forwarded() == 0
+
+
+# --------------------------------- fwd-off reproduces independent plans
+def test_forwarding_disabled_reproduces_independent_plans():
+    """The satellite property: ``pipeline_forwarding=False`` must select
+    exactly the standalone per-kernel winners and its graph time must equal
+    the sum of the standalone simulations (independent plans + the DRAM
+    handoff both already price)."""
+    g = small_graph()
+    base = plan_pipeline(g, HW,
+                         budget=replace(BUDGET, pipeline_forwarding=False))
+    pools = [node_candidate_pool(list(n.programs), HW, BUDGET)
+             for n in g.nodes]
+    assert all(not d.forwarded for d in base.decisions)
+    for node, pool in zip(g.nodes, pools):
+        assert base.nodes[node.name].plan == pool[0].plan
+        assert base.node_sims[node.name] == pool[0].sim
+    assert base.total_s == sum(p[0].sim.total_s for p in pools)
+    assert base.total_s == base.baseline_s
+    assert base.dram_roundtrip_s > 0
+
+
+def test_forwarding_improves_or_matches():
+    g = small_graph()
+    co = plan_pipeline(g, HW, budget=BUDGET)
+    base = plan_pipeline(g, HW,
+                         budget=replace(BUDGET, pipeline_forwarding=False))
+    assert co.total_s <= base.total_s
+    assert co.baseline_s == base.total_s
+
+
+# ------------------------------------------- scalar/batch bit-identity
+@pytest.mark.skipif(not HAVE_NUMPY, reason="batch engine needs numpy")
+def test_batch_equals_scalar_on_forwarded_sims():
+    g = small_graph()
+    gp = plan_pipeline(g, HW, budget=BUDGET)
+    pools = [node_candidate_pool(list(n.programs), HW, BUDGET)
+             for n in g.nodes]
+    edge = g.edges[0]
+    checked = 0
+    for pc in pools[0]:
+        for cc in pools[1]:
+            sp = forward_spec(g, edge, pc.plan, cc.plan, HW)
+            legsets = [None, {edge.tensor: ForwardLeg(edge.tensor, "free")}]
+            if sp is not None:
+                legsets += [{edge.tensor: sp.send_leg()}]
+            for plan, extra in ((pc.plan, legsets),
+                                (cc.plan,
+                                 [None,
+                                  {edge.tensor: ForwardLeg(edge.tensor,
+                                                           "free")}]
+                                 + ([{edge.tensor: sp.recv_leg()},
+                                     {edge.tensor: ForwardLeg(
+                                         edge.tensor, "recv",
+                                         ("x", "y"))}]
+                                    if sp is not None else []))):
+                for legs in extra:
+                    s = simulate(plan, HW, fwd=legs)
+                    b = simulate_plans([plan], HW, fwd=[legs])[0]
+                    assert s == b                   # bit-identical
+                    checked += 1
+    assert checked > 4
+
+
+def test_free_leg_floor_is_monotone():
+    """The graph bound's free-leg simulation must lower-bound every
+    realizable edge handling (spill and forward, aligned or shuffled)."""
+    g = small_graph()
+    pools = [node_candidate_pool(list(n.programs), HW, BUDGET)
+             for n in g.nodes]
+    edge = g.edges[0]
+    for pool, mk_leg in ((pools[0], lambda sp: sp.send_leg()),
+                         (pools[1], lambda sp: sp.recv_leg())):
+        for cand in pool:
+            free = simulate(cand.plan, HW,
+                            fwd={edge.tensor: ForwardLeg(edge.tensor,
+                                                         "free")})
+            assert free.total_s <= cand.sim.total_s     # <= spilled
+    for pc in pools[0]:
+        for cc in pools[1]:
+            sp = forward_spec(g, edge, pc.plan, cc.plan, HW)
+            if sp is None:
+                continue
+            for plan, leg in ((pc.plan, sp.send_leg()),
+                              (cc.plan, sp.recv_leg())):
+                free = simulate(plan, HW,
+                                fwd={edge.tensor: ForwardLeg(edge.tensor,
+                                                             "free")})
+                fwd = simulate(plan, HW, fwd={edge.tensor: leg})
+                assert free.total_s <= fwd.total_s      # <= forwarded
+
+
+# ------------------------------------------- analytic model fwd pricing
+def test_estimate_with_forward_legs():
+    """The analytic model's forwarded pricing (`estimate(fwd=)` /
+    `forward_transfer`): a forwarded edge access contributes zero DRAM
+    bytes, a shuffled recv contributes NoC bytes, and a free leg nothing."""
+    from repro.core import estimate
+    g = small_graph()
+    pools = [node_candidate_pool(list(n.programs), HW, BUDGET)
+             for n in g.nodes]
+    edge = g.edges[0]
+    pc, cc = pools[0][0], pools[1][0]
+    store = g.edge_store(edge, pc.plan.program)
+    load = g.edge_load(edge, cc.plan.program)
+
+    base = estimate(pc.plan, HW)
+    fwd = estimate(pc.plan, HW, fwd={edge.tensor: ForwardLeg(edge.tensor,
+                                                             "send")})
+    # the send leg removes exactly the store's DRAM bytes
+    removed = store.tile_bytes * pc.plan.mapping.active_cores() \
+        * [s for s in pc.plan.stores
+           if s.access.tensor.name == edge.tensor][0].issues_per_core
+    assert base.dram_bytes - fwd.dram_bytes == removed
+    free = estimate(pc.plan, HW, fwd={edge.tensor: ForwardLeg(edge.tensor,
+                                                              "free")})
+    assert free.dram_bytes == fwd.dram_bytes
+    assert free.total_s <= fwd.total_s
+
+    cbase = estimate(cc.plan, HW)
+    crecv = estimate(cc.plan, HW,
+                     fwd={edge.tensor: ForwardLeg(edge.tensor, "recv",
+                                                  ("x",))})
+    ld = [c for c in cc.plan.loads
+          if c.access.tensor.name == edge.tensor][0]
+    removed = load.tile_bytes * cc.plan.mapping.active_cores() \
+        * ld.hoist.tiles_per_issue * ld.hoist.issues_per_core
+    assert cbase.dram_bytes - crecv.dram_bytes == removed
+    assert crecv.noc_bytes > cbase.noc_bytes       # the re-shuffle leg
+
+
+# --------------------------------------------------- graph B&B exactness
+def test_graph_bnb_equals_exhaustive():
+    for g in (small_graph(),
+              attn_qk_pv_graph(4, 512, 512, 64,
+                               blocks=((64, 64), (128, 128)))):
+        bnb = plan_pipeline(g, HW, budget=BUDGET, use_bound=True)
+        ex = plan_pipeline(g, HW, budget=BUDGET, use_bound=False)
+        assert bnb.total_s == ex.total_s
+        assert bnb.describe() == ex.describe()
+        assert bnb.n_graph_pruned > 0 or bnb.n_graph_combos \
+            == ex.n_graph_combos
+
+
+# ------------------------------------------------------- plancache (v3)
+def test_graph_cache_roundtrip(tmp_path, monkeypatch):
+    from repro import plancache
+    from repro.plancache.store import PlanCacheStore
+    store = PlanCacheStore(root=tmp_path / "cache")
+    cache = plancache.PlanCache(store)
+    g = small_graph()
+    gp = plan_pipeline(g, HW, budget=BUDGET, cache=cache)
+    import repro.core.planner as P
+    calls = dict(P.PLAN_CALLS)
+    hit = plan_pipeline(g, HW, budget=BUDGET, cache=cache)
+    assert P.PLAN_CALLS == calls            # zero planner invocations
+    assert hit.total_s == gp.total_s
+    assert hit.describe() == gp.describe()
+    assert [d.forwarded for d in hit.decisions] \
+        == [d.forwarded for d in gp.decisions]
+    # a different budget (forwarding off) must not collide
+    miss = cache.get_graph_result(
+        g, HW, replace(BUDGET, pipeline_forwarding=False))
+    assert miss is None
+
+
+def test_v2_entries_read_as_misses_under_v3(tmp_path):
+    """Schema compat: entries written under schema v2 (pre-pipeline layout)
+    must read as misses under v3 — never deserialize, never crash."""
+    from repro import plancache
+    from repro.plancache.store import PlanCacheStore
+    assert plancache.keying.SCHEMA_VERSION >= 3
+    store = PlanCacheStore(root=tmp_path / "cache")
+    cache = plancache.PlanCache(store)
+    g = small_graph()
+    key = plancache.keying.graph_key(g, HW, BUDGET)
+    store.put(key, {"graph": {"arbitrary": "v2 payload"}}, {"template": "t"})
+    p = store._path(key)
+    data = json.loads(p.read_text())
+    data["schema"] = 2                      # a real pre-bump entry
+    p.write_text(json.dumps(data))
+    store.clear_memory()
+    misses = store.stats.misses
+    assert cache.get_graph_result(g, HW, BUDGET) is None
+    assert store.stats.misses == misses + 1
+
+
+def test_graph_key_composition():
+    from repro.plancache import keying
+    g = small_graph()
+    k1 = keying.graph_key(g, HW, BUDGET)
+    # structurally identical graph -> identical key (content addressing)
+    g2 = PipelineGraph(g.name, g.nodes,
+                       (PipelineEdge("up", "down", "Y"),))
+    assert keying.graph_key(g2, HW, BUDGET) == k1
+    g3 = PipelineGraph(g.name, g.nodes, ())
+    assert keying.graph_key(g3, HW, BUDGET) != k1
+    # budget knob flips the key
+    assert keying.graph_key(
+        g, HW, replace(BUDGET, pipeline_forwarding=False)) != k1
+    # node keys compose: a changed candidate list changes the graph key
+    g4 = PipelineGraph(g.name,
+                       (PipelineNode("up", g.nodes[0].programs[:1]),
+                        g.nodes[1]), g.edges)
+    assert keying.graph_key(g4, HW, BUDGET) != k1
+
+
+def test_graph_plan_serialization_roundtrip():
+    from repro.plancache import serialize
+    g = small_graph()
+    gp = plan_pipeline(g, HW, budget=BUDGET)
+    d = json.loads(json.dumps(serialize.graph_plan_to_dict(gp)))
+    back = serialize.graph_plan_from_dict(d)
+    assert back.total_s == gp.total_s
+    assert back.baseline_s == gp.baseline_s
+    assert back.describe() == gp.describe()
+    assert back.node_sims == gp.node_sims
+    for a, b in zip(back.decisions, gp.decisions):
+        assert a == b
+
+
+# ------------------------------------------------------- lowering specs
+def test_fused_pipeline_spec():
+    from repro.core import lower_jax
+    g = small_graph()
+    co = plan_pipeline(g, HW, budget=BUDGET)
+    spec = lower_jax.fused_pipeline_spec(co)
+    if co.n_forwarded():
+        assert len(spec["segments"]) == 1
+        seg = spec["segments"][0]
+        assert seg["nodes"] == ["up", "down"]
+        assert seg["scratch"] == ["Y"]
+        assert spec["materialized"] == []
+    base = plan_pipeline(g, HW,
+                         budget=replace(BUDGET, pipeline_forwarding=False))
+    spec = lower_jax.fused_pipeline_spec(base)
+    assert [s["nodes"] for s in spec["segments"]] == [["up"], ["down"]]
+    assert spec["materialized"] == ["Y"]
+
+
+def test_fused_pipeline_spec_materializes_cross_segment_edges():
+    """A forwarded skip-edge whose chain was cut by a spill (endpoints in
+    different segments) cannot ride a scratch ref across pallas_call
+    boundaries — it must materialize, never vanish from the spec."""
+    from types import SimpleNamespace
+    from repro.core import lower_jax
+    from repro.pipeline.planner import EdgeDecision
+    gp = SimpleNamespace(
+        nodes={"a": None, "b": None, "c": None},
+        decisions=(EdgeDecision("a", "b", "T1", forwarded=False),
+                   EdgeDecision("b", "c", "T2", forwarded=False),
+                   EdgeDecision("a", "c", "T3", forwarded=True)))
+    spec = lower_jax.fused_pipeline_spec(gp)
+    assert [s["nodes"] for s in spec["segments"]] == [["a"], ["b"], ["c"]]
+    assert sorted(spec["materialized"]) == ["T1", "T2", "T3"]
+
+
+def test_lower_forwarded_edge():
+    from repro.parallel.planner_bridge import lower_forwarded_edge
+    from repro.pipeline.planner import EdgeDecision
+    fwd = lower_forwarded_edge(EdgeDecision(
+        "up", "down", "Y", forwarded=True, shuffle_axes=("x",)))
+    assert fwd["placement"] == "resident"
+    assert fwd["collectives"] == [{"axis": "x", "collective": "all_to_all"}]
+    spill = lower_forwarded_edge(EdgeDecision("up", "down", "Y",
+                                              forwarded=False))
+    assert spill["placement"] == "offload" and spill["collectives"] == []
+
+
+# ------------------------------------------------ node-pool sharding
+def test_node_pools_sharded_matches_inline():
+    from repro.parallel import search_exec
+    g = small_graph()
+    program_lists = [list(n.programs) for n in g.nodes]
+    inline = [node_candidate_pool(p, HW, BUDGET) for p in program_lists]
+    sharded = search_exec.plan_node_pools(program_lists, HW, BUDGET,
+                                          engine=None, workers=2)
+    assert sharded is not None
+    for a, b in zip(inline, sharded):
+        assert len(a) == len(b)
+        for ca, cb in zip(a, b):
+            assert ca.plan == cb.plan
+            assert ca.cost == cb.cost
+            assert ca.sim == cb.sim
+
+
+# ----------------------------------------------------------- moe chain
+def test_moe_ffn_graph_forwards():
+    g = moe_ffn_graph(4, 512, 128, 256,
+                      blocks=((64, 64, 64), (128, 128, 128)))
+    co = plan_pipeline(g, HW, budget=BUDGET)
+    base = plan_pipeline(g, HW,
+                         budget=replace(BUDGET, pipeline_forwarding=False))
+    assert co.total_s <= base.total_s
