@@ -1,0 +1,133 @@
+"""Observability smoke: overhead budget, trace validity, explain render.
+
+The CI perf-smoke job runs this after the golden check.  It plans one
+plan_speed GEMM cell repeatedly and asserts the observability layer's
+contract (DESIGN_OBS.md):
+
+1. **bit-identity** — the traced search selects the same best plan with
+   the same cost as the untraced search, sequentially and sharded;
+2. **overhead budget** — best-of-N traced cold-plan time is within 10%
+   of best-of-N untraced (interleaved runs, min-of-N on both sides, so a
+   single scheduler hiccup cannot fail the gate);
+3. **trace validity** — the sharded run's span buffer is a valid Chrome
+   trace (required keys, numeric timestamps, proper per-track nesting)
+   and contains worker-category spans from >= 2 distinct worker pids;
+4. **explain** — ``repro.obs.explain`` renders the cell read-through the
+   plan cache (winner-vs-runner-up diff included).
+
+Exit code 0 = all assertions hold; failures raise with the measured
+numbers in the message.
+"""
+from __future__ import annotations
+
+import sys
+from dataclasses import replace
+from time import perf_counter
+
+from repro.core import get_hw, matmul_program, block_shape_candidates, \
+    plan_kernel_multi
+from repro.obs import explain as obs_explain
+from repro.obs import trace
+
+from .common import DEFAULT_BUDGET, row
+
+CELL = "gemm/wormhole_8x8/M1024_N1024_K4096"
+M, N, K = 1024, 1024, 4096
+N_RUNS = 5
+REPS = 3            # cold plans per timed sample (averages out timer noise)
+OVERHEAD_BUDGET = 0.10
+
+
+def _programs():
+    return [matmul_program(M, N, K, bm=bm, bn=bn, bk=bk)
+            for bm, bn, bk in block_shape_candidates(M, N, K)]
+
+
+def _plan(budget, traced: bool):
+    """One timed sample: ``REPS`` cold plans of the cell back to back;
+    returns (last PlanResult, wall seconds of the whole sample)."""
+    if traced:
+        trace.clear()
+        trace.enable()
+    else:
+        trace.disable()
+    hw = get_hw("wormhole_8x8")
+    t0 = perf_counter()
+    for _ in range(REPS):
+        res = plan_kernel_multi(_programs(), hw, budget=budget)
+    return res, perf_counter() - t0
+
+
+def main(full: bool = False, cache=None) -> dict:
+    budget1 = replace(DEFAULT_BUDGET, workers=1)
+
+    # 1+2: interleaved best-of-N, untraced vs traced, bit-identity checked
+    base_t, traced_t = [], []
+    base_res = traced_res = None
+    for _ in range(N_RUNS):
+        r, dt = _plan(budget1, traced=False)
+        base_res, base_t = r, base_t + [dt]
+        r, dt = _plan(budget1, traced=True)
+        traced_res, traced_t = r, traced_t + [dt]
+    trace.disable()
+    if base_res.best.plan.describe() != traced_res.best.plan.describe() \
+            or base_res.best.cost.total_s != traced_res.best.cost.total_s:
+        raise AssertionError(
+            f"traced search drifted: {traced_res.best.plan.describe()} "
+            f"vs {base_res.best.plan.describe()}")
+    overhead = min(traced_t) / min(base_t) - 1.0
+    if overhead > OVERHEAD_BUDGET:
+        raise AssertionError(
+            f"tracing overhead {overhead:.1%} exceeds "
+            f"{OVERHEAD_BUDGET:.0%} budget (untraced best "
+            f"{min(base_t):.3f}s, traced best {min(traced_t):.3f}s)")
+
+    # 3: sharded traced run — valid Chrome trace, >= 2 worker pids
+    trace.clear()
+    trace.enable()
+    sharded, _ = _plan(replace(DEFAULT_BUDGET, workers=4), traced=True)
+    events = trace.events()
+    trace.disable()
+    trace.clear()
+    if sharded.best.plan.describe() != base_res.best.plan.describe():
+        raise AssertionError(
+            f"sharded traced search drifted: "
+            f"{sharded.best.plan.describe()}")
+    problems = trace.validate_chrome_trace({"traceEvents": events})
+    if problems:
+        raise AssertionError(f"invalid trace: {problems[:5]}")
+    worker_pids = {e["pid"] for e in events if e.get("cat") == "worker"}
+    if len(worker_pids) < 2:
+        raise AssertionError(
+            f"expected worker spans from >= 2 processes, got pids "
+            f"{sorted(worker_pids)}")
+
+    # 4: explain read-through the plan cache (second resolve is a hit)
+    if cache is None:
+        from repro.plancache import PlanCache
+        cache = PlanCache()
+    obs_explain.resolve_kernel_cell(CELL, cache=cache)     # populate
+    text = obs_explain.explain(CELL, cache=cache)
+    if "winner vs runner-up" not in text or "mesh utilization" not in text:
+        raise AssertionError("explain output missing expected sections")
+
+    summary = {
+        "overhead": overhead,
+        "untraced_best_s": min(base_t),
+        "traced_best_s": min(traced_t),
+        "n_trace_events": len(events),
+        "n_worker_pids": len(worker_pids),
+    }
+    print(row("obs_smoke/overhead", min(traced_t) * 1e6,
+              f"untraced_us={min(base_t) * 1e6:.0f};"
+              f"overhead={overhead:+.1%};budget={OVERHEAD_BUDGET:.0%}"))
+    print(row("obs_smoke/trace", 0.0,
+              f"events={len(events)};worker_pids={len(worker_pids)};"
+              f"valid=yes"))
+    print(row("obs_smoke/explain", 0.0, f"chars={len(text)};cell={CELL}"))
+    return summary
+
+
+if __name__ == "__main__":
+    main()
+    print("obs_smoke: OK", file=sys.stderr)

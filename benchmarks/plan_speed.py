@@ -50,6 +50,7 @@ from typing import Dict, Optional
 
 from repro.core import (SearchBudget, fast_search_enabled,
                         flash_attention_program, get_hw, plan_kernel_multi)
+from repro.obs import metrics, trace
 from repro.parallel.search_exec import resolve_workers
 
 from .common import HW_CONFIGS, geomean, row, tl_gemm
@@ -65,6 +66,47 @@ JSON_PATH = os.path.join(
 GOLDEN_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                            "golden_plan_speed.json")
 FLASH_BUDGET = SearchBudget(top_k=5, max_plans_per_mapping=48)
+
+# the planner's per-phase wall-time attribution (repro.obs.metrics counter
+# ``planner_phase_seconds_total``); every cell reports its delta so the JSON
+# carries a per-phase breakdown of the cold search
+PHASES = ("enumerate", "estimate", "bnb", "simulate", "cache")
+
+
+def _phase_totals() -> Dict[str, float]:
+    c = metrics.counter("planner_phase_seconds_total")
+    return {p: c.value(phase=p) for p in PHASES}
+
+
+def _phase_delta(before: Dict[str, float]) -> Dict[str, float]:
+    after = _phase_totals()
+    return {p: after[p] - before[p] for p in PHASES
+            if after[p] - before[p] > 0}
+
+
+def tracing_active() -> bool:
+    """Span tracing on (``REPRO_TRACE`` / ``--trace`` / explicit enable) —
+    golden regeneration is refused while it is: goldens must be recorded
+    from an uninstrumented run."""
+    import os as _os
+    return trace.enabled() or bool(
+        _os.environ.get(trace.TRACE_ENV, "").strip())
+
+
+def write_golden(cells: Dict[str, Dict], path: str) -> None:
+    """Record the best-plan golden summary (shared by the standalone CLI's
+    ``--write-golden``/``--update-golden`` and ``run.py --update-golden``).
+    Refuses under tracing so instrumented runs can never redefine the
+    reference selections."""
+    if tracing_active():
+        raise RuntimeError(
+            "refusing to write plan_speed golden while tracing is enabled "
+            "(unset REPRO_TRACE / drop --trace and re-run)")
+    with open(path, "w") as f:
+        json.dump({"fast_search": fast_search_enabled(),
+                   "best_plans": {n: c["best"]
+                                  for n, c in sorted(cells.items())}},
+                  f, indent=1, sort_keys=True)
 
 
 def _cell(res) -> Dict:
@@ -92,21 +134,34 @@ def sweep(full: bool = False, workers: int = 1):
     for hw_name in HW_CONFIGS:
         hw = get_hw(hw_name)
         for (M, N, K) in gemm_table.shape_table(full):
+            ph0 = _phase_totals()
             res = tl_gemm(M, N, K, hw, budget=gemm_budget)
-            cells[f"gemm/{hw_name}/M{M}_N{N}_K{K}"] = _cell(res)
+            c = _cell(res)
+            c["phases"] = _phase_delta(ph0)
+            cells[f"gemm/{hw_name}/M{M}_N{N}_K{K}"] = c
     hw = get_hw("wormhole_8x8")
     for bh, seq, head_dim in flash_table.shape_table():
         progs = [flash_attention_program(bh, seq, seq, head_dim, bq=bq,
                                          bkv=bkv)
                  for bq in (32, 64, 128) for bkv in (32, 64, 128)]
+        ph0 = _phase_totals()
         res = plan_kernel_multi(progs, hw, budget=flash_budget)
-        cells[f"flash/h{bh}_s{seq}"] = _cell(res)
+        c = _cell(res)
+        c["phases"] = _phase_delta(ph0)
+        cells[f"flash/h{bh}_s{seq}"] = c
     # reduction-bound cells (tall-skinny gemm / flash_decode / moe_gmm):
     # planned twice — split-K space on and off — so the table records how
     # much the spatial-reduction plan space buys (`baseline_sim_us`), and
     # the golden gate pins the selected split-K plans against drift
-    for name, red, base in reduction_table.plan_cells(workers=workers):
+    red_it = reduction_table.plan_cells(workers=workers)
+    while True:
+        ph0 = _phase_totals()       # the generator plans lazily on next()
+        try:
+            name, red, base = next(red_it)
+        except StopIteration:
+            break
         c = _cell(red)
+        c["phases"] = _phase_delta(ph0)
         c["baseline_best"] = base.best.plan.describe()
         c["baseline_model_us"] = base.best.cost.total_s * 1e6
         c["baseline_sim_us"] = (base.best.sim.total_s * 1e6
@@ -119,8 +174,15 @@ def sweep(full: bool = False, workers: int = 1):
     # co-planned with on-chip forwarding vs fully independent per-kernel
     # plans with the DRAM handoff (`dram_roundtrip_us`); the golden gate
     # pins the selected graph plans (node candidates + edge decisions)
-    for name, co, base in pipeline_table.plan_cells(workers=workers):
+    pipe_it = pipeline_table.plan_cells(workers=workers)
+    while True:
+        ph0 = _phase_totals()
+        try:
+            name, co, base = next(pipe_it)
+        except StopIteration:
+            break
         cells[f"pipeline/{name}"] = {
+            "phases": _phase_delta(ph0),
             "best": co.describe(),
             "model_us": None,
             "sim_us": co.total_s * 1e6,
@@ -165,6 +227,9 @@ def summarize(cells: Dict[str, Dict]) -> Dict:
         "n_pruned": n_pruned,
         "estimate_fraction": n_est / n_cand if n_cand else 0.0,
         "waves_per_class_geomean": geomean(compress),
+        "phase_seconds": {
+            p: sum(c.get("phases", {}).get(p, 0.0) for c in cells.values())
+            for p in PHASES},
     }
     imp = [c["sim_improvement"] for n, c in cells.items()
            if c.get("sim_improvement") and n.startswith("reduction/")]
@@ -300,16 +365,25 @@ if __name__ == "__main__":
                          "the supported way to record an intentional "
                          "best-plan change (hand-editing is error-prone); "
                          "CI still runs in check mode only")
+    ap.add_argument("--trace", metavar="PATH",
+                    help="collect planner spans and write a Chrome "
+                         "trace-event JSON to PATH (implies golden writes "
+                         "are refused)")
     args = ap.parse_args()
-    cells, _ = run(args.full, workers=args.workers)
+    if args.trace:
+        os.environ[trace.TRACE_ENV] = args.trace
+        trace.enable(args.trace)
     golden_out = args.write_golden or (GOLDEN_PATH if args.update_golden
                                        else None)
+    if golden_out and tracing_active():
+        ap.error("golden regeneration is refused while tracing is enabled "
+                 "(drop --trace / unset REPRO_TRACE)")
+    cells, _ = run(args.full, workers=args.workers)
     if golden_out:
-        with open(golden_out, "w") as f:
-            json.dump({"fast_search": fast_search_enabled(),
-                       "best_plans": {n: c["best"]
-                                      for n, c in sorted(cells.items())}},
-                      f, indent=1, sort_keys=True)
+        write_golden(cells, golden_out)
         print(f"wrote {golden_out}", file=sys.stderr)
+    if args.trace:
+        written = trace.write(args.trace)
+        print(f"wrote trace {written}", file=sys.stderr)
     if args.check_golden:
         sys.exit(1 if check_golden(cells, args.check_golden) else 0)

@@ -22,11 +22,29 @@ def main() -> None:
                          "(pre-warm with `python -m repro.plancache warm "
                          "--wormhole`); off by default so suites that "
                          "measure planning time stay honest")
+    ap.add_argument("--trace", metavar="PATH",
+                    help="collect planner spans (repro.obs.trace) and write "
+                         "a Chrome trace-event JSON to PATH at the end")
+    ap.add_argument("--update-golden", action="store_true",
+                    help="regenerate benchmarks/golden_plan_speed.json from "
+                         "this run's plan_speed sweep (refused under "
+                         "--trace / REPRO_TRACE: goldens must come from an "
+                         "uninstrumented run)")
     args = ap.parse_args()
+
+    import os
+
+    from repro.obs import metrics, trace
+    if args.trace:
+        os.environ[trace.TRACE_ENV] = args.trace
+        trace.enable(args.trace)
 
     from . import (ablation_spatial, ablation_temporal, flash_table,
                    gemm_irregular, gemm_table, perfmodel_validation,
                    pipeline_table, plan_speed, reduction_table, topk_table)
+    if args.update_golden and plan_speed.tracing_active():
+        ap.error("--update-golden is refused while tracing is enabled "
+                 "(drop --trace / unset REPRO_TRACE)")
     cache = None
     if args.plan_cache:
         from repro.plancache import PlanCache
@@ -64,11 +82,21 @@ def main() -> None:
         fn()
         print(f"suite/{name},{(time.perf_counter() - t0) * 1e6:.0f},done",
               file=sys.stderr)
+    if args.update_golden:
+        cells, _ = plan_speed.run(args.full)
+        plan_speed.write_golden(cells, plan_speed.GOLDEN_PATH)
+        print(f"wrote {plan_speed.GOLDEN_PATH}", file=sys.stderr)
     if cache is not None:
         s = cache.store
         s.flush_stats()
         print(f"plancache,{0:.0f},hits={s.stats.hits};misses={s.stats.misses}",
               file=sys.stderr)
+    if args.trace:
+        written = trace.write(args.trace)
+        print(f"trace,{0:.0f},path={written}", file=sys.stderr)
+    dumped = metrics.dump()              # honors REPRO_METRICS=<path>
+    if dumped:
+        print(f"metrics,{0:.0f},path={dumped}", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -42,6 +42,7 @@ try:                                   # gate, don't hard-require (CI installs
 except ImportError:                    # pragma: no cover - exercised via env
     np = None
 
+from ..obs import trace
 from .hw import HardwareModel
 from .mapping import Mapping as _Mapping
 from .perfmodel import (PlanCost, _contended_time, _issues_at,
@@ -416,12 +417,13 @@ def simulate_plans(plans: Sequence[DataflowPlan], hw: HardwareModel, *,
                 for p, f in zip(plans, legs)]
     views: Dict[int, _MeshView] = {}
     out = []
-    for plan, f in zip(plans, legs):
-        view = views.get(id(plan.mapping))
-        if view is None:
-            view = views[id(plan.mapping)] = _MeshView(plan, hw)
-        out.append(_simulate_one(plan, hw, view, launch_overhead_s,
-                                 wave_overhead_s, fwd=f))
+    with trace.span("planner.simulate_plans", n_plans=len(plans)):
+        for plan, f in zip(plans, legs):
+            view = views.get(id(plan.mapping))
+            if view is None:
+                view = views[id(plan.mapping)] = _MeshView(plan, hw)
+            out.append(_simulate_one(plan, hw, view, launch_overhead_s,
+                                     wave_overhead_s, fwd=f))
     return out
 
 

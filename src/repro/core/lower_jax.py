@@ -26,6 +26,7 @@ from typing import Dict, Optional, Tuple
 import jax.numpy as jnp
 
 from repro import plancache
+from repro.obs import metrics
 from repro.plancache import warmstart
 
 from .hw import tpu_v5e_chip
@@ -39,17 +40,38 @@ MXU_GRANULE = 128          # MXU systolic dimension: blocks must be multiples
 _CHIP_BUDGET = SearchBudget(top_k=1, max_plans_per_mapping=24,
                             max_mappings=16)
 
-# per-template count of planner failures that silently served the fallback
-# block shape — inspectable so deployments notice a degraded planner instead
-# of just running slower (each increment also logs a one-line warning)
-PLANNER_FALLBACKS: Dict[str, int] = {}
+# Planner failures that silently served the fallback block shape now land
+# in the unified metrics registry (``planner_fallbacks_total{template=}``,
+# repro.obs.metrics) so deployments notice a degraded planner in the same
+# snapshot as every other planner signal.  One warning is logged per
+# *distinct cause* — (template, failure message) — not per call; the count
+# still rises on every event.
+_FALLBACK_WARNED: set = set()
+
+
+def _fallback_counter():
+    return metrics.counter(
+        "planner_fallbacks_total",
+        "block-shape requests served the fallback after a planner failure")
 
 
 def planner_fallback_count(template: str | None = None) -> int:
-    """Fallback-block events since process start (or cache clear)."""
+    """Fallback-block events since process start (or cache clear) — thin
+    compat shim over ``planner_fallbacks_total`` in the metrics registry."""
+    c = _fallback_counter()
     if template is not None:
-        return PLANNER_FALLBACKS.get(template, 0)
-    return sum(PLANNER_FALLBACKS.values())
+        return int(c.value(template=template))
+    return int(c.total())
+
+
+def _note_fallback(template: str, shape, err, fallback) -> None:
+    _fallback_counter().inc(template=template)
+    cause = (template, str(err))
+    if cause not in _FALLBACK_WARNED:
+        _FALLBACK_WARNED.add(cause)
+        log.warning("planner fallback for %s shape=%s: %s "
+                    "(serving fallback blocks %s)", template, shape, err,
+                    fallback)
 
 
 def _pow2_options(limit: int, lo: int = MXU_GRANULE, hi: int = 1024):
@@ -101,10 +123,7 @@ def _cached_blocks(template: str, params: dict, shape: Tuple[int, ...],
     except RuntimeError as e:
         # infeasible space (e.g. no tiling fits VMEM) — serve the safe
         # fallback, but never silently: count it and say which request
-        PLANNER_FALLBACKS[template] = PLANNER_FALLBACKS.get(template, 0) + 1
-        log.warning("planner fallback for %s shape=%s: %s "
-                    "(serving fallback blocks %s)", template, shape, e,
-                    fallback)
+        _note_fallback(template, shape, e, fallback)
         return fallback
     blocks = pick(res)
     best_prog = res.best.plan.program
@@ -200,13 +219,14 @@ def clear_block_caches() -> None:
     process against a warm disk cache)."""
     _gemm_blocks_memo.cache_clear()
     _flash_blocks_memo.cache_clear()
-    PLANNER_FALLBACKS.clear()
+    _fallback_counter().clear()
+    _FALLBACK_WARNED.clear()
 
 
 def reset_planner_fallbacks() -> None:
     """Re-arm the degraded-planner signal in a long-lived (serve) process.
 
-    Clears ``PLANNER_FALLBACKS`` together with *every* in-process block-memo
+    Clears the fallback counters together with *every* in-process block-memo
     tier — the ``lru_cache`` tables and the plancache memory LRU — so the
     next repeat shape re-resolves through the disk registry (or a fresh
     search) instead of a memo populated while the planner was failing.

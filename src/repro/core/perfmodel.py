@@ -203,6 +203,32 @@ def pipelined_loop_time(I: int, t_load: float, t_store: float,
 # --------------------------------------------------------------------------
 # End-to-end estimation
 # --------------------------------------------------------------------------
+def plan_transfers(plan: DataflowPlan, hw: HardwareModel, *,
+                   fwd: Optional[TMapping[str, ForwardLeg]] = None
+                   ) -> List[_Transfer]:
+    """The plan's full transfer list — exactly what :func:`estimate`
+    consumes.  ``fwd`` reroutes forwarded-edge accesses on-chip
+    (reduce-combining stores never forward: the pipeline legality rule
+    spills them, so their leg is ignored)."""
+    m = plan.mapping
+    if not fwd:
+        return ([_load_transfer(c, m, hw) for c in plan.loads]
+                + [_store_transfer(s, m, hw) for s in plan.stores])
+    transfers: List[_Transfer] = []
+    for c in plan.loads:
+        leg = fwd.get(c.access.tensor.name)
+        transfers.append(
+            forward_transfer(c.access, c.hoist.level, leg, m, hw, "load")
+            if leg is not None else _load_transfer(c, m, hw))
+    for s in plan.stores:
+        leg = fwd.get(s.access.tensor.name)
+        transfers.append(
+            forward_transfer(s.access, s.level, leg, m, hw, "store")
+            if leg is not None and not s.reduce_axes
+            else _store_transfer(s, m, hw))
+    return transfers
+
+
 def estimate(plan: DataflowPlan, hw: HardwareModel, *,
              pipeline_outer_levels: bool = False,
              transfers: Optional[Sequence[_Transfer]] = None,
@@ -233,25 +259,7 @@ def estimate(plan: DataflowPlan, hw: HardwareModel, *,
     n = len(loops)
 
     if transfers is None:
-        if fwd:
-            transfers = []
-            for c in plan.loads:
-                leg = fwd.get(c.access.tensor.name)
-                transfers.append(
-                    forward_transfer(c.access, c.hoist.level, leg, m, hw,
-                                     "load")
-                    if leg is not None else _load_transfer(c, m, hw))
-            for s in plan.stores:
-                leg = fwd.get(s.access.tensor.name)
-                # reduce-combining stores never forward (the pipeline
-                # legality rule spills them), so the leg is ignored there
-                transfers.append(
-                    forward_transfer(s.access, s.level, leg, m, hw, "store")
-                    if leg is not None and not s.reduce_axes
-                    else _store_transfer(s, m, hw))
-        else:
-            transfers = [_load_transfer(c, m, hw) for c in plan.loads]
-            transfers += [_store_transfer(s, m, hw) for s in plan.stores]
+        transfers = plan_transfers(plan, hw, fwd=fwd)
     by_level: Dict[int, List[_Transfer]] = {}
     for t in transfers:
         by_level.setdefault(t.level, []).append(t)
@@ -329,6 +337,43 @@ def _issues_at(level: int, loops: Sequence[Tuple[str, int]]) -> int:
     for _, e in loops[:level]:
         k *= e
     return k
+
+
+def cost_breakdown(plan: DataflowPlan, hw: HardwareModel, *,
+                   pipeline_outer_levels: bool = False,
+                   fwd: Optional[TMapping[str, ForwardLeg]] = None) -> Dict:
+    """Per-resource decomposition of :func:`estimate` for introspection
+    (``repro.obs.explain``): total busy-seconds and bytes each df resource
+    (dram, every NoC ring class, l1) absorbs over the whole kernel, plus
+    the per-transfer contributions and the :class:`PlanCost` itself.
+
+    Pure read-only companion of :func:`estimate` — it reuses the identical
+    transfer list and pools, so ``breakdown["cost"]`` is bit-identical to a
+    direct ``estimate()`` call with the same arguments.
+    """
+    m = plan.mapping
+    pools = _resource_pools(hw)
+    loops: List[Tuple[str, int]] = list(m.cost_loops())
+    transfers = plan_transfers(plan, hw, fwd=fwd)
+    resources: Dict[str, Dict[str, float]] = {
+        res: {"busy_s": 0.0, "bytes": 0.0} for res in pools}
+    per_transfer = []
+    for tr in transfers:
+        issues = _issues_at(tr.level, loops)
+        row = {"name": tr.name, "kind": tr.kind, "level": tr.level,
+               "issues": issues, "dram_bytes": tr.dram_bytes * issues,
+               "noc_bytes": tr.noc_bytes * issues, "resources": {}}
+        for res, b in tr.demand.items():
+            busy = b * issues / pools[res]
+            resources[res]["busy_s"] += busy
+            resources[res]["bytes"] += b * issues
+            row["resources"][res] = {"busy_s": busy, "bytes": b * issues}
+        per_transfer.append(row)
+    cost = estimate(plan, hw, pipeline_outer_levels=pipeline_outer_levels,
+                    transfers=transfers)
+    return {"cost": cost, "compute_s": cost.compute_s,
+            "resources": resources, "transfers": per_transfer,
+            "pools_bytes_per_s": dict(pools)}
 
 
 # --------------------------------------------------------------------------

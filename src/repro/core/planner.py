@@ -45,8 +45,9 @@ import heapq
 import os
 import time
 from dataclasses import dataclass, field, replace
-from typing import Any, Iterator, List, Optional, Sequence, Tuple
+from typing import Any, Dict, Iterator, List, Optional, Sequence, Tuple
 
+from ..obs import metrics, trace
 from . import batch_cost
 from .hw import HardwareModel
 from .mapping import Mapping, SpatialBind, enumerate_mappings
@@ -355,11 +356,22 @@ class _SearchStats:
     n_mappings_pruned: int = 0
     n_infeasible_programs: int = 0
     first_failure: str = ""
+    # per-phase wall seconds (enumerate/estimate/bnb/simulate) accumulated
+    # during the search and flushed once into the metrics registry by
+    # _finish (workers ship theirs back through the chunk-result dict)
+    phases: Dict[str, float] = field(default_factory=dict)
 
     def note_failure(self, msg: str) -> None:
         self.n_infeasible_programs += 1
         if not self.first_failure:
             self.first_failure = msg
+
+    def add_phase(self, phase: str, seconds: float) -> None:
+        self.phases[phase] = self.phases.get(phase, 0.0) + seconds
+
+    def merge_phases(self, phases: Optional[Dict[str, float]]) -> None:
+        for k, v in (phases or {}).items():
+            self.phases[k] = self.phases.get(k, 0.0) + v
 
 
 # tolerance on the prune test: the bound is mathematically <= the estimate,
@@ -447,7 +459,10 @@ def _rank_mapping_batch(p_idx: int, m_idx: int, mapping: Mapping, stores,
         rows = rows[keep]
     if not len(rows):
         return len(ok_idx)
-    costs = batch.estimate_rows(rows)
+    _t_est = time.perf_counter()
+    with trace.span("planner.batch_estimate", n_rows=len(rows)):
+        costs = batch.estimate_rows(rows)
+    stats.add_phase("estimate", time.perf_counter() - _t_est)
     stats.n_estimated += len(rows)
     for j, r in enumerate(rows):
         c_idx = ok_idx[int(r)]
@@ -500,6 +515,12 @@ def _rank_streamed(programs: Sequence[TileProgram], hw: HardwareModel,
     pol = budget.pipeline_outer_levels
     heap: List[tuple] = []   # (-cost, (-p, -m, -c), Candidate): max-heap
     est_memo: dict = {}
+    # phase attribution: enumerate/estimate are timed directly; the branch-
+    # and-bound residual (bounds, heap, memo lookups) is everything else
+    # this function spends (observation only — never read back)
+    _t_rank0 = time.perf_counter()
+    _acc0 = (stats.phases.get("enumerate", 0.0)
+             + stats.phases.get("estimate", 0.0))
     for p_idx, prog in enumerate(programs):
         contributed = 0
         # feasibility failures (validation, capacity, degenerate spaces)
@@ -507,7 +528,10 @@ def _rank_streamed(programs: Sequence[TileProgram], hw: HardwareModel,
         # counted and surfaced; anything raised by the cost model — and any
         # non-(RuntimeError|ValueError) — is a planner bug and propagates
         try:
-            mappings = _filtered_mappings(prog, hw, budget)
+            _t_en = time.perf_counter()
+            with trace.span("planner.enumerate", program=prog.name):
+                mappings = _filtered_mappings(prog, hw, budget)
+            stats.add_phase("enumerate", time.perf_counter() - _t_en)
         except (RuntimeError, ValueError) as e:
             if not catch_infeasible:
                 raise
@@ -535,9 +559,11 @@ def _rank_streamed(programs: Sequence[TileProgram], hw: HardwareModel,
                 continue
             demands = {} if engine == "batch" else None
             try:
+                _t_en = time.perf_counter()
                 combos, stores = memop_choices_with_stores(
                     mapping, hw, max_per_load=budget.max_per_load,
                     max_plans=budget.max_plans_per_mapping, demands=demands)
+                stats.add_phase("enumerate", time.perf_counter() - _t_en)
             except (RuntimeError, ValueError) as e:
                 if not catch_infeasible:
                     raise
@@ -582,9 +608,12 @@ def _rank_streamed(programs: Sequence[TileProgram], hw: HardwareModel,
                         key = _cost_signature(ctx, plan, transfers, pol)
                         cost = est_memo.get(key)
                         if cost is None:
+                            _t_est = time.perf_counter()
                             cost = estimate(plan, hw,
                                             pipeline_outer_levels=pol,
                                             transfers=transfers)
+                            stats.add_phase(
+                                "estimate", time.perf_counter() - _t_est)
                             est_memo[key] = cost
                             stats.n_estimated += 1
                         item = (-cost.total_s, (-p_idx, -m_idx, -c_idx),
@@ -603,21 +632,47 @@ def _rank_streamed(programs: Sequence[TileProgram], hw: HardwareModel,
         # infeasible when nothing contributed *and* nothing was pruned
         if contributed == 0 and floor_pruned == 0 and catch_infeasible:
             stats.note_failure(f"{prog.name}: no feasible plan")
+    _acc1 = (stats.phases.get("enumerate", 0.0)
+             + stats.phases.get("estimate", 0.0))
+    stats.add_phase("bnb", max(0.0, (time.perf_counter() - _t_rank0)
+                               - (_acc1 - _acc0)))
     return [it[2] for it in sorted(
         heap, key=lambda it: (-it[0], -it[1][0], -it[1][1], -it[1][2]))]
+
+
+def _flush_search_metrics(stats: _SearchStats, kernel: str,
+                          plan_seconds: float) -> None:
+    """Publish one completed search into the unified metrics registry
+    (phases merged across worker shards; one flush per search)."""
+    for phase, secs in sorted(stats.phases.items()):
+        metrics.inc("planner_phase_seconds_total", secs, phase=phase)
+    metrics.inc("planner_searches_total")
+    metrics.inc("planner_candidates_total", stats.n_candidates)
+    metrics.inc("planner_mappings_total", stats.n_mappings)
+    metrics.inc("planner_estimated_total", stats.n_estimated)
+    metrics.inc("planner_pruned_total", stats.n_pruned, kind="bound")
+    metrics.inc("planner_pruned_total", stats.n_mappings_pruned,
+                kind="mapping_floor")
+    if stats.n_infeasible_programs:
+        metrics.inc("planner_infeasible_programs_total",
+                    stats.n_infeasible_programs)
+    metrics.observe("planner_plan_seconds", plan_seconds, kernel=kernel)
 
 
 def _finish(topk: List[Candidate], *, kernel: str, hw: HardwareModel,
             profile: bool, stats: _SearchStats, t0: float,
             engine: Optional[str] = None) -> PlanResult:
     if profile:
-        if resolve_engine(engine) == "batch":
-            sims = batch_cost.simulate_plans([c.plan for c in topk], hw)
-            for c, s in zip(topk, sims):
-                c.sim = s
-        else:
-            for c in topk:
-                c.sim = simulate(c.plan, hw)
+        _t_sim = time.perf_counter()
+        with trace.span("planner.profile", kernel=kernel, n_topk=len(topk)):
+            if resolve_engine(engine) == "batch":
+                sims = batch_cost.simulate_plans([c.plan for c in topk], hw)
+                for c, s in zip(topk, sims):
+                    c.sim = s
+            else:
+                for c in topk:
+                    c.sim = simulate(c.plan, hw)
+        stats.add_phase("simulate", time.perf_counter() - _t_sim)
         topk.sort(key=lambda c: c.final_s)
     best = topk[0]
     log = []
@@ -625,6 +680,7 @@ def _finish(topk: List[Candidate], *, kernel: str, hw: HardwareModel,
         log.append(f"infeasible_programs={stats.n_infeasible_programs}")
     if stats.first_failure:
         log.append(f"first_failure: {stats.first_failure}")
+    _flush_search_metrics(stats, kernel, time.perf_counter() - t0)
     return PlanResult(
         kernel=kernel, hw_name=hw.name, best=best, topk=topk,
         n_candidates=stats.n_candidates, n_mappings=stats.n_mappings,
@@ -662,6 +718,7 @@ def plan_kernel(program: TileProgram, hw: HardwareModel, *,
     :func:`resolve_engine`); selection is identical on either, so the
     choice never enters cache keys.
     """
+    trace.refresh_from_env()
     budget = effective_budget(budget)
     if cache is not None:
         hit = cache.get_result([program], hw, budget, profile=profile,
@@ -672,14 +729,19 @@ def plan_kernel(program: TileProgram, hw: HardwareModel, *,
     PLAN_CALLS["plan_kernel"] += 1
     t0 = time.perf_counter()
     stats = _SearchStats()
-    topk = _rank_streamed([program], hw, budget, spatial_reuse=spatial_reuse,
-                          temporal_reuse=temporal_reuse, use_bound=use_bound,
-                          catch_infeasible=False, stats=stats, engine=engine)
-    if not topk:
-        raise RuntimeError(f"no feasible plan for {program.name} on {hw.name} "
-                           f"(local memory too small for any tiling?)")
-    result = _finish(topk, kernel=program.name, hw=hw,
-                     profile=profile, stats=stats, t0=t0, engine=engine)
+    with trace.span("planner.plan_kernel", kernel=program.name, hw=hw.name):
+        topk = _rank_streamed([program], hw, budget,
+                              spatial_reuse=spatial_reuse,
+                              temporal_reuse=temporal_reuse,
+                              use_bound=use_bound,
+                              catch_infeasible=False, stats=stats,
+                              engine=engine)
+        if not topk:
+            raise RuntimeError(
+                f"no feasible plan for {program.name} on {hw.name} "
+                f"(local memory too small for any tiling?)")
+        result = _finish(topk, kernel=program.name, hw=hw,
+                         profile=profile, stats=stats, t0=t0, engine=engine)
     if cache is not None:
         cache.put_result([program], hw, budget, result, profile=profile,
                          spatial_reuse=spatial_reuse,
@@ -717,6 +779,7 @@ def plan_kernel_multi(programs: Sequence[TileProgram], hw: HardwareModel, *,
     top-k the inline search would, with search-efficiency counters
     (``n_pruned``/``n_estimated``...) reflecting the per-shard searches.
     """
+    trace.refresh_from_env()
     budget = effective_budget(budget)
     programs = list(programs)
     requested = programs                 # the cache key covers the full
@@ -732,29 +795,31 @@ def plan_kernel_multi(programs: Sequence[TileProgram], hw: HardwareModel, *,
     PLAN_CALLS["plan_kernel_multi"] += 1
     t0 = time.perf_counter()
     stats = _SearchStats()
-    topk = None
-    if len(programs) > 1:
-        from repro.parallel import search_exec
-        workers = search_exec.resolve_workers(budget.workers)
-        if workers > 1:
-            topk = search_exec.rank_sharded(
-                programs, hw, budget, spatial_reuse=spatial_reuse,
-                temporal_reuse=temporal_reuse, use_bound=use_bound,
-                catch_infeasible=True, engine=engine, stats=stats,
-                workers=workers)
-    if topk is None:                     # inline (workers<=1 or unshardable)
-        topk = _rank_streamed(programs, hw, budget,
-                              spatial_reuse=spatial_reuse,
-                              temporal_reuse=temporal_reuse,
-                              use_bound=use_bound, catch_infeasible=True,
-                              stats=stats, engine=engine)
-    if not topk:
-        raise RuntimeError("no feasible plan across any block shape"
-                           + (f" ({stats.first_failure})"
-                              if stats.first_failure else ""))
     kernel = programs[0].name.split("_b")[0] if programs else "?"
-    result = _finish(topk, kernel=kernel, hw=hw,
-                     profile=profile, stats=stats, t0=t0, engine=engine)
+    with trace.span("planner.plan_kernel_multi", kernel=kernel, hw=hw.name,
+                    n_programs=len(programs)):
+        topk = None
+        if len(programs) > 1:
+            from repro.parallel import search_exec
+            workers = search_exec.resolve_workers(budget.workers)
+            if workers > 1:
+                topk = search_exec.rank_sharded(
+                    programs, hw, budget, spatial_reuse=spatial_reuse,
+                    temporal_reuse=temporal_reuse, use_bound=use_bound,
+                    catch_infeasible=True, engine=engine, stats=stats,
+                    workers=workers)
+        if topk is None:                 # inline (workers<=1 or unshardable)
+            topk = _rank_streamed(programs, hw, budget,
+                                  spatial_reuse=spatial_reuse,
+                                  temporal_reuse=temporal_reuse,
+                                  use_bound=use_bound, catch_infeasible=True,
+                                  stats=stats, engine=engine)
+        if not topk:
+            raise RuntimeError("no feasible plan across any block shape"
+                               + (f" ({stats.first_failure})"
+                                  if stats.first_failure else ""))
+        result = _finish(topk, kernel=kernel, hw=hw,
+                         profile=profile, stats=stats, t0=t0, engine=engine)
     if cache is not None:
         cache.put_result(requested, hw, budget, result, profile=profile,
                          spatial_reuse=spatial_reuse,

@@ -261,7 +261,8 @@ def _loop_digit_groups(plan: DataflowPlan, coords: Sequence[Dict[str, int]]
 def simulate(plan: DataflowPlan, hw: HardwareModel, *,
              launch_overhead_s: float = 20e-6,
              wave_overhead_s: float = 2e-6,
-             fwd: Optional[TMapping[str, ForwardLeg]] = None) -> SimResult:
+             fwd: Optional[TMapping[str, ForwardLeg]] = None,
+             record: Optional[List[dict]] = None) -> SimResult:
     """Simulate plan execution by wave equivalence class (exact).
 
     For each class: per-core inner-loop time uses the double-buffered pipeline
@@ -279,6 +280,12 @@ def simulate(plan: DataflowPlan, hw: HardwareModel, *,
     digit (``shuffle_axes``, each ring contended by every active core
     pulling through it) — and neither touches DRAM.  ``None``/empty keeps
     the simulation bit-identical to the historical single-kernel path.
+
+    ``record``, when given a list, receives one dict per wave equivalence
+    class — population, active-core mask, wave/hoist/overhead seconds and
+    DRAM/NoC bytes (class totals) — the raw material for the simulated
+    resource timelines ``repro.obs.explain`` renders.  It is append-only
+    bookkeeping of values already computed: passing it changes no cost.
     """
     fwd = fwd or {}
     m = plan.mapping
@@ -520,6 +527,12 @@ def simulate(plan: DataflowPlan, hw: HardwareModel, *,
         n_classes += 1
         if amask == 0:
             total += wave_overhead_s * pop
+            if record is not None:
+                record.append({
+                    "population": pop, "active_mask": 0, "n_active": 0,
+                    "wave_s": 0.0, "hoist_s": 0.0,
+                    "overhead_s": wave_overhead_s,
+                    "dram_bytes": 0.0, "noc_bytes": 0.0})
             continue
         cost = cache.get(amask)
         if cost is None:
@@ -527,6 +540,8 @@ def simulate(plan: DataflowPlan, hw: HardwareModel, *,
         (wave_time, inner_dram, inner_noc, hoist_info, ostore_t,
          ostore_dram, ostore_noc) = cost
         t_hoist = ostore_t
+        cls_dram = (inner_dram + ostore_dram) * pop
+        cls_noc = (inner_noc + ostore_noc) * pop
         dram_bytes += (inner_dram + ostore_dram) * pop
         noc_bytes += (inner_noc + ostore_noc) * pop
         for (t_c, db, nb), k in zip(hoist_info, k_cut):
@@ -534,7 +549,16 @@ def simulate(plan: DataflowPlan, hw: HardwareModel, *,
                 t_hoist += t_c
                 dram_bytes += db * pop
                 noc_bytes += nb * pop
+                cls_dram += db * pop
+                cls_noc += nb * pop
         total += (wave_time + t_hoist + wave_overhead_s) * pop
+        if record is not None:
+            record.append({
+                "population": pop, "active_mask": amask,
+                "n_active": bin(amask).count("1"),
+                "wave_s": wave_time, "hoist_s": t_hoist,
+                "overhead_s": wave_overhead_s,
+                "dram_bytes": cls_dram, "noc_bytes": cls_noc})
 
     total += launch_overhead_s        # per-kernel dispatch cost (paper S3.2:
     #                                   small shapes dominated by overheads)

@@ -14,6 +14,7 @@ import jax.numpy as jnp
 
 from repro import plancache
 from repro.configs import get_config
+from repro.obs import metrics
 from repro.configs.base import ShapeConfig, TrainConfig
 from repro.data import DataConfig, make_source
 from repro.models import build_model
@@ -73,6 +74,13 @@ def main(argv=None) -> None:
           f"{prefill_s:.2f}s; decode {args.tokens} tok x{args.batch}: "
           f"{decode_s:.2f}s ({args.tokens * args.batch / decode_s:.1f} tok/s)")
     print(f"[serve] sample generation (ids): {gen[0, :16].tolist()}")
+    counts = metrics.counter_totals(metrics.snapshot())
+    if counts:
+        print("[serve] metrics: " + " ".join(
+            f"{k}={v:g}" for k, v in sorted(counts.items())))
+    dumped = metrics.dump()              # honors REPRO_METRICS=<path>
+    if dumped:
+        print(f"[serve] metrics snapshot written to {dumped}")
 
 
 if __name__ == "__main__":

@@ -22,6 +22,7 @@ from repro.configs.base import ShapeConfig, TrainConfig
 from repro.ckpt import CheckpointManager
 from repro.data import DataConfig, make_source
 from repro.models import build_model
+from repro.obs import metrics as obs_metrics
 from repro.parallel.planner_bridge import plan_mesh
 from repro.runtime import HeartbeatRegistry, StragglerTracker
 from repro.train import train_step as TS
@@ -102,6 +103,13 @@ def main(argv=None) -> None:
     total = time.perf_counter() - t_start
     print(f"[train] done: {args.steps - start} steps in {total:.1f}s; "
           f"stragglers={straggler.stragglers()}")
+    counts = obs_metrics.counter_totals(obs_metrics.snapshot())
+    if counts:
+        print("[train] metrics: " + " ".join(
+            f"{k}={v:g}" for k, v in sorted(counts.items())))
+    dumped = obs_metrics.dump()          # honors REPRO_METRICS=<path>
+    if dumped:
+        print(f"[train] metrics snapshot written to {dumped}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,29 @@
+"""Planner observability: structured tracing, unified metrics, plan explain.
+
+Three deliberately-decoupled layers (DESIGN_OBS.md):
+
+* :mod:`repro.obs.trace` — a low-overhead span tracer (context-manager +
+  decorator API) threaded through the whole planning stack and exported as
+  Chrome trace-event JSON (``REPRO_TRACE=<path>`` or
+  ``benchmarks/run.py --trace``), with per-worker span buffers merged
+  across process boundaries by ``repro.parallel.search_exec``;
+* :mod:`repro.obs.metrics` — a process-wide counter/gauge/histogram
+  registry with labeled series and a JSON snapshot; the planner's phase
+  timings, plancache hit/miss/bypass counters, ``lower_jax`` planner
+  fallbacks and worker shard timings all land here;
+* :mod:`repro.obs.explain` — plan introspection: per-plan simulated
+  resource timelines, an ASCII mesh-utilization heatmap, and
+  winner-vs-runner-up per-resource cost diffs
+  (``python -m repro.obs explain <suite/cell>``).
+
+``trace`` and ``metrics`` are stdlib-only and import nothing from
+``repro.core`` (the core planner imports *them*); ``explain`` sits above
+the planner and may import everything.
+
+The hard invariant of the whole package: **observation never perturbs
+planning** — best plans, costs, and cache keys are bit-identical with
+tracing on or off, at any worker count (``tests/test_obs.py`` pins this).
+"""
+from . import metrics, trace
+
+__all__ = ["metrics", "trace"]

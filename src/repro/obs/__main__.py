@@ -1,0 +1,70 @@
+"""CLI for the observability layer.
+
+Usage::
+
+    python -m repro.obs explain <suite/cell> [--no-cache] [--workers N]
+    python -m repro.obs explain --list
+    python -m repro.obs metrics [--json]
+
+``explain`` re-resolves one benchmark cell (read-through the plan cache
+by default, so warmed cells render without re-searching) and prints the
+simulated timeline, mesh heatmap and winner-vs-runner-up diff — see
+``repro.obs.explain``.  ``metrics`` prints the unified registry snapshot
+of this process (mostly useful after an in-process run; launchers and
+benchmarks honor ``REPRO_METRICS=<path>`` to persist theirs).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from . import metrics
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.obs",
+                                 description=__doc__)
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    ex = sub.add_parser("explain", help="render one benchmark cell")
+    ex.add_argument("cell", nargs="?",
+                    help="plan_speed cell name, e.g. "
+                         "gemm/wormhole_8x8/M1024_N1024_K4096 or "
+                         "pipeline/mlp2/M16384_d128_f512")
+    ex.add_argument("--list", action="store_true",
+                    help="print the resolvable cell names and exit")
+    ex.add_argument("--no-cache", action="store_true",
+                    help="plan cold instead of read-through the plan cache")
+    ex.add_argument("--workers", type=int, default=1,
+                    help="planner worker count for the resolve (default 1)")
+    mt = sub.add_parser("metrics", help="print this process's registry")
+    mt.add_argument("--json", action="store_true", dest="as_json",
+                    help="raw JSON snapshot (default: same)")
+    args = ap.parse_args(argv)
+
+    if args.cmd == "metrics":
+        print(json.dumps(metrics.snapshot(), indent=1, sort_keys=True))
+        return 0
+
+    from . import explain as ex_mod
+    if args.list:
+        for name in ex_mod.known_cells():
+            print(name)
+        return 0
+    if not args.cell:
+        ap.error("explain needs a cell name (or --list)")
+    cache = None
+    if not args.no_cache:
+        from repro.plancache import PlanCache
+        cache = PlanCache()
+    try:
+        print(ex_mod.explain(args.cell, cache=cache, workers=args.workers))
+    except ex_mod.CellError as e:
+        print(f"error: {e}", file=sys.stderr)
+        print("use --list for resolvable cells", file=sys.stderr)
+        return 2
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

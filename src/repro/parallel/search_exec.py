@@ -33,9 +33,12 @@ import dataclasses
 import multiprocessing
 import os
 import pickle
+import time
 from concurrent.futures import ProcessPoolExecutor
 from concurrent.futures.process import BrokenProcessPool
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.obs import metrics, trace
 
 WORKERS_ENV = "REPRO_PLANNER_WORKERS"
 MP_CONTEXT_ENV = "REPRO_PLANNER_MP"      # fork | spawn | forkserver
@@ -144,19 +147,34 @@ def _chunk_bounds(n: int, chunks: int) -> List[Tuple[int, int]]:
 def _worker_rank(task: Dict[str, Any]) -> Dict[str, Any]:
     """Rank one program chunk (runs in a worker process).  Returns the
     chunk's top-k as serialized candidates with *global* canonical indices
-    plus the chunk's search counters."""
+    plus the chunk's search counters — and, when the parent is tracing,
+    the worker's buffered spans (the parent ingests them so the exported
+    trace shows every worker process; workers never write trace files
+    themselves, which would clobber the parent's ``REPRO_TRACE`` path)."""
     os.environ[WORKERS_ENV] = "1"        # no nested pools
     from repro.core import planner
     from repro.plancache import serialize
+    tracing = bool(task.get("trace"))
+    # a forked worker inherits the parent's span buffer — clear it so the
+    # drain below returns only this task's spans (no duplicates)
+    trace.clear()
+    if tracing:
+        trace.enable()
+    else:
+        trace.disable()
+    t0 = time.perf_counter()
     programs = [serialize.program_from_dict(d) for d in task["programs"]]
     hw = hw_from_spec(task["hw"])
     budget = planner.SearchBudget(**task["budget"])
     stats = planner._SearchStats()
-    topk = planner._rank_streamed(
-        programs, hw, budget, spatial_reuse=task["spatial_reuse"],
-        temporal_reuse=task["temporal_reuse"], use_bound=task["use_bound"],
-        catch_infeasible=task["catch_infeasible"], stats=stats,
-        engine=task["engine"])
+    with trace.span("planner.worker_rank", cat="worker",
+                    n_programs=len(programs), p_base=task["p_base"]):
+        topk = planner._rank_streamed(
+            programs, hw, budget, spatial_reuse=task["spatial_reuse"],
+            temporal_reuse=task["temporal_reuse"],
+            use_bound=task["use_bound"],
+            catch_infeasible=task["catch_infeasible"], stats=stats,
+            engine=task["engine"])
     out = []
     p_base = task["p_base"]
     for c in topk:
@@ -164,7 +182,9 @@ def _worker_rank(task: Dict[str, Any]) -> Dict[str, Any]:
         p, m, ci = c.index
         d["index"] = [p + p_base, m, ci]
         out.append(d)
-    return {"topk": out, "stats": dataclasses.asdict(stats)}
+    return {"topk": out, "stats": dataclasses.asdict(stats),
+            "wall_s": time.perf_counter() - t0,
+            "spans": trace.drain() if tracing else []}
 
 
 def rank_sharded(programs: Sequence, hw, budget, *, spatial_reuse: bool,
@@ -203,6 +223,7 @@ def rank_sharded(programs: Sequence, hw, budget, *, spatial_reuse: bool,
             "use_bound": use_bound,
             "catch_infeasible": catch_infeasible,
             "engine": engine,
+            "trace": trace.enabled(),
         })
     try:
         pool = _get_pool(workers)
@@ -220,8 +241,11 @@ def rank_sharded(programs: Sequence, hw, budget, *, spatial_reuse: bool,
         stats.n_estimated += w["n_estimated"]
         stats.n_mappings_pruned += w["n_mappings_pruned"]
         stats.n_infeasible_programs += w["n_infeasible_programs"]
+        stats.merge_phases(w.get("phases"))
         if w["first_failure"] and not stats.first_failure:
             stats.first_failure = w["first_failure"]
+        metrics.observe("planner_shard_seconds", res.get("wall_s", 0.0))
+        trace.ingest(res.get("spans"))
         for d in res["topk"]:
             c = serialize.candidate_from_dict(d)
             entries.append(((c.cost.total_s,) + tuple(c.index), c))
@@ -230,19 +254,32 @@ def rank_sharded(programs: Sequence, hw, budget, *, spatial_reuse: bool,
 
 
 # ------------------------------------------------------- node-level pools
-def _plan_node_pool_job(task: Dict[str, Any]) -> List[Dict[str, Any]]:
+def _plan_node_pool_job(task: Dict[str, Any]) -> Dict[str, Any]:
     """Build one pipeline node's candidate pool (per-block-shape B&B +
     profiling, ``repro.pipeline.planner.node_candidate_pool``) in a worker
-    process; returns the serialized candidates in pool order."""
+    process; returns the serialized candidates in pool order (plus the
+    worker's buffered spans when the parent is tracing)."""
     os.environ[WORKERS_ENV] = "1"        # no nested pools
     from repro.core import planner
     from repro.pipeline.planner import node_candidate_pool
     from repro.plancache import serialize
+    tracing = bool(task.get("trace"))
+    trace.clear()                        # drop any fork-inherited buffer
+    if tracing:
+        trace.enable()
+    else:
+        trace.disable()
+    t0 = time.perf_counter()
     programs = [serialize.program_from_dict(d) for d in task["programs"]]
     hw = hw_from_spec(task["hw"])
     budget = planner.SearchBudget(**task["budget"])
-    pool = node_candidate_pool(programs, hw, budget, engine=task["engine"])
-    return [serialize.candidate_to_dict(c) for c in pool]
+    with trace.span("pipeline.worker_node_pool", cat="worker",
+                    n_programs=len(programs)):
+        pool = node_candidate_pool(programs, hw, budget,
+                                   engine=task["engine"])
+    return {"pool": [serialize.candidate_to_dict(c) for c in pool],
+            "wall_s": time.perf_counter() - t0,
+            "spans": trace.drain() if tracing else []}
 
 
 def plan_node_pools(program_lists: Sequence[Sequence], hw, budget, *,
@@ -264,6 +301,7 @@ def plan_node_pools(program_lists: Sequence[Sequence], hw, budget, *,
         "hw": spec,
         "budget": wbudget,
         "engine": engine,
+        "trace": trace.enabled(),
     } for progs in program_lists]
     try:
         pool = _get_pool(min(workers, len(tasks)))
@@ -272,8 +310,13 @@ def plan_node_pools(program_lists: Sequence[Sequence], hw, budget, *,
     except (OSError, pickle.PicklingError, BrokenProcessPool):
         shutdown_pool()
         return None
-    return [[serialize.candidate_from_dict(d) for d in cands]
-            for cands in results]
+    pools = []
+    for res in results:
+        metrics.observe("planner_shard_seconds", res.get("wall_s", 0.0))
+        trace.ingest(res.get("spans"))
+        pools.append([serialize.candidate_from_dict(d)
+                      for d in res["pool"]])
+    return pools
 
 
 # ---------------------------------------------------------------- map_jobs

@@ -43,6 +43,7 @@ from repro.core.hw import HardwareModel
 from repro.core.planner import (Candidate, SearchBudget, effective_budget,
                                 plan_kernel, resolve_engine)
 from repro.core.simulator import SimResult
+from repro.obs import metrics, trace
 
 from . import cost as gcost
 from .forwarding import ForwardSpec, forward_spec, free_legs, node_legs
@@ -189,6 +190,7 @@ def plan_pipeline(graph: PipelineGraph, hw: HardwareModel, *,
     miss.  ``use_bound=False`` disables the graph branch-and-bound (the
     exhaustive oracle; selections are identical either way).
     """
+    trace.refresh_from_env()
     graph.validate()
     budget = effective_budget(budget)
     engine = resolve_engine(engine)
@@ -198,21 +200,25 @@ def plan_pipeline(graph: PipelineGraph, hw: HardwareModel, *,
             return hit
     t0 = time.perf_counter()
     names = [n.name for n in graph.nodes]
-    pools: Dict[str, List[Candidate]] = dict(zip(
-        names, _node_pools(graph, hw, budget, engine, cache)))
+    with trace.span("pipeline.node_pools", cat="pipeline",
+                    graph=graph.name, n_nodes=len(names)):
+        pools: Dict[str, List[Candidate]] = dict(zip(
+            names, _node_pools(graph, hw, budget, engine, cache)))
 
     # ---- per-(edge, candidate pair) forwarding specs -----------------------
     specs: Dict[Tuple[EdgeKey, int, int], Optional[ForwardSpec]] = {}
     n_pairs = n_fwd = 0
     if budget.pipeline_forwarding:
-        for e in graph.edges:
-            ek = (e.src, e.dst, e.tensor)
-            for pi, pc in enumerate(pools[e.src]):
-                for ci, cc in enumerate(pools[e.dst]):
-                    sp = forward_spec(graph, e, pc.plan, cc.plan, hw)
-                    specs[(ek, pi, ci)] = sp
-                    n_pairs += 1
-                    n_fwd += sp is not None
+        with trace.span("pipeline.forward_specs", cat="pipeline",
+                        graph=graph.name, n_edges=len(graph.edges)):
+            for e in graph.edges:
+                ek = (e.src, e.dst, e.tensor)
+                for pi, pc in enumerate(pools[e.src]):
+                    for ci, cc in enumerate(pools[e.dst]):
+                        sp = forward_spec(graph, e, pc.plan, cc.plan, hw)
+                        specs[(ek, pi, ci)] = sp
+                        n_pairs += 1
+                        n_fwd += sp is not None
 
     # ---- memoized edge-adjusted node simulation ----------------------------
     sim_memo: Dict[tuple, SimResult] = {}
@@ -332,7 +338,9 @@ def plan_pipeline(graph: PipelineGraph, hw: HardwareModel, *,
             decide(0, decided)
         del assign[name]
 
-    rec(0, {}, {}, 0.0, set())
+    with trace.span("pipeline.graph_bnb", cat="pipeline", graph=graph.name,
+                    n_nodes=len(names), use_bound=use_bound):
+        rec(0, {}, {}, 0.0, set())
     if best["assign"] is None:
         raise RuntimeError(f"no feasible graph plan for {graph.name} on "
                            f"{hw.name}")
@@ -363,11 +371,18 @@ def plan_pipeline(graph: PipelineGraph, hw: HardwareModel, *,
         gcost.edge_dram_roundtrip_s(graph, e, pools[e.src][0].plan,
                                     pools[e.dst][0].plan, hw)
         for e in graph.edges)
+    plan_seconds = time.perf_counter() - t0
+    metrics.inc("pipeline_plans_total", graph=graph.name)
+    metrics.inc("pipeline_graph_combos_total", stats["combos"])
+    metrics.inc("pipeline_graph_pruned_total", stats["pruned"])
+    metrics.inc("pipeline_forwardable_pairs_total", n_fwd)
+    metrics.inc("pipeline_candidate_pairs_total", n_pairs)
+    metrics.observe("pipeline_plan_seconds", plan_seconds, graph=graph.name)
     plan = GraphPlan(
         graph_name=graph.name, hw_name=hw.name, nodes=chosen,
         decisions=tuple(decisions), node_sims=node_sims, total_s=total,
         baseline_s=baseline, dram_roundtrip_s=roundtrip,
-        plan_seconds=time.perf_counter() - t0,
+        plan_seconds=plan_seconds,
         n_graph_combos=stats["combos"], n_graph_pruned=stats["pruned"],
         n_forwardable_pairs=n_fwd, n_pairs=n_pairs)
     if cache is not None:

@@ -16,7 +16,10 @@
                                       via ``REPRO_PLANNER_WORKERS``.
 ``python -m repro.plancache ls``      lists entries (template, shape, hw).
 ``python -m repro.plancache stats``   entry count + cumulative hit/miss
-                                      counters across processes.
+                                      counters across processes; ``--json``
+                                      emits a machine-readable snapshot
+                                      including this process's unified
+                                      metrics registry (``repro.obs``).
 ``python -m repro.plancache prune``   age/count-based disk eviction.
 """
 from __future__ import annotations
@@ -224,6 +227,16 @@ def cmd_stats(args: argparse.Namespace) -> int:
     for ent in store.entries():
         t = ent.get("meta", {}).get("template", "?")
         by_template[t] = by_template.get(t, 0) + 1
+    if getattr(args, "as_json", False):
+        import json
+        from repro.obs import metrics
+        print(json.dumps({
+            "store": {"root": str(store.root), "enabled": store.enabled,
+                      "entries": n, "by_template": by_template,
+                      "cumulative": cum, "hit_rate": _rate(cum)},
+            "metrics": metrics.snapshot(),
+        }, indent=1, sort_keys=True))
+        return 0
     print(f"store: {store.root}  (enabled={store.enabled})")
     print(f"entries: {n}")
     for t, c in sorted(by_template.items()):
@@ -297,6 +310,10 @@ def main(argv: Sequence[str] | None = None) -> int:
     l.set_defaults(fn=cmd_ls)
 
     s = sub.add_parser("stats", help="entry counts + cumulative hit/miss")
+    s.add_argument("--json", action="store_true", dest="as_json",
+                   help="machine-readable snapshot: store stats + this "
+                        "process's unified metrics registry "
+                        "(repro.obs.metrics)")
     s.set_defaults(fn=cmd_stats)
 
     p = sub.add_parser("prune", help="evict old/stale entries")

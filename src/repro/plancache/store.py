@@ -29,6 +29,8 @@ from dataclasses import dataclass, field
 from pathlib import Path
 from typing import Any, Dict, Iterator, List, Optional, Sequence, Tuple
 
+from repro.obs import metrics
+
 from . import keying
 
 ENV_DIR = "REPRO_PLAN_CACHE_DIR"
@@ -104,11 +106,13 @@ class PlanCacheStore:
     def get(self, key: str) -> Optional[Dict[str, Any]]:
         if not self.enabled:
             self.stats.bypassed += 1
+            metrics.inc("plancache_get_total", result="bypass")
             return None
         ent = self._mem.get(key)
         if ent is not None:
             self._mem.move_to_end(key)
             self.stats.hits_mem += 1
+            metrics.inc("plancache_get_total", result="hit_mem")
             return ent
         path = self._path(key)
         if path.is_file():
@@ -116,20 +120,25 @@ class PlanCacheStore:
                 ent = json.loads(path.read_text())
             except (json.JSONDecodeError, OSError):
                 self.stats.misses += 1
+                metrics.inc("plancache_get_total", result="miss")
                 return None
             if ent.get("schema") != keying.SCHEMA_VERSION:
                 self.stats.misses += 1
+                metrics.inc("plancache_get_total", result="miss")
                 return None
             self._remember(key, ent)
             self.stats.hits_disk += 1
+            metrics.inc("plancache_get_total", result="hit_disk")
             return ent
         self.stats.misses += 1
+        metrics.inc("plancache_get_total", result="miss")
         return None
 
     def put(self, key: str, payload: Dict[str, Any],
             meta: Optional[Dict[str, Any]] = None) -> Optional[Dict[str, Any]]:
         if not self.enabled:
             self.stats.bypassed += 1
+            metrics.inc("plancache_put_total", result="bypass")
             return None
         ent = {"key": key, "schema": keying.SCHEMA_VERSION,
                "created": time.time(),
@@ -146,6 +155,7 @@ class PlanCacheStore:
         except OSError:
             self._meta = None        # disk tier is best-effort; rescan later
         self.stats.puts += 1
+        metrics.inc("plancache_put_total", result="stored")
         return ent
 
     def _index_add(self, key: str, meta: Dict[str, Any]) -> None:
@@ -191,6 +201,7 @@ class PlanCacheStore:
 
     def note_warm_start(self) -> None:
         self.stats.warm_starts += 1
+        metrics.inc("plancache_warm_starts_total")
 
     # ----------------------------------------------------------- scanning
     def entries(self) -> Iterator[Dict[str, Any]]:
