@@ -22,11 +22,25 @@ def geomean(xs: Iterable[float]) -> float:
     return math.exp(sum(math.log(x) for x in xs) / len(xs))
 
 
+def bench_hw(name: str):
+    """Resolve a benchmark mesh, degraded by any hardware faults injected
+    through ``REPRO_FAULTS`` (``repro.runtime.faults``); byte-identical
+    pass-through when the variable is unset, so golden checks are
+    unaffected."""
+    from repro.runtime.faults import apply_env_faults
+    return apply_env_faults(get_hw(name))
+
+
 def tl_gemm(M: int, N: int, K: int, hw, budget=DEFAULT_BUDGET, cache=None,
             **kw):
     """Plan a GEMM with full block-shape exploration.  ``cache`` is an
     optional :class:`repro.plancache.PlanCache`: hits skip the search, and
-    ``python -m repro.plancache warm --wormhole`` pre-populates it."""
+    ``python -m repro.plancache warm --wormhole`` pre-populates it.
+    ``REPRO_FAULTS`` hardware faults apply here unless the caller already
+    passed a degraded mesh."""
+    if not hw.is_degraded:
+        from repro.runtime.faults import apply_env_faults
+        hw = apply_env_faults(hw)
     progs = [matmul_program(M, N, K, bm=bm, bn=bn, bk=bk)
              for bm, bn, bk in block_shape_candidates(M, N, K)]
     return plan_kernel_multi(progs, hw, budget=budget, cache=cache, **kw)

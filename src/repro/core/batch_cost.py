@@ -383,7 +383,8 @@ class _MeshView:
                 other = tuple(sorted((k, v) for k, v in c.items() if k != a))
                 g.append(gids.setdefault(other, len(gids)))
             self.groups[a] = (np.array(g, dtype=np.intp), max(1, len(gids)))
-        self.static_mask, self.per_loop = _loop_digit_groups(plan, self.coords)
+        self.static_mask, self.per_loop = _loop_digit_groups(plan, self.coords,
+                                                             hw)
 
 
 def simulate_plans(plans: Sequence[DataflowPlan], hw: HardwareModel, *,

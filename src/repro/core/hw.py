@@ -177,6 +177,12 @@ class HardwareModel:
     # is HBM at the mesh planning level).
     scratch_mem: Optional[Memory] = None
     notes: str = ""
+    # -- fault overlay (see with_faults) --------------------------------------
+    # Coordinates are in ``core.scaleout`` order; link entries are
+    # ``(interconnect_name, cumulative_bandwidth_factor)``.  Both participate
+    # in ``df_text()`` so plan-cache keys distinguish degraded fabrics.
+    disabled_cores: Tuple[Tuple[int, ...], ...] = ()
+    degraded_links: Tuple[Tuple[str, float], ...] = ()
 
     # -- indexing ------------------------------------------------------------
     def dim(self, name: str) -> SpatialDim:
@@ -237,6 +243,87 @@ class HardwareModel:
     def local_capacity(self) -> int:
         return self.local_mem.size_bytes
 
+    # -- fault overlay ---------------------------------------------------------
+    @property
+    def is_degraded(self) -> bool:
+        return bool(self.disabled_cores or self.degraded_links)
+
+    def disabled_core_set(self) -> frozenset:
+        """Disabled core coordinates as a frozenset of tuples (memoized)."""
+        s = self.__dict__.get("_disabled_set")
+        if s is None:
+            s = self.__dict__["_disabled_set"] = frozenset(self.disabled_cores)
+        return s
+
+    def is_disabled(self, coords: Mapping[str, int]) -> bool:
+        """Whether the core at ``coords`` (spatial-dim name -> index; unbound
+        dims default to plane 0) is disabled by the fault overlay."""
+        if not self.disabled_cores:
+            return False
+        key = tuple(coords.get(d, 0) for d in self.core.scaleout)
+        return key in self.disabled_core_set()
+
+    @property
+    def healthy_cores(self) -> int:
+        return self.n_cores - len(self.disabled_cores)
+
+    def with_faults(self, disabled_cores: Sequence[Sequence[int]] = (),
+                    degraded_links: Sequence[Tuple[str, float]] = ()
+                    ) -> "HardwareModel":
+        """A copy of this model with additional faults applied on top of any
+        existing overlay.
+
+        ``disabled_cores`` are core coordinates (``core.scaleout`` order) that
+        no mapping may ever activate; ``degraded_links`` are
+        ``(interconnect_name, factor)`` pairs scaling per-link bandwidth by
+        ``factor`` (0 < factor <= 1).  Repeated degradation of the same link
+        composes multiplicatively.  The copy keeps the base ``name`` — the
+        overlay is distinguished by ``df_text()`` (and therefore by plan-cache
+        hardware digests), not by renaming.
+        """
+        import dataclasses
+
+        n_dims = len(self.core.scaleout)
+        new_disabled = set(self.disabled_cores)
+        for c in disabled_cores:
+            t = tuple(int(v) for v in c)
+            if len(t) != n_dims:
+                raise ValueError(
+                    f"disabled core {t} has {len(t)} coords; "
+                    f"{self.name} cores are indexed by {self.core.scaleout}")
+            for v, d in zip(t, self.core.scaleout):
+                if not 0 <= v < self.dim(d).size:
+                    raise ValueError(f"disabled core {t}: coord {d}={v} out of "
+                                     f"range [0, {self.dim(d).size})")
+            new_disabled.add(t)
+        if len(new_disabled) >= self.n_cores:
+            raise ValueError(f"cannot disable all {self.n_cores} cores of "
+                             f"{self.name}")
+
+        ic_names = {ic.name for ic in self.interconnects}
+        factors: Dict[str, float] = dict(self.degraded_links)
+        scale: Dict[str, float] = {}
+        for name, f in degraded_links:
+            if name not in ic_names:
+                raise ValueError(f"unknown interconnect {name!r}; "
+                                 f"available: {sorted(ic_names)}")
+            f = float(f)
+            if not 0.0 < f <= 1.0:
+                raise ValueError(f"degradation factor for {name} must be in "
+                                 f"(0, 1], got {f}")
+            factors[name] = factors.get(name, 1.0) * f
+            scale[name] = scale.get(name, 1.0) * f
+        new_ics = tuple(
+            dataclasses.replace(ic, bandwidth_gbps=ic.bandwidth_gbps * scale[ic.name])
+            if ic.name in scale else ic
+            for ic in self.interconnects)
+        # dataclasses.replace re-runs __init__, so per-instance memo caches
+        # (_ic_along, _noc_axes, _disabled_set, ...) are dropped in the copy.
+        return dataclasses.replace(
+            self, interconnects=new_ics,
+            disabled_cores=tuple(sorted(new_disabled)),
+            degraded_links=tuple(sorted(factors.items())))
+
     # -- compute queries -------------------------------------------------------
     def peak_flops_per_core(self) -> float:
         if self.core.mat is None:
@@ -290,6 +377,15 @@ class HardwareModel:
             lines.append(
                 f"%{ic.name} = df.interconnects %{ic.src}, %{ic.dst}, "
                 f"{{map={_map_text(ic.map)}, bandwidth={ic.bandwidth_gbps:g}}}")
+        # Fault overlay: rendered last so a fault-free model's text is
+        # byte-identical to pre-overlay output.  Degraded links already show
+        # in the interconnect bandwidths above; the explicit lines make the
+        # overlay legible and fork the hardware digest for disabled cores.
+        for c in self.disabled_cores:
+            coords = ", ".join(str(v) for v in c)
+            lines.append(f"df.fault disable %{core.name}[{coords}]")
+        for lname, f in self.degraded_links:
+            lines.append(f"df.fault degrade %{lname} {{factor={f:g}}}")
         return "\n".join(lines)
 
 

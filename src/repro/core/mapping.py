@@ -196,6 +196,52 @@ class Mapping:
     def total_cores(self) -> int:
         return math.prod(s for _, s in self.hw_dims)
 
+    # -- fault feasibility -----------------------------------------------------
+    def conflicts_with_faults(self, hw: HardwareModel) -> bool:
+        """True iff any disabled core of ``hw`` would ever be active under
+        this mapping — i.e. the mapping is infeasible on the degraded fabric.
+
+        Ever-active reduces to active-at-the-all-zero-wave: each grid index
+        is ``t * stride + digit(core)`` with ``stride >= 0``, so a core's
+        activity threshold over any wave loop is monotone and the wave-0
+        active set is the union over all waves (the same monotonicity the
+        wave-class simulator's threshold grouping relies on).  Cores on
+        idle hardware dims occupy implicit plane 0 (mirroring
+        ``simulator._core_coords``), so a disabled core with a nonzero
+        idle-dim coordinate never conflicts.
+        """
+        if not hw.disabled_cores:
+            return False
+        used = set(self.used_hw_dims())
+        for full in hw.disabled_cores:
+            env: Dict[str, int] = {}
+            on_plane0 = True
+            for dname, v in zip(hw.core.scaleout, full):
+                if dname in used:
+                    env[dname] = v
+                elif v != 0:
+                    on_plane0 = False
+                    break
+            if not on_plane0:
+                continue
+            for t in self.temporal:
+                env[t.name] = 0
+            active = True
+            for gd in self.program.grid_dims:
+                if self.grid_index_expr(gd.name).evaluate(env) >= gd.extent:
+                    active = False
+                    break
+            if active:
+                for sd in self.program.seq_dims:
+                    if self.reduce_factor(sd.name) > 1 \
+                            and self.seq_index_expr(sd.name).evaluate(
+                                {**env, sd.name: 0}) >= sd.extent:
+                        active = False
+                        break
+            if active:
+                return True
+        return False
+
     def utilization(self) -> float:
         """Fraction of (core x wave) slots holding real (non-padded) tiles."""
         u = 1.0
@@ -406,6 +452,12 @@ def enumerate_mappings(program: TileProgram, hw: HardwareModel, *,
     grid_names = [d.name for d in program.grid_dims]
     out: List[Mapping] = []
     seen = set()
+    # Degraded fabrics: mappings that would ever activate a disabled core
+    # are infeasible and never enter the candidate list.  The guard keeps
+    # the fault-free path byte-identical (same mappings, same canonical
+    # indices) — `conflicts_with_faults` is only consulted when an overlay
+    # is present.
+    degraded = bool(hw.disabled_cores)
 
     def expand(par_mesh, combo, extra_binds, styles, cap):
         """Expand one parallel assignment (``combo`` over ``par_mesh``) into
@@ -463,6 +515,8 @@ def enumerate_mappings(program: TileProgram, hw: HardwareModel, *,
                     if key in seen:
                         continue
                     seen.add(key)
+                    if degraded and m.conflicts_with_faults(hw):
+                        continue
                     out.append(m)
                     if len(out) >= cap:
                         return False

@@ -204,12 +204,27 @@ def _swap_pairs(hw: HardwareModel) -> List[Tuple[str, str]]:
         return pairs
     import itertools as _it
     dims = hw.mesh_dims
+    scaleout = hw.core.scaleout
+    disabled = hw.disabled_core_set()
     pairs = []
     for i in range(len(dims)):
         for j in range(i + 1, len(dims)):
             (d1, s1), (d2, s2) = dims[i], dims[j]
             if s1 != s2 or s1 <= 1:
                 continue
+            # a fault overlay breaks the swap symmetry unless the disabled
+            # set is itself invariant under it (a hole at (3, 5) makes the
+            # swapped mapping activate different physical cores)
+            if disabled:
+                i1, i2 = scaleout.index(d1), scaleout.index(d2)
+
+                def _swapped(c, a=i1, b=i2):
+                    c = list(c)
+                    c[a], c[b] = c[b], c[a]
+                    return tuple(c)
+
+                if {_swapped(c) for c in disabled} != set(disabled):
+                    continue
             ic1, ic2 = hw.interconnect_along(d1), hw.interconnect_along(d2)
             if (ic1 is None) != (ic2 is None):
                 continue

@@ -178,11 +178,19 @@ def _reduce_epilogue_cost(mapping, outer_stores, n_active: int, red_act: int,
 _LoopGroup = Tuple[int, bool, int]          # (core mask, digit == 0, population)
 
 
-def _loop_digit_groups(plan: DataflowPlan, coords: Sequence[Dict[str, int]]
+def _loop_digit_groups(plan: DataflowPlan, coords: Sequence[Dict[str, int]],
+                       hw: Optional[HardwareModel] = None
                        ) -> Tuple[int, List[List[_LoopGroup]]]:
     """Per temporal loop, group digit values by the core mask they induce
     (keeping value 0 separate — it feeds the odometer-carry bookkeeping).
-    Returns (static mask from waveless grid dims, per-loop group lists)."""
+    Returns (static mask from waveless grid dims, per-loop group lists).
+
+    When ``hw`` carries a fault overlay, its disabled cores are removed
+    from the static mask — exactly like a waveless grid dim idling a core
+    for the whole kernel — so both wave-class engines (scalar and batch
+    call this shared helper) exclude dead cores identically.  Fault-free
+    models contribute nothing, keeping the healthy path byte-identical.
+    """
     m = plan.mapping
     prog = m.program
     n_cores = len(coords)
@@ -190,6 +198,10 @@ def _loop_digit_groups(plan: DataflowPlan, coords: Sequence[Dict[str, int]]
     with_loop = {t.grid_dim for t in m.temporal}
 
     static_mask = full
+    if hw is not None and hw.disabled_cores:
+        for i, c in enumerate(coords):
+            if hw.is_disabled(c):
+                static_mask &= ~(1 << i)
     for d in prog.grid_dims:
         if d.name in with_loop:
             continue
@@ -311,7 +323,7 @@ def simulate(plan: DataflowPlan, hw: HardwareModel, *,
     outer_stores = [s for s in plan.stores if s.level < n_loops]
     k_cut = [min(c.hoist.level, n_temporal) for c in hoisted_loads]
 
-    static_mask, per_loop = _loop_digit_groups(plan, coords)
+    static_mask, per_loop = _loop_digit_groups(plan, coords, hw)
     n_waves = math.prod(t.extent for t in m.temporal) if m.temporal else 1
 
     def wave_cost(amask: int):
@@ -614,7 +626,8 @@ def simulate_reference(plan: DataflowPlan, hw: HardwareModel, *,
     outer_stores = [s for s in plan.stores if s.level < n_loops]
 
     for env in sampled:
-        active = [c for c in coords if _is_active(plan, {**c, **env})]
+        active = [c for c in coords if _is_active(plan, {**c, **env})
+                  and not hw.is_disabled(c)]
         if not active:
             total += wave_overhead_s
             continue

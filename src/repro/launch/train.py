@@ -24,7 +24,9 @@ from repro.data import DataConfig, make_source
 from repro.models import build_model
 from repro.obs import metrics as obs_metrics
 from repro.parallel.planner_bridge import plan_mesh
-from repro.runtime import HeartbeatRegistry, StragglerTracker
+from repro.runtime import (HeartbeatRegistry, ResilientDriver,
+                           StragglerTracker)
+from repro.runtime.faults import env_schedule
 from repro.train import train_step as TS
 from .mesh import make_host_mesh
 
@@ -83,26 +85,50 @@ def main(argv=None) -> None:
     reg = HeartbeatRegistry(1)
     straggler = StragglerTracker(reg)
 
-    t_start = time.perf_counter()
-    for step in range(start, args.steps):
-        batch = jax.tree.map(jnp.asarray,
-                             source.batch_at(step, args.batch, args.seq))
-        t0 = time.perf_counter()
-        state, metrics = step_fn(state, batch)
+    # fault injection (REPRO_FAULTS): host-straggler factors scale the step
+    # wall-times reported into the heartbeat registry so detection paths run
+    # under injected load; hw faults apply inside the planner/benchmarks
+    sched = env_schedule()
+    if sched is not None:
+        print(f"[train] injected faults: {sched.describe()}")
+
+    def timed_step(state, batch):
+        out_state, metrics = step_fn(state, batch)
         jax.block_until_ready(metrics["loss"])
-        dt = time.perf_counter() - t0
-        reg.beat(0, step, dt)
-        if mgr.should_save(step + 1):
-            mgr.save(state, step + 1)
-        if step % args.log_every == 0 or step == args.steps - 1:
-            tok_s = args.batch * args.seq / dt
-            print(f"[train] step {step:5d} loss={float(metrics['loss']):.4f} "
+        return out_state, metrics
+
+    def batches(step):
+        return jax.tree.map(jnp.asarray,
+                            source.batch_at(step, args.batch, args.seq))
+
+    def restore_fn():
+        tree, at = mgr.restore_latest(target_tree=template)
+        if tree is None:
+            return TS.init_state(api, tcfg, jax.random.PRNGKey(tcfg.seed)), 0
+        return tree, at
+
+    def on_step(step, state, metrics, dt):
+        if (step - 1) % args.log_every == 0 or step == args.steps:
+            tok_s = args.batch * args.seq / max(dt, 1e-9)
+            print(f"[train] step {step - 1:5d} "
+                  f"loss={float(metrics['loss']):.4f} "
                   f"gnorm={float(metrics['grad_norm']):.3f} "
                   f"lr={float(metrics['lr']):.2e} {tok_s:,.0f} tok/s")
+
+    drv = ResilientDriver(
+        timed_step, mgr, registry=reg, tracker=straggler,
+        step_time_scale=(None if sched is None
+                         else lambda s: sched.straggler_factor(0, s)))
+    t_start = time.perf_counter()
+    state, _, _ = drv.run(state, batches, start_step=start,
+                          n_steps=args.steps - start,
+                          restore_fn=restore_fn, on_step=on_step)
     mgr.wait()
     total = time.perf_counter() - t_start
     print(f"[train] done: {args.steps - start} steps in {total:.1f}s; "
           f"stragglers={straggler.stragglers()}")
+    for ev in drv.events:
+        print(f"[train] recovery: step {ev.step} {ev.kind}: {ev.detail}")
     counts = obs_metrics.counter_totals(obs_metrics.snapshot())
     if counts:
         print("[train] metrics: " + " ".join(

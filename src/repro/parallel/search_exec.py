@@ -43,6 +43,33 @@ from repro.obs import metrics, trace
 WORKERS_ENV = "REPRO_PLANNER_WORKERS"
 MP_CONTEXT_ENV = "REPRO_PLANNER_MP"      # fork | spawn | forkserver
 
+# Deterministic worker-crash injection (repro.runtime.faults arms this):
+# the env var names a marker file; the first worker task to claim it
+# removes the file and hard-exits, breaking the pool exactly once.
+CRASH_ENV = "REPRO_FAULT_WORKER_CRASH"
+
+# Pool-failure policy: a BrokenProcessPool (worker OOM-killed, crashed, or
+# torn down by a signal) is retried on a fresh pool with exponential
+# backoff; pickling errors are permanent and fail fast.  Callers fall back
+# to the inline search when retries are exhausted, so a dying pool degrades
+# throughput but never the result.
+_POOL_RETRIES = 2
+_POOL_BACKOFF_S = 0.05
+
+
+def _maybe_crash_worker() -> None:
+    """One-shot injected crash (see :data:`CRASH_ENV`).  Claiming the
+    marker file is atomic (``os.remove`` succeeds in exactly one process),
+    so a schedule arms exactly one crash no matter how many workers race."""
+    marker = os.environ.get(CRASH_ENV, "").strip()
+    if not marker:
+        return
+    try:
+        os.remove(marker)
+    except OSError:
+        return                           # already claimed (or never armed)
+    os._exit(17)
+
 
 def _mp_context():
     """Worker start method.  ``fork`` where available and safe: no
@@ -104,17 +131,52 @@ def shutdown_pool() -> None:
 atexit.register(shutdown_pool)
 
 
+def _run_pool_tasks(fn: Callable[[Any], Any], tasks: Sequence[Any],
+                    workers: int, *, label: str) -> Optional[List[Any]]:
+    """Submit one task per ``fn(task)`` call and collect results in
+    submission order, surviving crashed workers: a broken pool is torn
+    down and the whole batch retried on a fresh pool (bounded, with
+    exponential backoff).  Returns None when the pool is truly unusable —
+    pickling failure, or retries exhausted — and the caller runs inline.
+    Tasks must therefore be idempotent (every current caller's are: pure
+    ranking, or content-addressed store publishes)."""
+    delay = _POOL_BACKOFF_S
+    for attempt in range(_POOL_RETRIES + 1):
+        try:
+            pool = _get_pool(workers)
+            futs = [pool.submit(fn, t) for t in tasks]
+            return [f.result() for f in futs]
+        except (OSError, pickle.PicklingError, BrokenProcessPool) as e:
+            shutdown_pool()              # a broken pool never recovers
+            metrics.inc("search_pool_failures_total",
+                        kind=type(e).__name__, where=label)
+            if isinstance(e, pickle.PicklingError) \
+                    or attempt == _POOL_RETRIES:
+                return None
+            time.sleep(delay)
+            delay *= 2
+    return None
+
+
 # ------------------------------------------------------------ hw transport
 def hw_spec(hw) -> Optional[Tuple[str, Any]]:
     """A cross-process handle for a HardwareModel: preset name when the
     model is a registered preset (Wormhole's composite channel map is a
-    local class and cannot pickle), else pickled bytes, else None (caller
-    must run inline)."""
+    local class and cannot pickle), a ``preset_faults`` triple when the
+    model is a preset plus a fault overlay (degraded fabrics inherit the
+    unpicklable channel map), else pickled bytes, else None (caller must
+    run inline)."""
     from repro.core.hw import PRESETS
     if hw.name in PRESETS:
         try:
             if PRESETS[hw.name]().df_text() == hw.df_text():
                 return ("preset", hw.name)
+            if hw.is_degraded:
+                rebuilt = PRESETS[hw.name]().with_faults(
+                    hw.disabled_cores, hw.degraded_links)
+                if rebuilt.df_text() == hw.df_text():
+                    return ("preset_faults",
+                            (hw.name, hw.disabled_cores, hw.degraded_links))
         except Exception:
             pass
     try:
@@ -128,6 +190,10 @@ def hw_from_spec(spec: Tuple[str, Any]):
     if kind == "preset":
         from repro.core.hw import get_hw
         return get_hw(val)
+    if kind == "preset_faults":
+        from repro.core.hw import get_hw
+        name, disabled, links = val
+        return get_hw(name).with_faults(disabled, links)
     return pickle.loads(val)
 
 
@@ -152,6 +218,7 @@ def _worker_rank(task: Dict[str, Any]) -> Dict[str, Any]:
     trace shows every worker process; workers never write trace files
     themselves, which would clobber the parent's ``REPRO_TRACE`` path)."""
     os.environ[WORKERS_ENV] = "1"        # no nested pools
+    _maybe_crash_worker()
     from repro.core import planner
     from repro.plancache import serialize
     tracing = bool(task.get("trace"))
@@ -225,12 +292,9 @@ def rank_sharded(programs: Sequence, hw, budget, *, spatial_reuse: bool,
             "engine": engine,
             "trace": trace.enabled(),
         })
-    try:
-        pool = _get_pool(workers)
-        futs = [pool.submit(_worker_rank, t) for t in tasks]
-        results = [f.result() for f in futs]
-    except (OSError, pickle.PicklingError, BrokenProcessPool):
-        shutdown_pool()                  # a broken pool never recovers
+    results = _run_pool_tasks(_worker_rank, tasks, workers,
+                              label="rank_sharded")
+    if results is None:
         return None
     entries = []
     for res in results:                  # chunk order == program order
@@ -260,6 +324,7 @@ def _plan_node_pool_job(task: Dict[str, Any]) -> Dict[str, Any]:
     process; returns the serialized candidates in pool order (plus the
     worker's buffered spans when the parent is tracing)."""
     os.environ[WORKERS_ENV] = "1"        # no nested pools
+    _maybe_crash_worker()
     from repro.core import planner
     from repro.pipeline.planner import node_candidate_pool
     from repro.plancache import serialize
@@ -303,12 +368,10 @@ def plan_node_pools(program_lists: Sequence[Sequence], hw, budget, *,
         "engine": engine,
         "trace": trace.enabled(),
     } for progs in program_lists]
-    try:
-        pool = _get_pool(min(workers, len(tasks)))
-        futs = [pool.submit(_plan_node_pool_job, t) for t in tasks]
-        results = [f.result() for f in futs]
-    except (OSError, pickle.PicklingError, BrokenProcessPool):
-        shutdown_pool()
+    results = _run_pool_tasks(_plan_node_pool_job, tasks,
+                              min(workers, len(tasks)),
+                              label="plan_node_pools")
+    if results is None:
         return None
     pools = []
     for res in results:
@@ -331,13 +394,15 @@ def _repro_env() -> Dict[str, Optional[str]]:
     return {k: os.environ.get(k) for k in keys}
 
 
-def _run_with_env(env: Dict[str, Optional[str]], fn: Callable[[Any], Any],
-                  job: Any) -> Any:
+def _run_with_env(task: Tuple[Dict[str, Optional[str]],
+                              Callable[[Any], Any], Any]) -> Any:
+    env, fn, job = task
     for k, v in env.items():
         if v is None:
             os.environ.pop(k, None)
         else:
             os.environ[k] = v
+    _maybe_crash_worker()
     return fn(job)
 
 
@@ -348,12 +413,19 @@ def map_jobs(fn: Callable[[Any], Any], jobs: Sequence[Any],
     the parent's current ``REPRO_*`` environment (see :func:`_repro_env`),
     and results arrive in submission order, so output is deterministic
     regardless of completion order.  ``workers <= 1`` (or a single job)
-    runs inline."""
+    runs inline.
+
+    Jobs must be idempotent: a crashed worker breaks the whole pool, and
+    the batch is retried on a fresh pool (:func:`_run_pool_tasks`) — with
+    the entire batch run inline as the last resort — so partially
+    completed side effects (content-addressed store puts) repeat."""
     jobs = list(jobs)
     workers = min(workers, len(jobs))
     if workers <= 1:
         return [fn(j) for j in jobs]
     env = _repro_env()
-    pool = _get_pool(workers)
-    futs = [pool.submit(_run_with_env, env, fn, j) for j in jobs]
-    return [f.result() for f in futs]
+    results = _run_pool_tasks(_run_with_env, [(env, fn, j) for j in jobs],
+                              workers, label="map_jobs")
+    if results is None:                  # pool unusable: degrade, don't die
+        return [fn(j) for j in jobs]
+    return results

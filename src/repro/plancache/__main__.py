@@ -42,6 +42,11 @@ BASE_GEMM_SHAPES: Tuple[Tuple[int, int, int], ...] = (
 BASE_FLASH_SHAPES: Tuple[Tuple[int, int, int], ...] = (
     (4096, 4096, 64), (4096, 4096, 128), (8192, 8192, 128),
 )
+# GEMM cells of the single-core-failure plan pools (``warm --faults``) —
+# must mirror the degraded-mesh acceptance suite (tests/test_faults.py)
+FAULT_GEMM_SHAPES: Tuple[Tuple[int, int, int], ...] = (
+    (256, 256, 256), (512, 512, 512), (512, 1024, 512),
+)
 
 
 def _parse_shape(text: str, n: int) -> Tuple[int, ...]:
@@ -164,6 +169,20 @@ def cmd_warm(args: argparse.Namespace) -> int:
                  for s in _benchmark_gemm_shapes(args.full)]
         # flash_fig7 cells (wormhole_8x8 only, as the benchmark runs them)
         jobs += [("wh_flash", s) for s in _wormhole_flash_shapes()]
+
+    if args.faults:
+        from repro.core import get_hw
+        fhw = get_hw(args.faults_hw)
+        shapes = list(args.faults_gemm or FAULT_GEMM_SHAPES)
+        if args.faults_core:
+            cores = [tuple(int(v) for v in c.split(","))
+                     for c in args.faults_core]
+        else:
+            import itertools
+            cores = [tuple(c) for c in itertools.product(
+                *(range(s) for _, s in fhw.mesh_dims))]
+        jobs += [("fault_gemm", (args.faults_hw, s, core))
+                 for core in cores for s in shapes]
 
     from . import warmjobs
     cum0 = store.cumulative_stats()       # workers flush into this file
@@ -293,6 +312,22 @@ def main(argv: Sequence[str] | None = None) -> int:
                         "(\"all\" = every benchmark mesh config)")
     w.add_argument("--full", action="store_true",
                    help="use the full benchmark shape tables")
+    w.add_argument("--faults", action="store_true",
+                   help="pre-warm single-core-failure plan pools: for each "
+                        "core of --faults-hw, run the degradation ladder "
+                        "(repro.runtime.replan) on the one-core-dead mesh "
+                        "and publish under the degraded cache key, so a "
+                        "live failure re-plans as a pure cache hit")
+    w.add_argument("--faults-hw", default="wormhole_8x8",
+                   help="hardware preset for --faults pools "
+                        "(default: wormhole_8x8)")
+    w.add_argument("--faults-gemm", action="append",
+                   type=lambda t: _parse_shape(t, 3), metavar="MxNxK",
+                   help="GEMM cells per failed core (repeatable; default: "
+                        "the degraded-mesh acceptance suite)")
+    w.add_argument("--faults-core", action="append", metavar="R,C",
+                   help="restrict the pool to specific failed cores "
+                        "(repeatable; default: every core of the mesh)")
     w.add_argument("--fast", action="store_true",
                    help="set REPRO_FAST_SEARCH=1 for this run")
     w.add_argument("--jobs", type=int, default=1,

@@ -37,7 +37,11 @@ from .serialize import program_to_dict
 # v3: kernel-graph pipeline planning — graph-level entries (GraphPlan:
 # per-node candidates + per-edge forward/spill decisions) joined the layout
 # and SearchBudget gained `pipeline_forwarding`; v2 entries read as misses.
-SCHEMA_VERSION = 3
+# v4: fault-overlay keys — HardwareModel grew disabled_cores/degraded_links
+# and df_text() now emits `df.fault` lines, so a degraded fabric hashes to
+# its own hw digest and the degraded-mesh re-plan ladder (runtime/replan)
+# publishes plan pools under those keys; v3 entries read as misses.
+SCHEMA_VERSION = 4
 
 
 def canonical_json(obj: Any) -> str:

@@ -105,6 +105,28 @@ def _pipeline(payload) -> str:
             f"{gp.improvement:.2f}x vs DRAM handoff)")
 
 
+def _fault_gemm(payload) -> str:
+    """Warm one cell of a single-core-failure plan pool (``warm --faults``):
+    run the full degradation ladder for ``hw`` with ``core`` disabled and
+    publish the winner under the *degraded* cache key, so a live failure of
+    that core re-plans as a pure cache hit (zero cold searches).  Budgets
+    and program lists must match :func:`repro.runtime.replan.plan_degraded`
+    defaults exactly — they do, because this calls it."""
+    hw_name, (M, N, K), core = payload
+    from repro.core import block_shape_candidates, get_hw, matmul_program
+    from repro.runtime.replan import plan_degraded
+    from .cache import PlanCache
+    hw = get_hw(hw_name)
+    deg = hw.with_faults(disabled_cores=[tuple(core)])
+    progs = [matmul_program(M, N, K, bm=bm, bn=bn, bk=bk)
+             for bm, bn, bk in block_shape_candidates(M, N, K)]
+    out = plan_degraded(progs, deg, healthy_hw=hw, cache=PlanCache(),
+                        cause="warm")
+    return (f"[warm] faults {hw_name} -core{tuple(core)} gemm {M}x{N}x{K} "
+            f"-> {out.rung}, {out.result.best.final_s * 1e6:.1f}us "
+            f"on {out.hw.name}")
+
+
 def _benchmark_gemm_entry():
     """The benchmark suite's ``tl_gemm`` + budget when the repo checkout is
     importable, else an equivalent local fallback — budgets must match the
@@ -134,6 +156,7 @@ _KINDS = {
     "wh_gemm": _wormhole_gemm,
     "wh_flash": _wormhole_flash,
     "pipeline": _pipeline,
+    "fault_gemm": _fault_gemm,
 }
 
 

@@ -91,6 +91,27 @@ def test_straggler_detection():
     assert StragglerTracker(reg).stragglers() == [2]
 
 
+def test_silent_from_birth_host_times_out():
+    """A host that registers but never beats must still be declared dead:
+    registration counts as the first 'seen' instant."""
+    reg = HeartbeatRegistry(3, timeout_s=10.0, now=0.0)
+    reg.beat(1, 0, 1.0, now=5.0)
+    reg.beat(2, 0, 1.0, now=5.0)
+    assert reg.dead_hosts(now=9.0) == []             # within timeout
+    assert reg.dead_hosts(now=10.0) == []            # edge: strictly >
+    assert reg.dead_hosts(now=11.0) == [0]           # never beat -> dead
+    assert set(reg.dead_hosts(now=16.0)) == {0, 1, 2}
+
+
+def test_stragglers_need_two_reporting_hosts():
+    """With fewer than two hosts reporting enough samples there is no
+    population to compare against — nobody is flagged."""
+    reg = HeartbeatRegistry(4, timeout_s=1e9, now=0.0)
+    for step in range(10):
+        reg.beat(0, step, 9.0, now=float(step))      # slow, but alone
+    assert StragglerTracker(reg).stragglers() == []
+
+
 def test_resilient_driver_restores_and_replays(tmp_path):
     """Inject a failure at step 5; the driver must restore from the last
     checkpoint and complete — with deterministic data the final state matches
@@ -122,6 +143,75 @@ def test_resilient_driver_restores_and_replays(tmp_path):
     assert float(state) == 10.0            # replayed steps, exact recovery
 
 
+def test_resilient_driver_requires_restore_path():
+    """Replay-from-checkpoint is enforced: retrying against in-memory state
+    after a failed step is unsafe (possibly-corrupt tree), so run() refuses
+    up front when retries are allowed but no restore path exists."""
+    drv = ResilientDriver(lambda s, b: (s, {}), None)
+    with pytest.raises(ValueError, match="restore_fn"):
+        drv.run(0, lambda step: None, start_step=0, n_steps=1)
+    # max_retries=0 fails fast instead: no restore needed, first error raises
+    drv0 = ResilientDriver(lambda s, b: 1 / 0, None, max_retries=0)
+    with pytest.raises(ZeroDivisionError):
+        drv0.run(0, lambda step: None, start_step=0, n_steps=1)
+    assert [e.kind for e in drv0.events] == ["restart"]
+
+
+def test_resilient_driver_retry_exhaustion_raises():
+    def step_fn(state, batch):
+        raise RuntimeError("persistent device loss")
+
+    drv = ResilientDriver(step_fn, None, max_retries=2)
+    with pytest.raises(RuntimeError, match="persistent"):
+        drv.run(0, lambda step: None, start_step=0, n_steps=4,
+                restore_fn=lambda: (0, 0))
+    assert [e.kind for e in drv.events] == ["restart"] * 3   # 1 + 2 retries
+
+
+def test_resilient_driver_emits_straggler_events():
+    """Tracker detections surface as RecoveryEvents (each host once)."""
+    clock = {"t": 100.0}
+    reg = HeartbeatRegistry(3, timeout_s=1e9, now=clock["t"])
+    for step in range(10):                       # pre-existing telemetry
+        reg.beat(1, step, 5.0, now=100.0)        # host 1 is the straggler
+        reg.beat(2, step, 1.0, now=100.0)
+
+    def step_fn(state, batch):
+        clock["t"] += 1.0
+        return state + 1, {}
+
+    drv = ResilientDriver(step_fn, None, max_retries=0,
+                          registry=reg, tracker=StragglerTracker(reg),
+                          clock=lambda: clock["t"])
+    state, step, _ = drv.run(0, lambda step: None, start_step=0, n_steps=3)
+    assert state == 3 and step == 3
+    straggler = [e for e in drv.events if e.kind == "straggler"]
+    assert len(straggler) == 1 and "host 1" in straggler[0].detail
+
+
+def test_resilient_driver_emits_rescale_events():
+    """A dead host triggers exactly one rescale event and the rescale_fn
+    hook receives (dead, alive)."""
+    clock = {"t": 0.0}
+    reg = HeartbeatRegistry(2, timeout_s=5.0, now=0.0)
+    calls = []
+
+    def step_fn(state, batch):
+        clock["t"] += 4.0
+        return state, {}
+
+    drv = ResilientDriver(step_fn, None, max_retries=0, registry=reg,
+                          rescale_fn=lambda dead, alive:
+                          calls.append((dead, alive)),
+                          clock=lambda: clock["t"])
+    drv.run(0, lambda step: None, start_step=0, n_steps=3)
+    # host 1 never beat after registration at t=0; driver (host 0) kept
+    # beating, so by t=8 only host 1 is dead — and it is reported once
+    rescale = [e for e in drv.events if e.kind == "rescale"]
+    assert len(rescale) == 1 and "[1]" in rescale[0].detail
+    assert calls == [([1], [0])]
+
+
 # ------------------------------------------------------------------ elastic
 def test_viable_mesh_shapes():
     shapes = viable_mesh_shapes(256)
@@ -138,6 +228,21 @@ def test_plan_rescale_shrink():
     assert rp.mesh_shape[0] * rp.mesh_shape[1] == 192
     assert shape.global_batch % rp.mesh_shape[0] == 0
     assert rp.plan_name
+
+
+def test_plan_rescale_batch_divisibility_fallback():
+    """When the squarest mesh's data axis does not divide the global batch,
+    plan_rescale walks to the next factorization that does instead of
+    silently breaking batch reproducibility."""
+    api = build_model(ARCHS["qwen2.5-3b"])
+    shape = ShapeConfig("odd_batch", seq_len=128, global_batch=3,
+                        kind="train")
+    rp = plan_rescale(api, shape, TrainConfig(microbatches=1),
+                      old_devices=16, new_devices=8)
+    # squarest is (2, 4) but 3 % 2 != 0 -> falls back to (1, 8)
+    assert rp.mesh_shape == (1, 8)
+    assert shape.global_batch % rp.mesh_shape[0] == 0
+    assert rp.batch_note == ""
 
 
 # ------------------------------------------------------ gradient compression
