@@ -255,6 +255,56 @@ def summarize(cells: Dict[str, Dict]) -> Dict:
     return out
 
 
+def service_latency(budget_ms: float = 10.0) -> Dict[str, Dict]:
+    """Plan-service resolve-latency probe: a cold pass (rungs 2-4 under
+    the deadline), a drain of the background completions, and a warm pass
+    (all rung-1), against a throwaway store.  Reports p50/p99 resolve
+    time per rung from the ``planservice_resolve_seconds`` histogram —
+    the service's latency trajectory, tracked like plan_speed."""
+    import tempfile
+    from repro import plancache
+    from repro.core import block_shape_candidates, matmul_program
+    from repro.planservice import PlanRequest, PlanService
+
+    shapes = ((256, 256, 256), (512, 512, 256), (512, 256, 512),
+              (1024, 512, 256))
+    hw = get_hw("wormhole_1x8")
+    old = os.environ.get(plancache.ENV_DIR)
+    tmp = tempfile.mkdtemp(prefix="planservice_bench_")
+    os.environ[plancache.ENV_DIR] = tmp
+    plancache.reset_store()
+    try:
+        svc = PlanService()
+
+        def requests():
+            for M, N, K in shapes:
+                progs = [matmul_program(M, N, K, bm=bm, bn=bn, bk=bk)
+                         for bm, bn, bk in block_shape_candidates(M, N, K)]
+                yield PlanRequest(progs, hw, budget_ms=budget_ms)
+
+        for req in requests():
+            svc.resolve(req)             # cold: family/search/fallback
+        svc.drain()
+        for req in requests():
+            svc.resolve(req)             # warm: background-published hits
+    finally:
+        if old is None:
+            os.environ.pop(plancache.ENV_DIR, None)
+        else:
+            os.environ[plancache.ENV_DIR] = old
+        plancache.reset_store()
+    hist = metrics.snapshot().get("planservice_resolve_seconds", {})
+    out: Dict[str, Dict] = {"budget_ms": budget_ms}
+    for s in hist.get("series", []):
+        rung = s["labels"].get("rung", "?")
+        p50 = metrics.hist_quantile(s, 0.5)
+        p99 = metrics.hist_quantile(s, 0.99)
+        out[rung] = {"count": s["count"],
+                     "p50_ms": p50 * 1e3 if p50 is not None else None,
+                     "p99_ms": p99 * 1e3 if p99 is not None else None}
+    return out
+
+
 def check_golden(cells: Dict[str, Dict], path: str) -> int:
     """Compare best-plan selections against a golden summary; returns the
     number of drifted cells (0 = pass)."""
@@ -303,6 +353,7 @@ def run(full: bool = False, workers: Optional[int] = None):
             cells[name]["best_workers"] = c["best"]
     summary = summarize(cells)
     summary["workers"] = w_n
+    summary["plan_latency"] = service_latency()
     with open(JSON_PATH, "w") as f:
         json.dump({"cells": cells, "summary": summary}, f, indent=1,
                   sort_keys=True)

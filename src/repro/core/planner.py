@@ -188,6 +188,48 @@ def effective_budget(budget: Optional[SearchBudget] = None) -> SearchBudget:
         max_programs=min(b.max_programs, 16) if b.max_programs else 16)
 
 
+def budget_for_deadline(budget: Optional[SearchBudget],
+                        remaining_s: float) -> SearchBudget:
+    """Trim a search budget to what is plausibly searchable in
+    ``remaining_s`` seconds (the plan service's rung-3 knob).
+
+    A deterministic step ladder, not a continuous scaler: the trimmed
+    budget must be reproducible for cache keying and testing, so the
+    remaining time only selects one of three fixed trim levels.  With ten
+    seconds or more (or an unbounded deadline) the budget is returned
+    unchanged — full-budget resolution through the service stays
+    bit-identical to calling the planner directly.
+    """
+    b = effective_budget(budget)
+    if remaining_s == float("inf") or remaining_s >= 10.0:
+        return b
+    if remaining_s >= 1.0:
+        return replace(
+            b,
+            top_k=min(b.top_k, 3),
+            max_mappings=min(b.max_mappings, 64),
+            max_plans_per_mapping=min(b.max_plans_per_mapping, 24),
+            max_candidates=min(b.max_candidates, 2000),
+            max_programs=min(b.max_programs, 8) if b.max_programs else 8)
+    if remaining_s >= 0.1:
+        return replace(
+            b,
+            top_k=min(b.top_k, 2),
+            max_mappings=min(b.max_mappings, 24),
+            max_plans_per_mapping=min(b.max_plans_per_mapping, 12),
+            max_candidates=min(b.max_candidates, 500),
+            max_per_load=min(b.max_per_load, 6),
+            max_programs=min(b.max_programs, 4) if b.max_programs else 4)
+    return replace(
+        b,
+        top_k=1,
+        max_mappings=min(b.max_mappings, 8),
+        max_plans_per_mapping=min(b.max_plans_per_mapping, 4),
+        max_candidates=min(b.max_candidates, 120),
+        max_per_load=min(b.max_per_load, 4),
+        max_programs=min(b.max_programs, 2) if b.max_programs else 2)
+
+
 # --------------------------------------------------------------------------
 # Streaming candidate generation
 # --------------------------------------------------------------------------

@@ -18,7 +18,7 @@ from repro.obs import metrics
 from repro.configs.base import ShapeConfig, TrainConfig
 from repro.data import DataConfig, make_source
 from repro.models import build_model
-from repro.parallel.planner_bridge import plan_mesh
+from repro.planservice import PlanService
 
 
 def main(argv=None) -> None:
@@ -28,6 +28,9 @@ def main(argv=None) -> None:
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--tokens", type=int, default=32)
     ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--plan-budget-ms", type=float, default=None,
+                    help="plan-service deadline (default "
+                         "$REPRO_PLAN_DEADLINE_MS / 10ms)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -36,12 +39,16 @@ def main(argv=None) -> None:
     api = build_model(cfg)
     shape = ShapeConfig("serve", seq_len=args.prompt_len + args.tokens,
                         global_batch=args.batch, kind="decode")
-    store = plancache.get_store()
-    with plancache.lookup_source(store) as probe:
-        ranking = plan_mesh(api, shape, TrainConfig())
-    print(f"[serve] {cfg.name}: decode plan ranking ({probe['source']}): "
+    # the serving loop never stalls on planning: the deadline-bounded
+    # service answers from cache / family / bounded search / fallback
+    service = PlanService()
+    resp = service.resolve_mesh(api, shape, TrainConfig(),
+                                budget_ms=args.plan_budget_ms)
+    ranking = resp.ranking or []
+    print(f"[serve] {cfg.name}: decode plan ranking "
+          f"(rung={resp.rung} {resp.seconds * 1e3:.1f}ms): "
           + ", ".join(r.plan.name for r in ranking[:3]))
-    store.flush_stats()
+    plancache.get_store().flush_stats()
 
     params = api.init(jax.random.PRNGKey(0))
     source = make_source(DataConfig(vocab_size=cfg.vocab_size), cfg)

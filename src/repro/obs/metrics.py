@@ -309,6 +309,38 @@ def diff_counters(before: Mapping[str, Any], after: Mapping[str, Any]
     return out
 
 
+def hist_quantile(series: Mapping[str, Any], q: float) -> Optional[float]:
+    """Estimate the ``q``-quantile of a snapshot histogram series (the
+    ``{count, min, max, buckets}`` dict :meth:`Registry.snapshot` emits).
+
+    Linear interpolation inside the covering bucket, clamped to the
+    observed ``[min, max]`` so the coarse log bounds can't report a p99
+    above the largest value actually seen.  Returns ``None`` on an empty
+    series."""
+    count = int(series.get("count") or 0)
+    if count <= 0:
+        return None
+    lo, hi = float(series["min"]), float(series["max"])
+    q = min(1.0, max(0.0, float(q)))
+    rank = q * count
+    bounds = list(series["buckets"]["le"])
+    counts = list(series["buckets"]["counts"])
+    seen = 0.0
+    prev_bound = 0.0
+    for bound, n in zip(bounds, counts):
+        if n <= 0:
+            prev_bound = bound if bound != "inf" else prev_bound
+            continue
+        if seen + n >= rank:
+            upper = hi if bound == "inf" else float(bound)
+            frac = (rank - seen) / n
+            est = prev_bound + (upper - prev_bound) * frac
+            return min(hi, max(lo, est))
+        seen += n
+        prev_bound = float(bound) if bound != "inf" else prev_bound
+    return hi
+
+
 def dump(path: Optional[str] = None) -> Optional[str]:
     """Write the snapshot as JSON to ``path`` or ``$REPRO_METRICS``.
     Returns the path written, or None when no destination is known."""

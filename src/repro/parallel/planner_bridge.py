@@ -369,7 +369,9 @@ def plan_mesh(api: ModelAPI, shape: ShapeConfig, tcfg: TrainConfig, *,
                 return [_mesh_result_from_dict(d)
                         for d in ent["payload"]["results"]]
             except (KeyError, TypeError, ValueError):
-                pass
+                # decoded fine but doesn't deserialize: corrupt payload,
+                # quarantine it and fall through to a fresh ranking
+                store.quarantine(key, "deserialize")
     out = []
     t_rank = time.perf_counter()
     for plan in candidate_plans(api.cfg, shape):
@@ -399,6 +401,19 @@ def plan_mesh(api: ModelAPI, shape: ShapeConfig, tcfg: TrainConfig, *,
                         "arch": api.cfg.name, "kind": shape.kind,
                         "best": ranked[0].plan.name if ranked else None})
     return ranked
+
+
+def plan_mesh_service(api: ModelAPI, shape: ShapeConfig, tcfg: TrainConfig,
+                      *, service=None, multi_pod: bool = False,
+                      top_k: int = 3, budget_ms: Optional[float] = None):
+    """:func:`plan_mesh` through the deadline-bounded plan service: same
+    ranking, plus rung/latency accounting and the never-raise contract.
+    Returns a ``planservice.MeshPlanResponse``; ``service=None`` builds a
+    throwaway one over the process-wide store."""
+    from repro.planservice import PlanService
+    svc = service if service is not None else PlanService()
+    return svc.resolve_mesh(api, shape, tcfg, multi_pod=multi_pod,
+                            top_k=top_k, budget_ms=budget_ms)
 
 
 def _plan_mesh_job(payload) -> List[MeshPlanResult]:

@@ -18,6 +18,7 @@ from repro.obs import metrics, trace
 
 from . import keying, serialize, warmstart
 from .store import PlanCacheStore, get_store
+from .validate import validate_plan
 
 
 def _note_cache_seconds(t0: float) -> None:
@@ -53,9 +54,17 @@ class PlanCache:
             if ent is None:
                 return None
             try:
-                return serialize.result_from_dict(ent["payload"]["result"])
+                result = serialize.result_from_dict(ent["payload"]["result"])
             except (KeyError, TypeError, ValueError):
+                # structurally valid JSON that doesn't deserialize into a
+                # PlanResult is corruption, not a schema skew: quarantine it
+                self.store.quarantine(key, "deserialize")
                 return None
+            bad = validate_plan(result.best.plan, hw)
+            if bad:
+                self.store.quarantine(key, "invalid_plan")
+                return None
+            return result
 
     def put_result(self, programs: Sequence[TileProgram], hw: HardwareModel,
                    budget: Optional[SearchBudget], result: PlanResult, *,
@@ -96,6 +105,7 @@ class PlanCache:
             try:
                 return serialize.graph_plan_from_dict(ent["payload"]["graph"])
             except (KeyError, TypeError, ValueError):
+                self.store.quarantine(key, "deserialize")
                 return None
 
     def put_graph_result(self, graph, hw: HardwareModel,

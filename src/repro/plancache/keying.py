@@ -167,3 +167,34 @@ def shape_vector(program: TileProgram) -> list:
     for a in program.loads + program.stores:
         out.extend(int(s) for s in a.tensor.shape)
     return out
+
+
+def bucket_extent(n: int, granule: int = 32) -> int:
+    """Bucket a dim extent for shape-family keys: the smallest
+    power-of-two multiple of ``granule`` that covers ``n``.  Extents at or
+    below the granule collapse to one bucket (ragged tails of a tiled dim
+    plan identically), and beyond it buckets double — so a family spans
+    e.g. (2048, 4096] while staying tile-aligned."""
+    n = max(1, int(n))
+    g = max(1, int(granule))
+    b = g
+    while b < n:
+        b *= 2
+    return b
+
+
+def family_signature(template: str, hw: str, shape: Sequence[int],
+                     granule: int = 32) -> str:
+    """Shape-family key: the template + hardware + *bucketed* shape vector.
+    All requests whose dims fall in the same pow2-of-granule buckets share
+    one family — the plan service's rung-2 candidates are the cached
+    neighbors of the request's family (and adjacent ones via the store's
+    log-distance ranking)."""
+    sig = {
+        "schema": SCHEMA_VERSION,
+        "kind": "family",
+        "template": template,
+        "hw": hw,
+        "buckets": [bucket_extent(s, granule) for s in shape],
+    }
+    return digest_of(sig)[:16]

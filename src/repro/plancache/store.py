@@ -37,6 +37,7 @@ ENV_DIR = "REPRO_PLAN_CACHE_DIR"
 ENV_TOGGLE = "REPRO_PLAN_CACHE"
 _OFF_VALUES = ("0", "off", "false", "no", "disable", "disabled")
 STATS_FILE = "_stats.json"
+QUARANTINE_DIR = "quarantine"
 
 
 def default_cache_dir() -> Path:
@@ -58,6 +59,7 @@ class CacheStats:
     bypassed: int = 0
     puts: int = 0
     warm_starts: int = 0
+    corrupt: int = 0         # entries quarantined (decode/checksum/validate)
 
     @property
     def hits(self) -> int:
@@ -74,7 +76,8 @@ class CacheStats:
     def as_dict(self) -> Dict[str, int]:
         return {"hits_mem": self.hits_mem, "hits_disk": self.hits_disk,
                 "misses": self.misses, "bypassed": self.bypassed,
-                "puts": self.puts, "warm_starts": self.warm_starts}
+                "puts": self.puts, "warm_starts": self.warm_starts,
+                "corrupt": self.corrupt}
 
     def add(self, other: Dict[str, int]) -> None:
         for k, v in other.items():
@@ -102,6 +105,38 @@ class PlanCacheStore:
     def _path(self, key: str) -> Path:
         return self.root / f"{key}.json"
 
+    # ----------------------------------------------------- integrity
+    def quarantine(self, key: str, cause: str) -> None:
+        """Move a corrupt/invalid entry to ``<root>/quarantine/`` (atomic
+        rename, preserved for debugging) and count it.  Used by the read
+        path on decode/checksum failures and by the cache layer when a
+        deserialized plan fails :func:`~repro.plancache.validate
+        .validate_plan`."""
+        self._mem.pop(key, None)
+        self._quarantine_path(self._path(key), cause)
+
+    def _quarantine_path(self, path: Path, cause: str) -> None:
+        self.stats.corrupt += 1
+        metrics.inc("plancache_corrupt_entries_total", cause=cause)
+        try:
+            qdir = self.root / QUARANTINE_DIR
+            qdir.mkdir(parents=True, exist_ok=True)
+            os.replace(path, qdir / path.name)
+        except OSError:
+            with contextlib.suppress(OSError):
+                path.unlink()
+        self._meta = None          # the index no longer matches the dir
+
+    @staticmethod
+    def _checksum_ok(ent: Dict[str, Any]) -> bool:
+        """Verify the per-entry payload checksum when present.  Entries
+        written before the checksum existed carry no ``sum`` field and pass
+        (back-compat: schema is unchanged — the payload layout did not)."""
+        want = ent.get("sum")
+        if want is None:
+            return True
+        return want == keying.digest_of(ent.get("payload"))
+
     # ----------------------------------------------------------- get/put
     def get(self, key: str) -> Optional[Dict[str, Any]]:
         if not self.enabled:
@@ -118,18 +153,22 @@ class PlanCacheStore:
         if path.is_file():
             try:
                 ent = json.loads(path.read_text())
-            except (json.JSONDecodeError, OSError):
-                self.stats.misses += 1
-                metrics.inc("plancache_get_total", result="miss")
-                return None
-            if ent.get("schema") != keying.SCHEMA_VERSION:
-                self.stats.misses += 1
-                metrics.inc("plancache_get_total", result="miss")
-                return None
-            self._remember(key, ent)
-            self.stats.hits_disk += 1
-            metrics.inc("plancache_get_total", result="hit_disk")
-            return ent
+            except json.JSONDecodeError:
+                self.quarantine(key, "decode")
+                ent = None
+            except OSError:
+                metrics.inc("plancache_io_errors_total", op="get")
+                ent = None
+            if ent is not None and ent.get("schema") != keying.SCHEMA_VERSION:
+                ent = None           # stale schema: a plain miss, not corrupt
+            if ent is not None and not self._checksum_ok(ent):
+                self.quarantine(key, "checksum")
+                ent = None
+            if ent is not None:
+                self._remember(key, ent)
+                self.stats.hits_disk += 1
+                metrics.inc("plancache_get_total", result="hit_disk")
+                return ent
         self.stats.misses += 1
         metrics.inc("plancache_get_total", result="miss")
         return None
@@ -142,6 +181,7 @@ class PlanCacheStore:
             return None
         ent = {"key": key, "schema": keying.SCHEMA_VERSION,
                "created": time.time(),
+               "sum": keying.digest_of(payload),
                "meta": meta or {}, "payload": payload}
         self._remember(key, ent)
         try:
@@ -184,9 +224,18 @@ class PlanCacheStore:
             return None
         try:
             ent = json.loads(path.read_text())
-        except (json.JSONDecodeError, OSError):
+        except json.JSONDecodeError:
+            self.quarantine(key, "decode")
             return None
-        return ent if ent.get("schema") == keying.SCHEMA_VERSION else None
+        except OSError:
+            metrics.inc("plancache_io_errors_total", op="read")
+            return None
+        if ent.get("schema") != keying.SCHEMA_VERSION:
+            return None
+        if not self._checksum_ok(ent):
+            self.quarantine(key, "checksum")
+            return None
+        return ent
 
     def _remember(self, key: str, ent: Dict[str, Any]) -> None:
         self._mem[key] = ent
@@ -213,7 +262,14 @@ class PlanCacheStore:
                 continue
             try:
                 yield json.loads(path.read_text())
-            except (json.JSONDecodeError, OSError):
+            except json.JSONDecodeError:
+                # self-healing: the corrupt file moves out of the cache dir
+                # on first encounter, so scans don't re-count it forever
+                self._mem.pop(path.stem, None)
+                self._quarantine_path(path, "decode")
+                continue
+            except OSError:
+                metrics.inc("plancache_io_errors_total", op="scan")
                 continue
 
     def n_entries(self) -> int:
@@ -242,18 +298,43 @@ class PlanCacheStore:
         the same hardware whose shape vector is closest in log-space."""
         if not self.enabled:
             return None
-        best_key, best_d = None, float("inf")
+        ranked = self._ranked_neighbors(template, hw, shape)
+        return self._read(ranked[0][1]) if ranked else None
+
+    def nearest_k(self, template: str, hw: str, shape: Sequence[int],
+                  k: int = 3) -> List[Dict[str, Any]]:
+        """The ``k`` closest same-template/same-hw entries, nearest first.
+        Deterministic: ties in log-distance break on the entry key.  The
+        plan service's shape-family rung walks this list so one corrupt or
+        uncertifiable neighbor doesn't exhaust the rung."""
+        if not self.enabled:
+            return []
+        out: List[Dict[str, Any]] = []
+        for _, key in self._ranked_neighbors(template, hw, shape)[:max(0, k)]:
+            ent = self._read(key)
+            if ent is not None:
+                out.append(ent)
+        return out
+
+    def _ranked_neighbors(self, template: str, hw: str,
+                          shape: Sequence[int]) -> List[Tuple[float, str]]:
         shape = [max(1, int(s)) for s in shape]
+        ranked: List[Tuple[float, str]] = []
         for key, meta in self._meta_index():
+            if not key:
+                continue             # unreadable/legacy entry: no key to load
             if meta.get("template") != template or meta.get("hw") != hw:
                 continue
             cand = meta.get("shape")
             if not isinstance(cand, list) or len(cand) != len(shape):
                 continue
-            d = _log_distance(shape, cand)
-            if d < best_d:
-                best_key, best_d = key, d
-        return self._read(best_key) if best_key else None
+            try:
+                d = _log_distance(shape, cand)
+            except (TypeError, ValueError):
+                continue
+            ranked.append((d, key))
+        ranked.sort()
+        return ranked
 
     # ----------------------------------------------------------- pruning
     def prune(self, *, max_entries: Optional[int] = None,
@@ -318,6 +399,9 @@ class PlanCacheStore:
             # pending so a later flush retries it
             self._flushed = CacheStats(**snapshot)
         except OSError:
+            # counted, not silent: the delta stays pending for a retry and
+            # the miss shows up in metrics instead of vanishing
+            metrics.inc("plancache_io_errors_total", op="stats_flush")
             cum = self.cumulative_stats()
             for k, v in delta.items():
                 cum[k] = cum.get(k, 0) + v
@@ -329,7 +413,13 @@ class PlanCacheStore:
             try:
                 return {k: int(v) for k, v in
                         json.loads(path.read_text()).items()}
-            except (json.JSONDecodeError, OSError, ValueError):
+            except (json.JSONDecodeError, ValueError):
+                # a torn stats file resets the cumulative counters; move it
+                # aside so the next flush starts a clean one
+                self._quarantine_path(path, "stats_decode")
+                return {}
+            except OSError:
+                metrics.inc("plancache_io_errors_total", op="stats_read")
                 return {}
         return {}
 

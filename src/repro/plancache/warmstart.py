@@ -30,11 +30,18 @@ def tile_distance(program: TileProgram,
                   hint_tiles: Mapping[str, Sequence[int]]) -> float:
     """Log-space distance between a candidate program's tile shapes and the
     hinted winner's, summed over the tensors they share."""
+    getter = getattr(hint_tiles, "get", None)
+    if getter is None:               # corrupt meta (list, scalar, ...)
+        return float("inf")
     d = 0.0
     matched = 0
     for name, tile in tile_signature(program).items():
-        hint = hint_tiles.get(name)
-        if hint is None or len(hint) != len(tile):
+        hint = getter(name)
+        if not isinstance(hint, (list, tuple)) or len(hint) != len(tile):
+            continue
+        try:
+            hint = [int(h) for h in hint]
+        except (TypeError, ValueError):
             continue
         matched += 1
         for x, y in zip(tile, hint):
@@ -46,11 +53,15 @@ def order_programs(programs: Sequence[TileProgram],
                    hint_tiles: Optional[Mapping[str, Sequence[int]]]
                    ) -> List[TileProgram]:
     """Stable-sort candidate programs by proximity to the hinted tiles.
-    With no usable hint the original order is preserved."""
+    With no usable hint — ``None``, empty, a corrupt non-mapping, zero or
+    one candidates — the original order is preserved and nothing raises."""
     programs = list(programs)
-    if not hint_tiles:
+    if len(programs) < 2 or not hint_tiles:
         return programs
-    return sorted(programs, key=lambda p: tile_distance(p, hint_tiles))
+    try:
+        return sorted(programs, key=lambda p: tile_distance(p, hint_tiles))
+    except Exception:  # noqa: BLE001 — ordering is a hint, never a failure
+        return programs
 
 
 def warm_order_from_store(store, template: str, hw_digest: str,
@@ -65,12 +76,17 @@ def warm_order_from_store(store, template: str, hw_digest: str,
     programs = list(programs)
     if not programs:
         return programs
-    hint = store.nearest(template, hw_digest, shape)
+    try:
+        hint = store.nearest(template, hw_digest, shape)
+    except Exception:  # noqa: BLE001 — an empty/corrupt store is not an error
+        return programs
     if hint is None:
         return programs
-    tiles = hint.get("meta", {}).get("tiles") or \
-        hint.get("payload", {}).get("tiles")
-    if not tiles:
+    meta = hint.get("meta")
+    payload = hint.get("payload")
+    tiles = (meta.get("tiles") if isinstance(meta, Mapping) else None) or \
+        (payload.get("tiles") if isinstance(payload, Mapping) else None)
+    if not isinstance(tiles, Mapping) or not tiles:
         return programs
     store.note_warm_start()
     return order_programs(programs, tiles)

@@ -268,7 +268,8 @@ class ReplanOrchestrator:
                  = None,
                  cache: Optional[Any] = None,
                  budget: Optional[SearchBudget] = None,
-                 latency_budget_s: Optional[float] = 30.0) -> None:
+                 latency_budget_s: Optional[float] = 30.0,
+                 service: Optional[Any] = None) -> None:
         self.healthy_hw = hw
         self.current_hw = hw
         self.programs = list(programs)
@@ -278,6 +279,9 @@ class ReplanOrchestrator:
         self.cache = cache
         self.budget = budget
         self.latency_budget_s = latency_budget_s
+        # a subscribed PlanService: fault events invalidate its breaker /
+        # search-time state so degraded-key requests walk a fresh ladder
+        self.service = service
         self.outcomes: List[ReplanOutcome] = []
         self._handled_hosts: set = set()
 
@@ -325,4 +329,6 @@ class ReplanOrchestrator:
                             latency_budget_s=self.latency_budget_s,
                             cause=cause)
         self.outcomes.append(out)
+        if self.service is not None:
+            self.service.note_fault(out)
         return out

@@ -1,0 +1,301 @@
+"""Plan-service tests: the deadline ladder (exact hit, certified family
+neighbor, bounded search, guaranteed fallback), the never-raise contract,
+coalescing, admission shedding, the circuit breaker, background completion,
+and the plancache integrity hardening (checksums, quarantine, validator,
+warm-start robustness, stats-file corruption)."""
+import dataclasses
+import json
+import threading
+
+import pytest
+
+from repro import plancache
+from repro.core import SearchBudget, get_hw, matmul_program, plan_kernel_multi
+from repro.core.planner import PLAN_CALLS
+from repro.plancache import PlanCache, QUARANTINE_DIR, keying, warmstart
+from repro.plancache.serialize import plan_to_dict
+from repro.plancache.validate import validate_plan
+from repro.planservice import PlanRequest, PlanService, default_regret
+
+BUDGET = SearchBudget(top_k=2, max_mappings=16, max_plans_per_mapping=8,
+                      max_candidates=400)
+HW = "wormhole_1x8"
+
+
+@pytest.fixture()
+def store(tmp_path, monkeypatch):
+    monkeypatch.setenv(plancache.ENV_DIR, str(tmp_path))
+    monkeypatch.delenv(plancache.ENV_TOGGLE, raising=False)
+    plancache.reset_store()
+    yield plancache.get_store()
+    plancache.reset_store()
+
+
+def _candidates(M=256, N=256, K=256):
+    return [matmul_program(M, N, K, bm=b, bn=b, bk=b) for b in (32, 64)]
+
+
+# ------------------------------------------------------------ the ladder
+def test_full_budget_is_bit_identical_then_cached(store):
+    """No deadline => the service is a pass-through to plan_kernel_multi
+    (acceptance criterion), and the result lands under the exact key so
+    the repeat request is a rung-1 hit."""
+    hw = get_hw(HW)
+    progs = _candidates()
+    svc = PlanService(PlanCache(store))
+    req = PlanRequest(progs, hw, budget=BUDGET, budget_ms=float("inf"),
+                      background=False)
+    resp = svc.resolve(req)
+    assert resp.ok and resp.rung == "search" and resp.outcome == "ok"
+    direct = plan_kernel_multi(progs, hw, budget=BUDGET, cache=None)
+    assert plan_to_dict(resp.plan) == plan_to_dict(direct.best.plan)
+    assert resp.result.best.final_s == direct.best.final_s
+    resp2 = svc.resolve(req)
+    assert resp2.ok and resp2.rung == "cache" and resp2.outcome == "ok"
+    assert plan_to_dict(resp2.plan) == plan_to_dict(direct.best.plan)
+
+
+def test_zero_deadline_returns_generic_fallback(store):
+    """budget_ms=0 leaves no time for any rung but the guaranteed one:
+    still a valid runnable plan, still no exception."""
+    svc = PlanService(PlanCache(store))
+    resp = svc.resolve(PlanRequest(_candidates(), get_hw(HW), budget=BUDGET,
+                                   budget_ms=0.0, background=False))
+    assert resp.ok and resp.rung == "fallback" and resp.outcome == "deadline"
+    assert validate_plan(resp.plan, resp.hw) == []
+
+
+def test_empty_program_list_is_infeasible_not_an_exception(store):
+    svc = PlanService(PlanCache(store))
+    resp = svc.resolve(PlanRequest([], get_hw(HW), budget=BUDGET,
+                                   budget_ms=5.0, background=False))
+    assert not resp.ok and resp.outcome == "infeasible"
+    assert resp.rung == "fallback" and resp.plan is None
+
+
+def test_shed_to_fallback_when_no_search_slots(store):
+    """max_concurrent_searches=0 models total overload: every request
+    sheds to the fallback rung instead of queueing."""
+    svc = PlanService(PlanCache(store), max_concurrent_searches=0)
+    resp = svc.resolve(PlanRequest(_candidates(), get_hw(HW), budget=BUDGET,
+                                   budget_ms=float("inf"), background=False))
+    assert resp.ok and resp.rung == "fallback" and resp.outcome == "shed"
+    assert resp.background is False
+    assert validate_plan(resp.plan, resp.hw) == []
+
+
+def test_family_rung_certifies_cached_neighbor(store):
+    """Seed the store with a 512-cubed GEMM plan, then ask for a GEMM of
+    a nearby shape with searching disabled: the service must answer from
+    the shape-family rung, and the certified plan must be within the
+    regret bound of the exact plan's simulated cost (acceptance
+    criterion, via the admissible program floor)."""
+    hw = get_hw(HW)
+    cache = PlanCache(store)
+    plan_kernel_multi(_candidates(512, 512, 512), hw, budget=BUDGET,
+                      cache=cache)
+    req_progs = [matmul_program(640, 512, 512, bm=64, bn=64, bk=64)]
+    svc = PlanService(cache, max_concurrent_searches=0)
+    resp = svc.resolve(PlanRequest(req_progs, hw, budget=BUDGET,
+                                   budget_ms=float("inf"), background=False))
+    assert resp.ok and resp.rung == "family" and resp.outcome == "ok"
+    assert validate_plan(resp.plan, resp.hw) == []
+    assert resp.plan.program == req_progs[0]        # retargeted, not reused
+    exact = plan_kernel_multi(req_progs, hw, budget=BUDGET, cache=None)
+    assert resp.result.best.final_s \
+        <= default_regret() * exact.best.final_s
+
+
+def test_coalesced_concurrent_requests_do_exactly_one_search(store):
+    hw = get_hw(HW)
+    progs = _candidates()
+    svc = PlanService(PlanCache(store), max_concurrent_searches=4)
+    req = PlanRequest(progs, hw, budget=BUDGET, budget_ms=float("inf"),
+                      background=False)
+    n = 4
+    before = PLAN_CALLS["plan_kernel_multi"]
+    barrier = threading.Barrier(n)
+    out = [None] * n
+
+    def worker(i):
+        barrier.wait()
+        out[i] = svc.resolve(req)
+
+    threads = [threading.Thread(target=worker, args=(i,)) for i in range(n)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert PLAN_CALLS["plan_kernel_multi"] - before == 1
+    assert all(r is not None and r.ok for r in out)
+    assert sum(r.outcome == "coalesced" for r in out) == n - 1
+    best = {plan_to_dict(r.plan) == plan_to_dict(out[0].plan) for r in out}
+    assert best == {True}                            # one answer for all
+
+
+def test_background_completion_promotes_to_exact_hit(store):
+    """A deadline-forced fallback schedules the full search off-path; once
+    drained, the identical request is a rung-1 exact hit (acceptance
+    criterion)."""
+    hw = get_hw(HW)
+    progs = _candidates()
+    svc = PlanService(PlanCache(store))
+    r1 = svc.resolve(PlanRequest(progs, hw, budget=BUDGET, budget_ms=0.0,
+                                 background=True))
+    assert r1.ok and r1.rung == "fallback" and r1.background
+    assert svc.drain(timeout_s=300.0)
+    r2 = svc.resolve(PlanRequest(progs, hw, budget=BUDGET,
+                                 budget_ms=float("inf"), background=False))
+    assert r2.ok and r2.rung == "cache"
+
+
+def test_breaker_opens_after_misses_and_recovers_half_open(store):
+    """Two synthetic deadline misses open the (template, hw) breaker; while
+    open the search rung is skipped outright; after the cooldown one
+    half-open trial runs and, on success, closes it again."""
+    hw = get_hw(HW)
+    progs = _candidates()
+    good = plan_kernel_multi(progs, hw, budget=BUDGET, cache=None)
+
+    class Clock:
+        def __init__(self):
+            self.t = 0.0
+
+        def __call__(self):
+            return self.t
+
+    clk = Clock()
+    cache = PlanCache(store)
+    svc = PlanService(cache, breaker_threshold=2, breaker_cooldown_s=10.0,
+                      clock=clk)
+    mode = {"slow": True}
+
+    def fake_search(request, budget, remaining_s):
+        if mode["slow"]:
+            clk.t += 1.0                 # blow way past a 10ms deadline
+            raise RuntimeError("synthetic slow search")
+        return good, False, hw
+
+    svc._do_search = fake_search
+    req = PlanRequest(progs, hw, budget=BUDGET, budget_ms=10.0,
+                      background=False)
+    r1 = svc.resolve(req)
+    assert r1.ok and r1.rung == "fallback" and r1.outcome == "deadline"
+    svc._ewma.clear()   # the EWMA would (correctly) pre-skip the slow rung
+    r2 = svc.resolve(req)
+    assert r2.rung == "fallback"
+    svc._ewma.clear()
+    r3 = svc.resolve(req)
+    assert r3.ok and r3.outcome == "breaker_open"    # skipped, not run
+    (bkey,) = svc._breakers
+    assert svc._breakers[bkey].state == "open"
+    clk.t += 11.0                        # past the cooldown
+    mode["slow"] = False
+    svc._ewma.clear()
+    r4 = svc.resolve(req)
+    assert r4.ok and r4.rung == "search" and r4.outcome == "ok"
+    assert svc._breakers[bkey].state == "closed"
+
+
+# ---------------------------------------------------- integrity hardening
+def test_corrupt_entry_is_quarantined_and_request_still_succeeds(store):
+    hw = get_hw(HW)
+    progs = _candidates()
+    svc = PlanService(PlanCache(store))
+    req = PlanRequest(progs, hw, budget=BUDGET, budget_ms=float("inf"),
+                      background=False)
+    r1 = svc.resolve(req)
+    assert r1.rung == "search"
+    path = store._path(r1.key)
+    ent = json.loads(path.read_text())
+    ent["payload"]["tampered"] = True    # payload no longer matches "sum"
+    path.write_text(json.dumps(ent))
+    store.clear_memory()
+    corrupt0 = store.stats.corrupt
+    r2 = svc.resolve(req)
+    assert r2.ok
+    assert r2.rung != "cache"            # the tampered entry was not served
+    assert store.stats.corrupt == corrupt0 + 1
+    qdir = store.root / QUARANTINE_DIR
+    assert qdir.is_dir() and any(qdir.iterdir())
+
+
+def test_truncated_entry_quarantined_as_decode(store):
+    store.put("feedaa", {"x": 1}, {"template": "t", "hw": "h", "shape": [1]})
+    path = store._path("feedaa")
+    path.write_text("{truncated json")
+    store.clear_memory()
+    corrupt0 = store.stats.corrupt
+    assert store.get("feedaa") is None
+    assert store.stats.corrupt == corrupt0 + 1
+    assert not path.exists()             # moved to quarantine, self-healing
+    assert any((store.root / QUARANTINE_DIR).iterdir())
+
+
+def test_validate_plan_accepts_real_and_rejects_tampered(store):
+    hw = get_hw(HW)
+    res = plan_kernel_multi(_candidates(), hw, budget=BUDGET, cache=None)
+    plan = res.best.plan
+    assert validate_plan(plan, hw) == []
+    bind = dataclasses.replace(plan.mapping.spatial[0], hw_size=4096)
+    bad_map = dataclasses.replace(
+        plan.mapping, spatial=(bind,) + tuple(plan.mapping.spatial[1:]))
+    bad = dataclasses.replace(plan, mapping=bad_map)
+    problems = validate_plan(bad, hw)
+    assert problems and any("exceeds" in p or "mesh" in p for p in problems)
+
+
+def test_corrupt_stats_file_is_counted_and_reset(store):
+    store.put("k1", {"v": 1}, {})
+    store.flush_stats()
+    stats_path = store.root / plancache.store.STATS_FILE
+    assert stats_path.exists()
+    stats_path.write_text("{broken")
+    corrupt0 = store.stats.corrupt
+    assert store.cumulative_stats() == {}
+    assert store.stats.corrupt == corrupt0 + 1
+    assert not stats_path.exists()
+
+
+def test_nearest_k_is_deterministic_and_nearest_first(store):
+    meta = lambda shape: {"template": "t", "hw": "h", "shape": shape}  # noqa: E731
+    store.put("k256", {"v": 1}, meta([256, 256]))
+    store.put("k512", {"v": 2}, meta([512, 512]))
+    store.put("k1024", {"v": 3}, meta([1024, 1024]))
+    got = [e["key"] for e in store.nearest_k("t", "h", [300, 300], k=3)]
+    assert got[0] == "k256" and set(got) == {"k256", "k512", "k1024"}
+    assert got == [e["key"] for e in store.nearest_k("t", "h", [300, 300])]
+    assert store.nearest_k("other", "h", [1, 1]) == []
+
+
+# ------------------------------------------------------ warm-start repair
+def test_order_programs_empty_single_and_no_hint():
+    progs = _candidates()
+    assert warmstart.order_programs([], None) == []
+    assert warmstart.order_programs([progs[0]], {"A": [1, 1, 1]}) \
+        == [progs[0]]
+    assert warmstart.order_programs(progs, None) == progs
+    assert warmstart.order_programs(progs, {}) == progs
+
+
+def test_order_programs_survives_corrupt_hints():
+    progs = _candidates()
+    assert warmstart.order_programs(progs, ["not", "a", "dict"]) == progs
+    assert warmstart.order_programs(progs, {"A": "scalar"}) == progs
+    assert warmstart.order_programs(progs, {"A": [1, "x"]}) == progs
+
+
+def test_warm_order_from_store_empty_and_corrupt_tiles(store):
+    hw = get_hw(HW)
+    progs = _candidates()
+    template = keying.template_signature(progs[0])
+    hwd = keying.hw_digest(hw)
+    shape = keying.shape_vector(progs[0])
+    # empty store: original order, no exception
+    assert warmstart.warm_order_from_store(store, template, hwd, shape,
+                                           progs) == progs
+    # an entry whose tiles hint is a list (corrupt) must not break ordering
+    store.put("bad", {"x": 1}, {"template": template, "hw": hwd,
+                                "shape": shape, "tiles": [64, 64, 64]})
+    assert warmstart.warm_order_from_store(store, template, hwd, shape,
+                                           progs) == progs
