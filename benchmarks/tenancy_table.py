@@ -1,0 +1,145 @@
+"""Multi-tenant partitioning benchmark (DESIGN_TENANCY.md).
+
+Two questions, answered per k in {2, 4} tenants on wormhole_8x8:
+
+* **Isolation overhead** — each tenant's simulated time on its partition
+  vs the same kernel planned solo on the whole mesh, *normalized by core
+  share*: ``overhead = (t_part * part_cores) / (t_solo * total_cores)``.
+  1.0 means the tenant runs exactly at its proportional share of the
+  fabric; the acceptance bar is geomean <= 1.5x (partition-edge DRAM
+  attribution and lost NoC planes are real costs, not noise).
+* **Re-plan containment** — a seeded single-core kill per layout: blast
+  radius must be 1 (only the owning tenant re-plans), every other
+  tenant's plan digest byte-unchanged, resolved within the ladder budget.
+
+Tenant workloads mix the Fig-5 GEMM and Fig-7 FlashAttention suites so
+partitions host heterogeneous neighbors, the case isolation exists for.
+"""
+from __future__ import annotations
+
+import random
+
+from repro.core import (SearchBudget, block_shape_candidates,
+                        flash_attention_program, get_hw, matmul_program,
+                        plan_kernel_multi)
+from repro.planservice import PlanService
+from repro.tenancy import (IsolationValidator, MeshPartitioner,
+                           TenantRuntime, TenantSpec)
+
+from .common import geomean, row
+
+HW_NAME = "wormhole_8x8"
+BUDGET = SearchBudget(top_k=3, max_mappings=32, max_plans_per_mapping=16,
+                      max_candidates=1000)
+SEED = 20260807
+
+
+def _gemm_tenant(name: str, M: int, N: int, K: int, qos: str) -> TenantSpec:
+    progs = [matmul_program(M, N, K, bm=bm, bn=bn, bk=bk)
+             for bm, bn, bk in block_shape_candidates(M, N, K)][:8]
+    return TenantSpec(name, progs, qos=qos)
+
+
+def _flash_tenant(name: str, bh: int, seq: int, head_dim: int,
+                  qos: str) -> TenantSpec:
+    progs = [flash_attention_program(bh, seq, seq, head_dim, bq=bq, bkv=bkv)
+             for bq in (32, 64) for bkv in (32, 64)]
+    return TenantSpec(name, progs, qos=qos)
+
+
+def tenant_table(k: int):
+    """The k-tenant mix: alternating gemm/flash cells, alternating QoS."""
+    cells = [
+        lambda q: _gemm_tenant("gemm_1k", 1024, 1024, 1024, q),
+        lambda q: _flash_tenant("flash_s1k", 64, 1024, 64, q),
+        lambda q: _gemm_tenant("gemm_wide", 512, 2048, 1024, q),
+        lambda q: _flash_tenant("flash_s2k", 32, 2048, 64, q),
+    ]
+    out = []
+    for i in range(k):
+        qos = "guaranteed" if i % 2 == 0 else "best_effort"
+        t = cells[i % len(cells)](qos)
+        out.append(TenantSpec(f"{t.name}_{i}", t.programs, qos=qos,
+                              weight=t.weight))
+    return out
+
+
+def sweep(cache=None, ks=(2, 4)):
+    hw = get_hw(HW_NAME)
+    service = PlanService(cache=cache) if cache is not None \
+        else PlanService()
+    lines = []
+    summary = {}
+    solo_memo = {}
+    for k in ks:
+        tenants = tenant_table(k)
+        partitioner = MeshPartitioner(plan_layouts=2)
+        plan = partitioner.plan(hw, tenants, service=service, budget=BUDGET,
+                                budget_ms=float("inf"))
+        bad = IsolationValidator().validate(plan)
+        if bad:
+            raise RuntimeError(f"k={k}: isolation validation failed: {bad}")
+
+        overheads = []
+        for p in plan.placements:
+            key = p.tenant.name.rsplit("_", 1)[0]
+            if key not in solo_memo:
+                solo = plan_kernel_multi(list(p.tenant.programs), hw,
+                                         budget=BUDGET,
+                                         cache=service.cache)
+                solo_memo[key] = solo.best.final_s
+            t_solo = solo_memo[key]
+            share = p.rect.n_cells / hw.n_cores
+            overhead = (p.sim_s * share) / t_solo
+            overheads.append(overhead)
+            lines.append(row(
+                f"tenancy/k{k}/{p.tenant.name}", p.sim_s * 1e6,
+                f"part={p.rect.describe()};share={share:.3f};"
+                f"solo_us={t_solo * 1e6:.2f};overhead={overhead:.3f};"
+                f"qos={p.tenant.qos};rung={p.rung}"))
+        g = geomean(overheads)
+
+        # ---- containment under a seeded kill --------------------------
+        rng = random.Random(SEED + k)
+        victim = plan.placements[rng.randrange(len(plan.placements))]
+        cells = sorted(victim.rect.cells())
+        cell = cells[rng.randrange(len(cells))]
+        runtime = TenantRuntime(plan, service=service, cache=service.cache,
+                                budget=BUDGET, partitioner=partitioner,
+                                latency_budget_s=60.0)
+        ev = runtime.kill_core(cell)
+        contained = ev.contained() and ev.blast_radius <= 1
+        lines.append(row(
+            f"tenancy/k{k}/containment", ev.seconds * 1e6,
+            f"kill={cell};owner={ev.owner};rung={ev.rung};"
+            f"blast_radius={ev.blast_radius};contained={contained};"
+            f"within_budget={ev.within_budget}"))
+        lines.append(row(
+            f"tenancy/k{k}/geomean", 0.0,
+            f"isolation_overhead={g:.3f};layouts={plan.n_layouts};"
+            f"makespan_us={plan.layout_score * 1e6:.2f}"))
+        summary[k] = (g, contained, ev)
+    return lines, summary
+
+
+def main(cache=None, ks=(2, 4)):
+    lines, summary = sweep(cache=cache, ks=ks)
+    for ln in lines:
+        print(ln)
+    failed = []
+    for k, (g, contained, ev) in sorted(summary.items()):
+        print(f"# k={k}: isolation overhead geomean {g:.3f}x "
+              f"(bar <= 1.5x), containment "
+              f"{'ok' if contained else 'VIOLATED'} "
+              f"(rung={ev.rung}, blast={ev.blast_radius})")
+        if g > 1.5:
+            failed.append(f"k={k} overhead {g:.3f} > 1.5")
+        if not contained:
+            failed.append(f"k={k} containment violated")
+    if failed:
+        raise SystemExit("tenancy acceptance failed: " + "; ".join(failed))
+    return summary
+
+
+if __name__ == "__main__":
+    main()

@@ -21,6 +21,79 @@ from repro.models import build_model
 from repro.planservice import PlanService
 
 
+def _run_tenants(args) -> None:
+    """Multi-tenant serving mode (``--tenants k``): plan k concurrent
+    kernel tenants onto disjoint partitions of one fabric through the
+    tenancy layer, optionally inject a core kill, and *assert* the
+    containment contract — the CI tenancy-smoke lane runs exactly this.
+    """
+    from repro.core import (block_shape_candidates, get_hw, matmul_program)
+    from repro.core.planner import SearchBudget
+    from repro.tenancy import (IsolationValidator, MeshPartitioner,
+                               TenantAdmission, TenantRuntime, TenantSpec)
+
+    hw = get_hw(args.tenant_hw)
+    shapes = [(256, 256, 256), (128, 512, 256), (512, 128, 256),
+              (256, 512, 128)]
+    tenants = []
+    for i in range(args.tenants):
+        m, n, k = shapes[i % len(shapes)]
+        progs = [matmul_program(m, n, k, bm=bm, bn=bn, bk=bk)
+                 for bm, bn, bk in block_shape_candidates(m, n, k)][:6]
+        qos = "guaranteed" if i % 2 == 0 else "best_effort"
+        tenants.append(TenantSpec(f"tenant{i}", progs, qos=qos))
+
+    service = PlanService()
+    budget = SearchBudget(top_k=3, max_mappings=16,
+                          max_plans_per_mapping=10, max_candidates=500)
+    admission = TenantAdmission()
+    partitioner = MeshPartitioner(plan_layouts=2)
+    # admission gates each tenant's resolve deadline; the joint search
+    # receives the per-tenant outcome as its budget override
+    tenant_ms = {}
+    for t in tenants:
+        with admission.admit(t, args.plan_budget_ms) as ms:
+            if ms is not None:
+                tenant_ms[t.name] = ms
+    plan = partitioner.plan(hw, tenants, service=service, budget=budget,
+                            budget_ms=float("inf"),
+                            tenant_budget_ms=tenant_ms or None)
+    bad = IsolationValidator().validate(plan)
+    if bad:
+        raise SystemExit(f"[serve] isolation validation failed: {bad}")
+    print(f"[serve] {args.tenants} tenants on {hw.name}: "
+          f"{plan.describe()}")
+
+    if args.tenant_kill:
+        core = tuple(int(v) for v in args.tenant_kill.split(","))
+        runtime = TenantRuntime(plan, service=service, cache=service.cache,
+                                budget=budget, partitioner=partitioner)
+        ev = runtime.kill_core(core)
+        print(f"[serve] core_kill {core}: owner={ev.owner} rung={ev.rung} "
+              f"blast_radius={ev.blast_radius} "
+              f"seconds={ev.seconds * 1e3:.1f}ms "
+              f"within_budget={ev.within_budget}")
+        for line in ev.log:
+            print(f"[serve]   {line}")
+        if not ev.contained():
+            raise SystemExit("[serve] CONTAINMENT VIOLATED: an untouched "
+                             "tenant's plan digest changed")
+        if ev.owner is not None and not ev.within_budget:
+            raise SystemExit("[serve] deadline exceeded: the degraded "
+                             "tenant did not resolve within its budget")
+        print(f"[serve] containment ok: untouched={list(ev.untouched)} "
+              f"digests unchanged")
+    plancache.get_store().flush_stats()
+    counts = metrics.counter_totals(metrics.snapshot())
+    if counts:
+        print("[serve] metrics: " + " ".join(
+            f"{k}={v:g}" for k, v in sorted(counts.items())
+            if k.startswith(("tenancy", "replan", "planservice"))))
+    dumped = metrics.dump()              # honors REPRO_METRICS=<path>
+    if dumped:
+        print(f"[serve] metrics snapshot written to {dumped}")
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2.5-3b")
@@ -31,7 +104,20 @@ def main(argv=None) -> None:
     ap.add_argument("--plan-budget-ms", type=float, default=None,
                     help="plan-service deadline (default "
                          "$REPRO_PLAN_DEADLINE_MS / 10ms)")
+    ap.add_argument("--tenants", type=int, default=0,
+                    help="multi-tenant mode: partition the fabric for k "
+                         "concurrent kernel tenants instead of serving "
+                         "one model")
+    ap.add_argument("--tenant-hw", default="wormhole_8x8",
+                    help="fabric preset for --tenants mode")
+    ap.add_argument("--tenant-kill", default="",
+                    help="inject a core kill at mesh coords 'R,C' after "
+                         "partitioning and assert containment")
     args = ap.parse_args(argv)
+
+    if args.tenants > 0:
+        _run_tenants(args)
+        return
 
     cfg = get_config(args.arch)
     if args.reduced:

@@ -343,10 +343,24 @@ def hist_quantile(series: Mapping[str, Any], q: float) -> Optional[float]:
 
 def dump(path: Optional[str] = None) -> Optional[str]:
     """Write the snapshot as JSON to ``path`` or ``$REPRO_METRICS``.
-    Returns the path written, or None when no destination is known."""
+    Returns the path written, or None when no destination is known.
+
+    Atomic (tmp + rename, like the plancache's stats writes): launchers
+    dump on exit and are routinely SIGKILLed by orchestrators, and a
+    torn half-JSON is worse for the scraper than a stale complete one.
+    """
     path = path or os.environ.get(METRICS_ENV, "").strip() or None
     if not path:
         return None
-    with open(path, "w") as f:
-        json.dump(snapshot(), f, indent=2, sort_keys=True)
+    tmp = f"{path}.{os.getpid()}.tmp"
+    try:
+        with open(tmp, "w") as f:
+            json.dump(snapshot(), f, indent=2, sort_keys=True)
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            try:
+                os.remove(tmp)
+            except OSError:
+                pass
     return path

@@ -26,6 +26,19 @@ from repro.core.hw import HardwareModel
 from repro.core.plan import DataflowPlan
 
 
+def dram_residency_bytes(plan: DataflowPlan) -> int:
+    """The plan's resident DRAM footprint: total bytes of the distinct
+    global tensors it loads or stores.  Per-plan this is bounded by
+    ``hw.global_mem`` trivially on today's workloads; the multi-tenant
+    isolation validator sums it across co-located tenants, whose tensors
+    share one physical DRAM — the joint fit is the constraint a
+    single-tenant sanitizer can never see."""
+    seen = {}
+    for acc in plan.program.loads + plan.program.stores:
+        seen[acc.tensor.name] = acc.tensor.bytes
+    return sum(seen.values())
+
+
 def validate_plan(plan: DataflowPlan, hw: HardwareModel) -> List[str]:
     """Return the list of structural violations (empty = plan is servable).
 

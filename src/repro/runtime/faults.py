@@ -207,12 +207,32 @@ def parse_faults(text: str) -> FaultSchedule:
     * ``crash``             — crash one search-pool worker
 
     Example: ``REPRO_FAULTS="core:3,5;link:noc_h:0.5@2"``.
+
+    Rejected with an actionable error (both used to be accepted and
+    either failed much later or silently composed):
+
+    * link factors outside ``(0, 1]`` — a factor of 0 models a *cut*
+      link, which the bandwidth model cannot represent (use ``core:``
+      kills to remove capacity); > 1 is a speed-up, not a fault;
+    * duplicate items — killing the same core twice, or repeating any
+      item verbatim, is almost always a typo'd schedule; link
+      degradations compose *multiplicatively*, so a pasted duplicate
+      would silently halve the bandwidth again.
     """
     faults: List[FaultSpec] = []
+    seen_cores: dict = {}
+    seen_items: dict = {}
     for raw in text.split(";"):
         item = raw.strip()
         if not item:
             continue
+        first = seen_items.setdefault(item, raw)
+        if first is not raw:
+            raise ValueError(
+                f"duplicate fault item {raw!r}: already specified; link "
+                f"factors compose multiplicatively, so repeating an item "
+                f"changes the schedule — drop the duplicate or change its "
+                f"@step")
         step = 0
         if "@" in item:
             item, _, s = item.rpartition("@")
@@ -222,10 +242,21 @@ def parse_faults(text: str) -> FaultSchedule:
         try:
             if tag == "core":
                 core = tuple(int(v) for v in parts[1].split(","))
+                prev = seen_cores.setdefault(core, raw)
+                if prev is not raw:
+                    raise ValueError(
+                        f"core {core} already killed by {prev!r}; a core "
+                        f"can only die once — remove one of the items")
                 faults.append(FaultSpec("core_kill", step, core=core))
             elif tag == "link":
+                factor = float(parts[2])
+                if not 0.0 < factor <= 1.0:
+                    raise ValueError(
+                        f"link factor {factor:g} must be in (0, 1] — "
+                        f"1.0 is nominal bandwidth, 0 would be a cut "
+                        f"link (kill the adjacent cores instead)")
                 faults.append(FaultSpec("link_slow", step, link=parts[1],
-                                        factor=float(parts[2])))
+                                        factor=factor))
             elif tag == "straggler":
                 factor = float(parts[2]) if len(parts) > 2 else 3.0
                 faults.append(FaultSpec("host_straggler", step,

@@ -30,7 +30,7 @@ through the PR 6 observability layer.
 from __future__ import annotations
 
 import dataclasses
-import math
+import itertools
 import time
 from dataclasses import dataclass, field, replace
 from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
@@ -107,29 +107,61 @@ def _shrink_axis(hw: HardwareModel, axis: str, new_size: int,
 
 
 def best_submesh(hw: HardwareModel) -> HardwareModel:
-    """The largest healthy logical submesh of a degraded mesh: for each
-    mesh axis, drop every plane containing a disabled core; keep the axis
-    whose cut preserves the most cores (ties: first axis in scaleout
-    order).  Guaranteed feasible — every disabled core sits on a dropped
-    plane — and exact for single-core failures (one row/column lost)."""
+    """The largest healthy logical submesh of a degraded mesh.
+
+    Each disabled core must sit on a dropped plane of *some* axis; the
+    search assigns every fault to an axis and keeps the assignment whose
+    combined cut preserves the most cores.  Single-axis assignments (all
+    faults cut along one axis — the historical behavior) are tried first,
+    so single-core failures and any case where one axis is optimal stay
+    bit-identical (golden-gated); mixed assignments win only strictly.
+    Two faults at (1, 2) and (5, 6) on an 8x8 used to cost two rows
+    (48 cores left); dropping one row *and* one column keeps 7x7 = 49.
+
+    Guaranteed feasible when any assignment leaves every axis at least
+    one plane; the combo enumeration is capped (pure assignments only)
+    for pathological fault counts.
+    """
     if not hw.disabled_cores:
         return hw
-    best: Optional[Tuple[int, str, List[int]]] = None
     mesh = hw.mesh_dims
-    for i, (axis, size) in enumerate(mesh):
-        bad = sorted({c[i] for c in hw.disabled_cores})
-        keep = size - len(bad)
-        if keep < 1:
-            continue
-        remaining = keep * math.prod(s for j, (_, s) in enumerate(mesh)
-                                     if j != i)
-        if best is None or remaining > best[0]:
-            best = (remaining, axis, bad)
+    faults = list(hw.disabled_cores)
+    n_axes = len(mesh)
+
+    def cut_of(assign: Tuple[int, ...]):
+        """(remaining cores, per-axis dropped-plane sets) or None when the
+        assignment empties an axis."""
+        dropped: List[set] = [set() for _ in mesh]
+        for f, a in zip(faults, assign):
+            dropped[a].add(f[a])
+        remaining = 1
+        for i, (_, size) in enumerate(mesh):
+            keep = size - len(dropped[i])
+            if keep < 1:
+                return None
+            remaining *= keep
+        return remaining, dropped
+
+    candidates: List[Tuple[int, ...]] = [(i,) * len(faults)
+                                         for i in range(n_axes)]
+    if n_axes > 1 and len(faults) > 1 and n_axes ** len(faults) <= 256:
+        candidates += [a for a in
+                       itertools.product(range(n_axes), repeat=len(faults))
+                       if len(set(a)) > 1]
+    best: Optional[Tuple[int, List[set]]] = None
+    for assign in candidates:
+        cut = cut_of(assign)
+        if cut is not None and (best is None or cut[0] > best[0]):
+            best = cut
     if best is None:
         raise RuntimeError(f"no healthy submesh of {hw.name}: faults cover "
                            f"every plane of every axis")
-    _, axis, bad = best
-    return _shrink_axis(hw, axis, hw.dim(axis).size - len(bad), bad)
+    sub = hw
+    for i, (axis, size) in enumerate(mesh):
+        bad = sorted(best[1][i])
+        if bad:
+            sub = _shrink_axis(sub, axis, size - len(bad), bad)
+    return sub
 
 
 # --------------------------------------------------------------------------
@@ -269,7 +301,8 @@ class ReplanOrchestrator:
                  cache: Optional[Any] = None,
                  budget: Optional[SearchBudget] = None,
                  latency_budget_s: Optional[float] = 30.0,
-                 service: Optional[Any] = None) -> None:
+                 service: Optional[Any] = None,
+                 tenancy: Optional[Any] = None) -> None:
         self.healthy_hw = hw
         self.current_hw = hw
         self.programs = list(programs)
@@ -282,17 +315,34 @@ class ReplanOrchestrator:
         # a subscribed PlanService: fault events invalidate its breaker /
         # search-time state so degraded-key requests walk a fresh ladder
         self.service = service
+        # a multi-tenant runtime (repro.tenancy.TenantRuntime): fault
+        # events route through its contained per-partition ladder instead
+        # of re-planning the whole fabric, and the orchestrator's methods
+        # return its ContainedReplan events
+        self.tenancy = tenancy
         self.outcomes: List[ReplanOutcome] = []
         self._handled_hosts: set = set()
 
     # ------------------------------------------------------------ faults
     def kill_cores(self, cores: Sequence[Tuple[int, ...]],
-                   cause: str = "core_kill") -> ReplanOutcome:
+                   cause: str = "core_kill") -> Any:
+        if self.tenancy is not None:
+            ev = None
+            for c in cores:
+                ev = self.tenancy.kill_core(c)
+            self.current_hw = self.tenancy.hw
+            return ev
         self.current_hw = self.current_hw.with_faults(disabled_cores=cores)
         return self._replan(cause)
 
     def degrade_links(self, links: Sequence[Tuple[str, float]],
-                      cause: str = "link_slow") -> ReplanOutcome:
+                      cause: str = "link_slow") -> Any:
+        if self.tenancy is not None:
+            ev = None
+            for name, factor in links:
+                ev = self.tenancy.slow_link(name, factor)
+            self.current_hw = self.tenancy.hw
+            return ev
         self.current_hw = self.current_hw.with_faults(degraded_links=links)
         return self._replan(cause)
 

@@ -1,0 +1,463 @@
+"""Multi-tenant mesh partitioning with fault-domain isolation
+(DESIGN_TENANCY.md acceptance).
+
+The load-bearing properties:
+
+* ``submesh()`` geometry: identity pass-through, rebuilt rings, dropped
+  one-plane axes, local fault renumbering, origin-independent digests;
+* partition isolation (property-tested over random disjoint layouts):
+  an in-partition plan resolved through the joint search is **bit-for-bit**
+  the plan of the standalone submesh model;
+* fault containment (property-tested over seeded kills): a core kill
+  re-plans exactly the owning tenant, every other tenant's plan digest
+  unchanged;
+* the escalation ladder: claim-adjacent into the spare strip, global
+  repartition as last resort with best-effort eviction, never guaranteed;
+* the satellites: multi-axis ``best_submesh`` cuts, ``parse_faults``
+  validation, atomic metrics dumps.
+"""
+import json
+import os
+import random
+
+import pytest
+
+from repro import plancache
+from repro.core import (SearchBudget, block_shape_candidates, get_hw,
+                        matmul_program, plan_kernel_multi)
+from repro.core.hw import wormhole
+from repro.plancache import keying
+from repro.plancache.validate import dram_residency_bytes
+from repro.planservice import PlanRequest, PlanService
+from repro.runtime.faults import FaultSpec, parse_faults
+from repro.runtime.replan import ReplanOrchestrator, best_submesh
+from repro.tenancy import (IsolationValidator, MeshPartitioner, Rect,
+                           TenantAdmission, TenantRuntime, TenantSpec,
+                           enumerate_layouts, plan_digest, submesh)
+
+BUDGET = SearchBudget(top_k=3, max_mappings=16, max_plans_per_mapping=10,
+                      max_candidates=500)
+
+
+@pytest.fixture()
+def fresh_store(tmp_path, monkeypatch):
+    monkeypatch.setenv(plancache.ENV_DIR, str(tmp_path))
+    monkeypatch.delenv(plancache.ENV_TOGGLE, raising=False)
+    plancache.reset_store()
+    yield plancache.get_store()
+    plancache.reset_store()
+
+
+def _gemm_progs(M=256, N=256, K=256, cap=6):
+    return [matmul_program(M, N, K, bm=bm, bn=bn, bk=bk)
+            for bm, bn, bk in block_shape_candidates(M, N, K)][:cap]
+
+
+def _service(fresh_store):
+    return PlanService(cache=plancache.PlanCache(store=fresh_store))
+
+
+# ----------------------------------------------------------------- submesh
+def test_submesh_identity_passthrough():
+    hw = get_hw("wormhole_8x8")
+    assert submesh(hw, (0, 0), (8, 8)) is hw
+
+
+def test_submesh_geometry_matches_preset_shape():
+    hw = get_hw("wormhole_8x8")
+    sub = submesh(hw, (2, 0), (4, 8))
+    assert sub.mesh_dims == (("x", 4), ("y", 8))
+    assert sub.n_cores == 32
+    # rings rebuilt with the new modulus, bandwidth preserved
+    assert {ic.name for ic in sub.interconnects} == {"noc_h", "noc_v"}
+    # an axis shrunk to one plane loses its ring (like the 1x8 preset)
+    one = submesh(hw, (3, 0), (1, 8))
+    assert [ic.name for ic in one.interconnects] == ["noc_v"]
+    assert get_hw("wormhole_1x8").interconnects[0].name == "noc_v"
+
+
+def test_submesh_digest_is_origin_independent():
+    hw = get_hw("wormhole_8x8")
+    a = submesh(hw, (0, 0), (4, 8))
+    b = submesh(hw, (4, 0), (4, 8))
+    assert a.df_text() == b.df_text()
+    assert keying.hw_digest(a) == keying.hw_digest(b)
+    # ...but shape forks the digest from the parent and from other shapes
+    assert keying.hw_digest(a) != keying.hw_digest(hw)
+    assert keying.hw_digest(a) != keying.hw_digest(submesh(hw, (0, 0),
+                                                           (8, 4)))
+
+
+def test_submesh_renumbers_local_faults():
+    hw = get_hw("wormhole_8x8").with_faults(disabled_cores=[(5, 3), (1, 1)])
+    sub = submesh(hw, (4, 0), (4, 8))
+    # (5,3) is inside the window -> local (1,3); (1,1) is outside -> gone
+    assert sub.disabled_cores == ((1, 3),)
+    assert sub.is_degraded
+    healthy = submesh(hw, (0, 2), (1, 1))   # window avoiding both faults
+    assert not healthy.is_degraded
+
+
+def test_submesh_rejects_bad_windows():
+    hw = get_hw("wormhole_8x8")
+    with pytest.raises(ValueError):
+        submesh(hw, (6, 0), (4, 8))          # walks off the mesh
+    with pytest.raises(ValueError):
+        submesh(hw, (0, 0), (4,))            # rank mismatch
+    dead = hw.with_faults(disabled_cores=[(0, 0)])
+    with pytest.raises(ValueError):
+        submesh(dead, (0, 0), (1, 1))        # no healthy cores inside
+
+
+# ---------------------------------------------------------------- layouts
+def test_enumerate_layouts_disjoint_and_covering():
+    region = Rect((0, 0), (8, 8))
+    layouts = enumerate_layouts(region, [1.0, 2.0, 1.0])
+    assert layouts
+    for layout in layouts:
+        cells = [c for r in layout for c in r.cells()]
+        assert len(cells) == len(set(cells)) == 64    # disjoint + covering
+        for a_i, a in enumerate(layout):
+            for b in layout[a_i + 1:]:
+                assert not a.overlaps(b)
+    # deterministic for fixed inputs
+    again = enumerate_layouts(region, [1.0, 2.0, 1.0])
+    assert layouts == again
+
+
+def test_enumerate_layouts_weight_bias():
+    # first layout's cut should track the weight share (6:2 on 8 planes)
+    layouts = enumerate_layouts(Rect((0, 0), (8, 8)), [3.0, 1.0])
+    first = layouts[0]
+    assert first[0].n_cells == 48 and first[1].n_cells == 16
+
+
+# ------------------------------------------- property: partition isolation
+def test_partition_plans_equal_standalone_submesh_plans(fresh_store,
+                                                        fast_search,
+                                                        tmp_path):
+    """For random disjoint partitions, the per-tenant plan resolved
+    through the joint search is bit-for-bit the plan a *standalone*
+    service resolves for the bare submesh model, given the identical
+    request history.  Both services start cold and replay the same
+    resolve sequence: warm-start reordering (cache.order_programs) is
+    deterministic in the request stream, so any digest drift would mean
+    partition origin or a co-tenant leaked into the search."""
+    hw = wormhole(4, 4)
+    service = _service(fresh_store)
+    twin = PlanService(cache=plancache.PlanCache(
+        store=plancache.PlanCacheStore(root=tmp_path / "twin")))
+    rng = random.Random(7)
+    progs_a = _gemm_progs(128, 128, 128, cap=4)
+    progs_b = _gemm_progs(128, 256, 128, cap=4)
+    layouts = enumerate_layouts(Rect((0, 0), (4, 4)), [1.0, 1.0])
+    for layout in rng.sample(layouts, 2):
+        tenants = [TenantSpec("a", progs_a), TenantSpec("b", progs_b)]
+        mp = MeshPartitioner(plan_layouts=1, max_layouts=1,
+                             cuts_per_split=1)
+        # pin the partitioner to this exact layout so the comparison is
+        # per-rect, not per-search-winner
+        mp_layouts = lambda *a, **k: [layout]   # noqa: E731
+        import repro.tenancy.partition as part_mod
+        orig = part_mod.enumerate_layouts
+        part_mod.enumerate_layouts = mp_layouts
+        try:
+            # regret_bound=0 disables the shape-family rung: tenant b must
+            # not be served a certified transplant of tenant a's cached
+            # plan (same template + origin-independent hw digest) — the
+            # property is about exact in-partition searches
+            plan = mp.plan(hw, tenants, service=service, budget=BUDGET,
+                           budget_ms=float("inf"), regret_bound=0.0)
+        finally:
+            part_mod.enumerate_layouts = orig
+        for p, progs in zip(plan.placements, (progs_a, progs_b)):
+            standalone = twin.resolve(PlanRequest(
+                programs=list(progs),
+                hw=submesh(hw, p.rect.origin, p.rect.shape),
+                budget=BUDGET, budget_ms=float("inf"), regret_bound=0.0))
+            assert standalone.rung == p.rung
+            assert plan_digest(p.plan) == \
+                plan_digest(standalone.result.best.plan)
+
+
+# ------------------------------------------- property: fault containment
+def test_seeded_kill_replans_exactly_one_tenant(fresh_store, fast_search):
+    hw = get_hw("wormhole_8x8")
+    service = _service(fresh_store)
+    tenants = [TenantSpec("a", _gemm_progs(256, 256, 256)),
+               TenantSpec("b", _gemm_progs(128, 512, 256),
+                          qos="best_effort")]
+    mp = MeshPartitioner(plan_layouts=1)
+    plan = mp.plan(hw, tenants, service=service, budget=BUDGET,
+                   budget_ms=float("inf"))
+    assert IsolationValidator().validate(plan) == []
+    rng = random.Random(20260807)
+    for trial in range(2):
+        runtime = TenantRuntime(plan, service=service, cache=service.cache,
+                                budget=BUDGET, partitioner=mp,
+                                latency_budget_s=120.0)
+        victim = plan.placements[trial % len(plan.placements)]
+        cells = sorted(victim.rect.cells())
+        cell = cells[rng.randrange(len(cells))]
+        before = plan.digests()
+        ev = runtime.kill_core(cell)
+        assert ev.owner == victim.tenant.name
+        assert ev.blast_radius == 1
+        assert ev.replanned == (victim.tenant.name,)
+        assert ev.contained()
+        after = runtime.plan.digests()
+        for name, d in before.items():
+            if name != victim.tenant.name:
+                assert after[name] == d       # byte-identical, on the bytes
+        assert ev.within_budget
+        assert IsolationValidator().validate(runtime.plan) == []
+        plan = mp.plan(hw, tenants, service=service, budget=BUDGET,
+                       budget_ms=float("inf"))   # fresh plan per trial
+
+
+def test_kill_in_spare_region_replans_nobody(fresh_store, fast_search):
+    hw = get_hw("wormhole_8x8")
+    service = _service(fresh_store)
+    tenants = [TenantSpec("a", _gemm_progs()), TenantSpec("b", _gemm_progs())]
+    mp = MeshPartitioner(spare_planes=2, plan_layouts=1)
+    plan = mp.plan(hw, tenants, service=service, budget=BUDGET,
+                   budget_ms=float("inf"))
+    assert plan.region.shape == (6, 8)
+    runtime = TenantRuntime(plan, service=service, cache=service.cache,
+                            budget=BUDGET, partitioner=mp)
+    ev = runtime.kill_core((7, 7))            # inside the spare strip
+    assert ev.owner is None and ev.rung == "none"
+    assert ev.blast_radius == 0 and ev.contained()
+    assert runtime.plan.digests() == plan.digests()
+
+
+def test_claim_adjacent_grows_into_spare_strip(fresh_store, fast_search):
+    hw = get_hw("wormhole_8x8")
+    service = _service(fresh_store)
+    tenants = [TenantSpec("a", _gemm_progs()), TenantSpec("b", _gemm_progs())]
+    mp = MeshPartitioner(spare_planes=1, plan_layouts=1)
+    plan = mp.plan(hw, tenants, service=service, budget=BUDGET,
+                   budget_ms=float("inf"))
+    # claim_threshold=0 makes every shrink "too slow", forcing escalation
+    runtime = TenantRuntime(plan, service=service, cache=service.cache,
+                            budget=BUDGET, partitioner=mp,
+                            latency_budget_s=120.0, claim_threshold=0.0)
+    edge = max(plan.placements, key=lambda p: p.rect.end[0])
+    cell = next(iter(edge.rect.cells()))
+    rect_before = edge.rect          # the runtime mutates placements in place
+    ev = runtime.kill_core(cell)
+    assert ev.owner == edge.tenant.name
+    assert ev.rung == "claim_adjacent"
+    assert ev.blast_radius == 1 and ev.contained()
+    grown = runtime.plan.placement(edge.tenant.name).rect
+    # exactly one plane claimed along exactly one axis of the old rect
+    diffs = sorted(n - o for n, o in zip(grown.shape, rect_before.shape))
+    assert diffs == [0, 1]
+    assert grown.n_cells > rect_before.n_cells
+    assert IsolationValidator().validate(runtime.plan) == []
+
+
+def test_repartition_last_resort_evicts_best_effort_only(fresh_store,
+                                                         fast_search):
+    hw = wormhole(2, 2)
+    service = _service(fresh_store)
+    tenants = [TenantSpec("g", _gemm_progs(cap=3)),
+               TenantSpec("e", _gemm_progs(128, 128, 128, cap=3),
+                          qos="best_effort")]
+    mp = MeshPartitioner(plan_layouts=1)
+    plan = mp.plan(hw, tenants, service=service, budget=BUDGET,
+                   budget_ms=float("inf"))
+    runtime = TenantRuntime(plan, service=service, cache=service.cache,
+                            budget=BUDGET, partitioner=mp,
+                            latency_budget_s=120.0)
+    victim = plan.placements[0]
+    cells = sorted(victim.rect.cells())
+    runtime.kill_core(cells[0])               # shrink in place (1 core left)
+    ev = runtime.kill_core(cells[1])          # partition fully dead -> rung 3
+    assert ev.rung == "repartition"
+    assert IsolationValidator().validate(runtime.plan) == []
+    # bounded disruption: best-effort rode the fallback rung, guaranteed
+    # got a real resolve
+    rungs = {p.tenant.name: p.response for p in runtime.plan.placements}
+    assert getattr(rungs["e"], "rung", "") == "fallback"
+    assert getattr(rungs["g"], "rung", "") != "fallback"
+    # every surviving partition avoids the dead cells
+    dead = set(runtime.hw.disabled_cores)
+    for p in runtime.plan.placements:
+        healthy = set(p.rect.cells()) - dead
+        assert healthy
+
+
+# ----------------------------------------------------------- QoS admission
+def test_admission_guaranteed_never_shed():
+    adm = TenantAdmission(max_best_effort=0)
+    g = TenantSpec("g", _gemm_progs(cap=1))
+    with adm.admit(g, 25.0) as ms:
+        assert ms == 25.0
+
+
+def test_admission_sheds_best_effort_to_fallback_deadline():
+    adm = TenantAdmission(max_best_effort=1)
+    e1 = TenantSpec("e1", _gemm_progs(cap=1), qos="best_effort")
+    e2 = TenantSpec("e2", _gemm_progs(cap=1), qos="best_effort")
+    with adm.admit(e1, 25.0) as ms1:
+        assert ms1 == 25.0
+        with adm.admit(e2, 25.0) as ms2:
+            assert ms2 == 0.0                 # shed: fallback rung only
+    with adm.admit(e2, 25.0) as ms:           # slot freed -> admitted
+        assert ms == 25.0
+    assert adm.shed_total == {"e2": 1}
+
+
+def test_shed_deadline_walks_service_to_fallback(fresh_store, fast_search):
+    service = _service(fresh_store)
+    hw = get_hw("wormhole_4x8")
+    resp = service.resolve(PlanRequest(programs=_gemm_progs(cap=3), hw=hw,
+                                       budget=BUDGET, budget_ms=0.0))
+    assert resp.rung == "fallback" and resp.ok
+
+
+# ------------------------------------------------------ isolation validator
+def test_validator_rejects_overlap_and_off_mesh(fresh_store, fast_search):
+    hw = get_hw("wormhole_8x8")
+    service = _service(fresh_store)
+    tenants = [TenantSpec("a", _gemm_progs()), TenantSpec("b", _gemm_progs())]
+    plan = MeshPartitioner(plan_layouts=1).plan(
+        hw, tenants, service=service, budget=BUDGET, budget_ms=float("inf"))
+    assert IsolationValidator().validate(plan) == []
+    a, b = plan.placements
+    b.rect = a.rect                           # force an overlap
+    bad = IsolationValidator().validate(plan)
+    assert any("overlap" in v for v in bad)
+    b.rect = Rect((6, 0), (4, 8))             # walks off the mesh
+    bad = IsolationValidator().validate(plan)
+    assert any("exceeds" in v for v in bad)
+
+
+def test_validator_checks_joint_dram_residency(fresh_store, fast_search):
+    hw = get_hw("wormhole_8x8")
+    service = _service(fresh_store)
+    tenants = [TenantSpec("a", _gemm_progs()), TenantSpec("b", _gemm_progs())]
+    plan = MeshPartitioner(plan_layouts=1).plan(
+        hw, tenants, service=service, budget=BUDGET, budget_ms=float("inf"))
+    for p in plan.placements:
+        assert dram_residency_bytes(p.plan) > 0
+    tight = IsolationValidator(dram_slack=1e-12)
+    assert any("DRAM residency" in v for v in tight.validate(plan))
+
+
+def test_validator_catches_out_of_partition_binds(fresh_store, fast_search):
+    hw = get_hw("wormhole_8x8")
+    service = _service(fresh_store)
+    tenants = [TenantSpec("a", _gemm_progs()), TenantSpec("b", _gemm_progs())]
+    plan = MeshPartitioner(plan_layouts=1).plan(
+        hw, tenants, service=service, budget=BUDGET, budget_ms=float("inf"))
+    p = plan.placements[0]
+    # shrink the rect under the plan: binds now exceed the partition
+    p.rect = Rect(p.rect.origin, (1, 1))
+    p.hw = submesh(hw, p.rect.origin, p.rect.shape)
+    bad = IsolationValidator().validate(plan)
+    assert any("exceeds partition" in v or "outside mesh" in v
+               or "size" in v for v in bad)
+
+
+# --------------------------------------------------- orchestrator wiring
+def test_orchestrator_routes_through_tenancy(fresh_store, fast_search):
+    hw = get_hw("wormhole_8x8")
+    service = _service(fresh_store)
+    tenants = [TenantSpec("a", _gemm_progs()), TenantSpec("b", _gemm_progs())]
+    mp = MeshPartitioner(plan_layouts=1)
+    plan = mp.plan(hw, tenants, service=service, budget=BUDGET,
+                   budget_ms=float("inf"))
+    runtime = TenantRuntime(plan, service=service, cache=service.cache,
+                            budget=BUDGET, partitioner=mp,
+                            latency_budget_s=120.0)
+    orch = ReplanOrchestrator(hw, _gemm_progs(), cache=service.cache,
+                              budget=BUDGET, tenancy=runtime)
+    cell = next(iter(plan.placements[0].rect.cells()))
+    ev = orch.kill_cores([cell])
+    assert ev.blast_radius == 1 and ev.contained()
+    assert orch.current_hw.disabled_cores == (cell,)
+
+
+# ----------------------------------------------------- satellite coverage
+def test_best_submesh_single_fault_unchanged():
+    hw = get_hw("wormhole_8x8")
+    sub = best_submesh(hw.with_faults(disabled_cores=[(1, 2)]))
+    assert sub.name == "wormhole_8x8_sub_x7"
+    assert sub.mesh_dims == (("x", 7), ("y", 8))
+
+
+def test_best_submesh_multi_axis_cut_keeps_more_cores():
+    hw = get_hw("wormhole_8x8")
+    # faults spanning both axes: one row + one column keeps 7x7=49 > 48
+    sub = best_submesh(hw.with_faults(disabled_cores=[(1, 2), (5, 6)]))
+    assert sub.n_cores == 49
+    assert sub.mesh_dims == (("x", 7), ("y", 7))
+    # same-row faults: single-plane drop still optimal (unchanged)
+    sub2 = best_submesh(hw.with_faults(disabled_cores=[(1, 2), (1, 6)]))
+    assert sub2.mesh_dims == (("x", 7), ("y", 8))
+    # three faults, two rows + one shared column: 6x8=48 vs 7x7=49
+    sub3 = best_submesh(hw.with_faults(
+        disabled_cores=[(1, 2), (5, 2), (6, 3)]))
+    assert sub3.n_cores == 49
+
+
+def test_parse_faults_rejects_bad_factor_and_duplicates():
+    with pytest.raises(ValueError, match=r"\(0, 1\]"):
+        parse_faults("link:noc_h:0")
+    with pytest.raises(ValueError, match=r"\(0, 1\]"):
+        parse_faults("link:noc_h:1.5")
+    with pytest.raises(ValueError, match="already killed"):
+        parse_faults("core:3,5;core:3,5@2")
+    with pytest.raises(ValueError, match="duplicate fault item"):
+        parse_faults("link:noc_h:0.5;link:noc_h:0.5")
+    ok = parse_faults("core:3,5;link:noc_h:0.5@2;straggler:1;crash")
+    assert len(ok) == 4
+
+
+def test_metrics_dump_is_atomic(tmp_path):
+    from repro.obs import metrics
+    metrics.inc("tenancy_test_total")
+    path = tmp_path / "metrics.json"
+    out = metrics.dump(str(path))
+    assert out == str(path)
+    data = json.loads(path.read_text())
+    assert data["tenancy_test_total"]["type"] == "counter"
+    assert [p.name for p in tmp_path.iterdir()] == ["metrics.json"]
+    # the env-driven path still works and stays atomic
+    os.environ["REPRO_METRICS"] = str(tmp_path / "env.json")
+    try:
+        assert metrics.dump() == str(tmp_path / "env.json")
+        assert json.loads((tmp_path / "env.json").read_text())
+    finally:
+        os.environ.pop("REPRO_METRICS", None)
+
+
+# -------------------------------------------------- tenancy metric labels
+def test_containment_emits_blast_radius_metrics(fresh_store, fast_search):
+    from repro.obs import metrics
+    hw = get_hw("wormhole_8x8")
+    service = _service(fresh_store)
+    tenants = [TenantSpec("a", _gemm_progs()), TenantSpec("b", _gemm_progs())]
+    mp = MeshPartitioner(plan_layouts=1)
+    plan = mp.plan(hw, tenants, service=service, budget=BUDGET,
+                   budget_ms=float("inf"))
+    runtime = TenantRuntime(plan, service=service, cache=service.cache,
+                            budget=BUDGET, partitioner=mp,
+                            latency_budget_s=120.0)
+    owner = plan.placements[0]
+    before = metrics.REGISTRY.counter("tenancy_replan_total").value(
+        tenant=owner.tenant.name, rung="shrink_in_place")
+    # REGISTRY is process-global: assert on deltas, not absolute state
+    h0 = metrics.REGISTRY.histogram("tenancy_blast_radius").series(
+        cause="core_kill")
+    count0, sum0 = (h0.count, h0.sum) if h0 is not None else (0, 0.0)
+    runtime.kill_core(next(iter(owner.rect.cells())))
+    after = metrics.REGISTRY.counter("tenancy_replan_total").value(
+        tenant=owner.tenant.name, rung="shrink_in_place")
+    assert after == before + 1
+    hist = metrics.REGISTRY.histogram("tenancy_blast_radius").series(
+        cause="core_kill")
+    assert hist is not None and hist.count == count0 + 1
+    assert hist.sum - sum0 == 1.0        # this kill's blast radius was 1
