@@ -1,0 +1,163 @@
+"""Serving-observability smoke: live introspection scrape + incident render.
+
+The CI perf-smoke job runs this after ``benchmarks.obs_smoke``.  It
+drives the real serve launcher end to end (DESIGN_OBS.md):
+
+1. spawn ``python -m repro.launch.serve --tenants 2 --tenant-kill 0,0
+   --introspect-port 0 --flightrec <tmp>`` with an ``--introspect-hold``
+   scrape window;
+2. scrape ``/metrics`` while the process is alive and validate it as
+   Prometheus text exposition format 0.0.4; scrape ``/slo``, ``/plans``
+   and ``/tenants`` and sanity-check their JSON;
+3. after exit, render the flight-recorder dump through the real
+   ``python -m repro.obs incident`` CLI and assert the acceptance story:
+   the core-kill fault event is there, exactly one tenant ran
+   containment rungs, and the plan-service rung decisions are grouped
+   under request-correlation IDs.
+
+Exit code 0 = all assertions hold; failures raise with the scraped
+evidence in the message.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import subprocess
+import sys
+import tempfile
+import time
+import urllib.request
+
+from repro.obs import expo
+
+from .common import row
+
+KILL_CORE = "0,0"
+HOLD_S = 6.0
+SCRAPE_TIMEOUT_S = 5.0
+
+
+def _scrape(url: str, path: str) -> str:
+    with urllib.request.urlopen(url + path, timeout=SCRAPE_TIMEOUT_S) as r:
+        return r.read().decode()
+
+
+def main() -> dict:
+    tmp = tempfile.mkdtemp(prefix="obs_serve_smoke_")
+    dump_path = os.path.join(tmp, "flightrec.json")
+    env = dict(os.environ)
+    env.setdefault("REPRO_PLAN_DEADLINE_MS", "5000")
+    cmd = [sys.executable, "-m", "repro.launch.serve",
+           "--tenants", "2", "--tenant-kill", KILL_CORE,
+           "--introspect-port", "0", "--flightrec", dump_path,
+           "--introspect-hold", str(HOLD_S)]
+    proc = subprocess.Popen(cmd, stdout=subprocess.PIPE,
+                            stderr=subprocess.STDOUT, text=True, env=env)
+
+    # 1: wait for the hold window (run done, endpoint still up), parsing
+    # the bound ephemeral port from the announcement line
+    url = None
+    lines = []
+    assert proc.stdout is not None
+    for line in proc.stdout:
+        lines.append(line.rstrip("\n"))
+        m = re.search(r"introspection at (http://\S+)", line)
+        if m:
+            url = m.group(1)
+        if "holding introspection open" in line:
+            break
+    else:
+        proc.wait(timeout=30)
+        raise AssertionError(
+            "serve exited before the hold window:\n" + "\n".join(lines))
+    if url is None:
+        raise AssertionError(
+            "no introspection URL line:\n" + "\n".join(lines))
+
+    # 2: live scrapes
+    metrics_text = _scrape(url, "/metrics")
+    problems = expo.validate_exposition(metrics_text)
+    if problems:
+        raise AssertionError(f"invalid exposition: {problems[:5]}")
+    if "tenancy_fault_events_total" not in metrics_text:
+        raise AssertionError("scrape missing tenancy counters:\n"
+                             + metrics_text[:2000])
+
+    slo_rep = json.loads(_scrape(url, "/slo"))
+    if not slo_rep["enabled"] or slo_rep["slow"]["total"] < 1:
+        raise AssertionError(f"SLO tracker saw no requests: {slo_rep}")
+    if not slo_rep["tenants"]:
+        raise AssertionError(f"SLO tracker saw no containment: {slo_rep}")
+
+    plans = json.loads(_scrape(url, "/plans"))
+    if "entries" not in plans or "cumulative" not in plans:
+        raise AssertionError(f"malformed /plans: {plans}")
+
+    tenants = json.loads(_scrape(url, "/tenants"))
+    names = [t["tenant"] for t in tenants["tenants"]]
+    if len(names) != 2:
+        raise AssertionError(f"expected 2 tenants, got {tenants}")
+    if len(tenants["incidents"]) != 1:
+        raise AssertionError(f"expected 1 incident, got {tenants}")
+
+    out, _ = proc.communicate(timeout=120)
+    lines += out.splitlines()
+    if proc.returncode != 0:
+        raise AssertionError(f"serve exited {proc.returncode}:\n"
+                             + "\n".join(lines))
+
+    # 3: incident render through the real CLI
+    render = subprocess.run(
+        [sys.executable, "-m", "repro.obs", "incident", dump_path],
+        capture_output=True, text=True, env=env)
+    if render.returncode != 0:
+        raise AssertionError(f"incident render failed: {render.stderr}")
+    text = render.stdout
+    if "fault" not in text or "cause=core_kill" not in text:
+        raise AssertionError("render missing the kill event:\n" + text)
+
+    doc = json.loads(open(dump_path).read())
+    events = doc["events"]
+    contain = [e for e in events if e["kind"] == "containment"]
+    if len(contain) != 1 or contain[0]["blast_radius"] != 1:
+        raise AssertionError(
+            f"expected exactly one contained tenant, got {contain}")
+    # the fault, the replan rung and the containment verdict share one
+    # incident correlation ID
+    incident_rid = contain[0]["rid"]
+    incident_kinds = {e["kind"] for e in events
+                      if e["rid"] == incident_rid}
+    if not {"fault", "replan", "containment"} <= incident_kinds:
+        raise AssertionError(
+            f"incident {incident_rid} not fully correlated: "
+            f"{sorted(incident_kinds)}")
+    # plan-service rung decisions are correlated per request
+    plan_reqs = [e for e in events if e["kind"] == "plan_request"]
+    if not plan_reqs or any(not e.get("rid") for e in plan_reqs):
+        raise AssertionError(
+            f"uncorrelated plan_request events: {plan_reqs}")
+    if not all(e.get("rung") for e in plan_reqs):
+        raise AssertionError(f"plan_request without a rung: {plan_reqs}")
+
+    summary = {
+        "n_events": len(events),
+        "n_plan_requests": len(plan_reqs),
+        "incident_rid": incident_rid,
+        "slo_total": slo_rep["slow"]["total"],
+        "metrics_lines": len(metrics_text.splitlines()),
+    }
+    print(row("obs_serve_smoke/exposition", 0.0,
+              f"lines={summary['metrics_lines']};valid=yes"))
+    print(row("obs_serve_smoke/slo", 0.0,
+              f"total={slo_rep['slow']['total']};"
+              f"alert={slo_rep['alert']['state']}"))
+    print(row("obs_serve_smoke/incident", 0.0,
+              f"events={len(events)};plan_requests={len(plan_reqs)};"
+              f"contained=1"))
+    return summary
+
+
+if __name__ == "__main__":
+    main()
+    print("obs_serve_smoke: OK", file=sys.stderr)

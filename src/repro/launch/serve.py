@@ -3,6 +3,12 @@
 ``python -m repro.launch.serve --arch qwen2.5-3b --reduced --tokens 32``
 greedy-decodes a batch of synthetic prompts.  On a pod the same driver uses
 the TileLoom decode plan (kv-sequence-split when kv_heads < TP, DESIGN.md).
+
+Serving-layer observability (DESIGN_OBS.md): ``--introspect-port`` starts
+a read-only HTTP endpoint (``/metrics`` Prometheus text, ``/healthz``,
+``/slo``, ``/plans``, ``/tenants``) before any planning happens;
+``--flightrec PATH`` (or ``REPRO_FLIGHTREC``) dumps the structured event
+ring buffer at exit for ``python -m repro.obs incident PATH``.
 """
 from __future__ import annotations
 
@@ -14,14 +20,82 @@ import jax.numpy as jnp
 
 from repro import plancache
 from repro.configs import get_config
-from repro.obs import metrics
+from repro.obs import expo, flightrec, metrics, slo
 from repro.configs.base import ShapeConfig, TrainConfig
 from repro.data import DataConfig, make_source
 from repro.models import build_model
 from repro.planservice import PlanService
 
 
-def _run_tenants(args) -> None:
+def _plans_view() -> dict:
+    """``/plans`` payload: the registry's cross-process stats blob plus
+    this serving process's live lookup counters."""
+    store = plancache.get_store()
+    s = store.stats
+    blob = plancache.stats_blob(store)
+    blob["process"] = {"hits_mem": s.hits_mem, "hits_disk": s.hits_disk,
+                       "misses": s.misses, "puts": s.puts}
+    return blob
+
+
+def _tenants_view(state: dict) -> dict:
+    """``/tenants`` payload from the live :class:`TenancyPlan` (filled in
+    by :func:`_run_tenants`; empty in single-model mode)."""
+    plan = state.get("plan")
+    if plan is None:
+        return {"mode": "model", "tenants": []}
+    return {
+        "hw": plan.hw.name,
+        "layout_score": plan.layout_score,
+        "n_layouts": plan.n_layouts,
+        "free_cells": sorted(plan.free_cells()),
+        "tenants": [{
+            "tenant": p.tenant.name, "qos": p.tenant.qos,
+            "rect": p.rect.describe(), "hw": p.hw.name, "rung": p.rung,
+            "digest": p.digest, "sim_us": p.sim_s * 1e6,
+        } for p in plan.placements],
+        "incidents": list(state.get("incidents", [])),
+    }
+
+
+def _setup_observability(args) -> dict:
+    """Arm the flight recorder / SLO tracker and (with
+    ``--introspect-port``) start the read-only HTTP endpoint *before* any
+    planning happens, so the earliest rung decisions are observable."""
+    flightrec.refresh_from_env()             # REPRO_FLIGHTREC=<path>
+    if args.flightrec:
+        flightrec.enable(args.flightrec)
+    obs = {"server": None, "plan": None, "incidents": []}
+    if args.introspect_port is None and not flightrec.enabled():
+        return obs
+    slo.enable()                             # honors REPRO_SLO_* knobs
+    if args.introspect_port is not None:
+        server = expo.IntrospectionServer(port=args.introspect_port)
+        server.add_provider("/plans", _plans_view)
+        server.add_provider("/tenants", lambda: _tenants_view(obs))
+        server.start()
+        obs["server"] = server
+        # the smoke lane parses this line for the bound (ephemeral) port
+        print(f"[serve] introspection at {server.url} "
+              f"(/metrics /healthz /slo /plans /tenants)", flush=True)
+    return obs
+
+
+def _finish_observability(args, obs: dict) -> None:
+    if flightrec.enabled():
+        path = flightrec.dump(reason="serve_done")
+        if path:
+            print(f"[serve] flight recorder dump: {path}")
+    server = obs.get("server")
+    if server is not None:
+        if args.introspect_hold > 0:
+            print(f"[serve] holding introspection open "
+                  f"{args.introspect_hold:.1f}s at {server.url}", flush=True)
+            time.sleep(args.introspect_hold)
+        server.stop()
+
+
+def _run_tenants(args, obs) -> None:
     """Multi-tenant serving mode (``--tenants k``): plan k concurrent
     kernel tenants onto disjoint partitions of one fabric through the
     tenancy layer, optionally inject a core kill, and *assert* the
@@ -61,6 +135,7 @@ def _run_tenants(args) -> None:
     bad = IsolationValidator().validate(plan)
     if bad:
         raise SystemExit(f"[serve] isolation validation failed: {bad}")
+    obs["plan"] = plan                   # /tenants now serves the live view
     print(f"[serve] {args.tenants} tenants on {hw.name}: "
           f"{plan.describe()}")
 
@@ -69,6 +144,12 @@ def _run_tenants(args) -> None:
         runtime = TenantRuntime(plan, service=service, cache=service.cache,
                                 budget=budget, partitioner=partitioner)
         ev = runtime.kill_core(core)
+        obs["plan"] = runtime.plan       # containment may repartition
+        obs["incidents"].append({
+            "cause": ev.cause, "cell": core, "owner": ev.owner,
+            "rung": ev.rung, "blast_radius": ev.blast_radius,
+            "seconds": ev.seconds, "within_budget": ev.within_budget,
+        })
         print(f"[serve] core_kill {core}: owner={ev.owner} rung={ev.rung} "
               f"blast_radius={ev.blast_radius} "
               f"seconds={ev.seconds * 1e3:.1f}ms "
@@ -113,10 +194,27 @@ def main(argv=None) -> None:
     ap.add_argument("--tenant-kill", default="",
                     help="inject a core kill at mesh coords 'R,C' after "
                          "partitioning and assert containment")
+    ap.add_argument("--introspect-port", type=int, default=None,
+                    metavar="PORT",
+                    help="serve read-only introspection HTTP on PORT "
+                         "(0 = ephemeral; prints the bound URL): /metrics "
+                         "(Prometheus text), /healthz, /slo, /plans, "
+                         "/tenants")
+    ap.add_argument("--introspect-hold", type=float, default=0.0,
+                    metavar="SECONDS",
+                    help="keep the introspection endpoint up SECONDS after "
+                         "the run finishes (scrape window for smoke tests)")
+    ap.add_argument("--flightrec", default="",
+                    metavar="PATH",
+                    help="arm the flight recorder and dump its ring buffer "
+                         "to PATH at exit (same as REPRO_FLIGHTREC=PATH); "
+                         "render with `python -m repro.obs incident PATH`")
     args = ap.parse_args(argv)
 
+    obs = _setup_observability(args)
     if args.tenants > 0:
-        _run_tenants(args)
+        _run_tenants(args, obs)
+        _finish_observability(args, obs)
         return
 
     cfg = get_config(args.arch)
@@ -174,6 +272,7 @@ def main(argv=None) -> None:
     dumped = metrics.dump()              # honors REPRO_METRICS=<path>
     if dumped:
         print(f"[serve] metrics snapshot written to {dumped}")
+    _finish_observability(args, obs)
 
 
 if __name__ == "__main__":

@@ -16,14 +16,30 @@ Three deliberately-decoupled layers (DESIGN_OBS.md):
   winner-vs-runner-up per-resource cost diffs
   (``python -m repro.obs explain <suite/cell>``).
 
-``trace`` and ``metrics`` are stdlib-only and import nothing from
-``repro.core`` (the core planner imports *them*); ``explain`` sits above
-the planner and may import everything.
+The serving stack (PR 10) adds four more stdlib-only layers:
+
+* :mod:`repro.obs.context` — contextvar request/incident correlation IDs
+  stamped onto every span, metric exemplar and flight-recorder event;
+* :mod:`repro.obs.flightrec` — a bounded ring buffer of structured
+  serving events (rung decisions, breaker transitions, faults,
+  containment, QoS shed, violations) dumped atomically and rendered by
+  ``python -m repro.obs incident <dump>``;
+* :mod:`repro.obs.slo` — sliding-window deadline-attainment / rung
+  distribution / blast-radius tracking with multi-window burn-rate
+  alerts that fire flight-recorder events;
+* :mod:`repro.obs.expo` — Prometheus text exposition of the metrics
+  registry plus the ``launch/serve.py --introspect-port`` HTTP endpoint
+  (``/metrics``, ``/healthz``, ``/slo``, ``/plans``, ``/tenants``).
+
+``trace``, ``metrics``, ``context``, ``flightrec``, ``slo`` and ``expo``
+are stdlib-only and import nothing from ``repro.core`` (the core planner
+imports *them*); ``explain`` sits above the planner and may import
+everything.
 
 The hard invariant of the whole package: **observation never perturbs
 planning** — best plans, costs, and cache keys are bit-identical with
 tracing on or off, at any worker count (``tests/test_obs.py`` pins this).
 """
-from . import metrics, trace
+from . import context, expo, flightrec, metrics, slo, trace
 
-__all__ = ["metrics", "trace"]
+__all__ = ["context", "expo", "flightrec", "metrics", "slo", "trace"]

@@ -5,6 +5,7 @@ Usage::
     python -m repro.obs explain <suite/cell> [--no-cache] [--workers N]
     python -m repro.obs explain --list
     python -m repro.obs metrics [--json]
+    python -m repro.obs incident <dump.json> [--rid ID] [--json]
 
 ``explain`` re-resolves one benchmark cell (read-through the plan cache
 by default, so warmed cells render without re-searching) and prints the
@@ -12,6 +13,9 @@ simulated timeline, mesh heatmap and winner-vs-runner-up diff — see
 ``repro.obs.explain``.  ``metrics`` prints the unified registry snapshot
 of this process (mostly useful after an in-process run; launchers and
 benchmarks honor ``REPRO_METRICS=<path>`` to persist theirs).
+``incident`` renders a flight-recorder dump (``REPRO_FLIGHTREC=<path>``
+or ``serve.py --flightrec``) as per-request/incident timelines: which
+rung answered, why, how long each step took, what it displaced.
 """
 from __future__ import annotations
 
@@ -40,10 +44,32 @@ def main(argv=None) -> int:
     mt = sub.add_parser("metrics", help="print this process's registry")
     mt.add_argument("--json", action="store_true", dest="as_json",
                     help="raw JSON snapshot (default: same)")
+    inc = sub.add_parser("incident",
+                         help="render a flight-recorder dump as "
+                              "per-request timelines")
+    inc.add_argument("dump", help="dump path (REPRO_FLIGHTREC / "
+                                  "serve.py --flightrec output)")
+    inc.add_argument("--rid", default=None,
+                     help="only the timeline of one request/incident ID")
+    inc.add_argument("--json", action="store_true", dest="as_json",
+                     help="print the raw dump JSON instead of rendering")
     args = ap.parse_args(argv)
 
     if args.cmd == "metrics":
         print(json.dumps(metrics.snapshot(), indent=1, sort_keys=True))
+        return 0
+
+    if args.cmd == "incident":
+        from . import flightrec
+        try:
+            doc = flightrec.load_dump(args.dump)
+        except (OSError, ValueError, json.JSONDecodeError) as e:
+            print(f"error: {e}", file=sys.stderr)
+            return 2
+        if args.as_json:
+            print(json.dumps(doc, indent=1, sort_keys=True))
+        else:
+            print(flightrec.render_incident(doc, rid=args.rid))
         return 0
 
     from . import explain as ex_mod

@@ -27,9 +27,15 @@ from __future__ import annotations
 import json
 import os
 import threading
+import time
 from typing import Any, Dict, Iterable, List, Mapping, Optional, Tuple
 
 METRICS_ENV = "REPRO_METRICS"
+
+#: Process start as this module saw it — the snapshot meta block's epoch.
+_START_TIME = time.time()
+
+from . import context  # noqa: E402  (no cycle: context imports nothing)
 
 LabelKey = Tuple[Tuple[str, str], ...]
 
@@ -39,18 +45,22 @@ def _label_key(labels: Mapping[str, Any]) -> LabelKey:
 
 
 class _Series:
-    """One (metric, label-set) time series."""
-    __slots__ = ("labels", "value")
+    """One (metric, label-set) time series.  ``rid`` is the exemplar:
+    the correlation ID active at the last correlated update (None until
+    one happens) — per-series, not per-increment, so request IDs never
+    explode label cardinality."""
+    __slots__ = ("labels", "value", "rid")
 
     def __init__(self, labels: LabelKey) -> None:
         self.labels = labels
         self.value = 0.0
+        self.rid: Optional[str] = None
 
 
 class _HistSeries:
     """Histogram series: count / sum / min / max plus fixed log-ish buckets
     (seconds-oriented; fine for the planner's ms-to-minutes range)."""
-    __slots__ = ("labels", "count", "sum", "min", "max", "buckets")
+    __slots__ = ("labels", "count", "sum", "min", "max", "buckets", "rid")
 
     BOUNDS = (1e-4, 1e-3, 1e-2, 0.1, 1.0, 10.0, 100.0)
 
@@ -61,6 +71,7 @@ class _HistSeries:
         self.min = float("inf")
         self.max = float("-inf")
         self.buckets = [0] * (len(self.BOUNDS) + 1)
+        self.rid: Optional[str] = None
 
     def observe(self, v: float) -> None:
         self.count += 1
@@ -93,11 +104,14 @@ class Counter:
         self._bump(_label_key(labels), amount)
 
     def _bump(self, key: LabelKey, amount: float) -> None:
+        rid = context.current()
         with self._registry._lock:
             s = self._series.get(key)
             if s is None:
                 s = self._series[key] = _Series(key)
             s.value += amount
+            if rid is not None:
+                s.rid = rid
 
     def value(self, **labels: Any) -> float:
         with self._registry._lock:
@@ -138,19 +152,25 @@ class Gauge:
 
     def set(self, value: float, **labels: Any) -> None:
         key = _label_key(labels)
+        rid = context.current()
         with self._registry._lock:
             s = self._series.get(key)
             if s is None:
                 s = self._series[key] = _Series(key)
             s.value = float(value)
+            if rid is not None:
+                s.rid = rid
 
     def add(self, amount: float, **labels: Any) -> None:
         key = _label_key(labels)
+        rid = context.current()
         with self._registry._lock:
             s = self._series.get(key)
             if s is None:
                 s = self._series[key] = _Series(key)
             s.value += amount
+            if rid is not None:
+                s.rid = rid
 
     def value(self, **labels: Any) -> float:
         with self._registry._lock:
@@ -170,11 +190,14 @@ class Histogram:
 
     def observe(self, value: float, **labels: Any) -> None:
         key = _label_key(labels)
+        rid = context.current()
         with self._registry._lock:
             s = self._series.get(key)
             if s is None:
                 s = self._series[key] = _HistSeries(key)
             s.observe(float(value))
+            if rid is not None:
+                s.rid = rid
 
     def series(self, **labels: Any) -> Optional[_HistSeries]:
         with self._registry._lock:
@@ -216,9 +239,15 @@ class Registry:
             self._metrics.clear()
 
     def snapshot(self) -> Dict[str, Any]:
-        """Plain-JSON view: ``{name: {type, help, series: [{labels, ...}]}}``.
-        Counter/gauge series carry ``value``; histogram series carry
-        ``count``/``sum``/``min``/``max``/``buckets``."""
+        """Plain-JSON view: ``{name: {type, help, series: [{labels, ...}]}}``
+        plus a ``_meta`` block (pid, start time, uptime, plancache schema)
+        so scraped blobs are self-describing.  Counter/gauge series carry
+        ``value``; histogram series carry ``count``/``sum``/``min``/
+        ``max``/``buckets``; any series touched inside a correlation
+        scope carries its last ``rid`` exemplar.  ``_meta`` has no
+        ``type`` key, which is what keeps the diff-style consumers
+        (:func:`counter_totals`, :func:`diff_counters`) oblivious to it.
+        """
         out: Dict[str, Any] = {}
         with self._lock:
             for name, m in sorted(self._metrics.items()):
@@ -226,7 +255,7 @@ class Registry:
                 if isinstance(m, Histogram):
                     mtype = "histogram"
                     for s in m._series.values():
-                        series.append({
+                        d = {
                             "labels": dict(s.labels),
                             "count": s.count,
                             "sum": s.sum,
@@ -236,15 +265,36 @@ class Registry:
                                 "le": list(_HistSeries.BOUNDS) + ["inf"],
                                 "counts": list(s.buckets),
                             },
-                        })
+                        }
+                        if s.rid is not None:
+                            d["rid"] = s.rid
+                        series.append(d)
                 else:
                     mtype = "counter" if isinstance(m, Counter) else "gauge"
                     for s in m._series.values():
-                        series.append({"labels": dict(s.labels),
-                                       "value": s.value})
+                        d = {"labels": dict(s.labels), "value": s.value}
+                        if s.rid is not None:
+                            d["rid"] = s.rid
+                        series.append(d)
                 series.sort(key=lambda d: sorted(d["labels"].items()))
                 out[name] = {"type": mtype, "help": m.help, "series": series}
+        out["_meta"] = _meta_block()
         return out
+
+
+def _meta_block() -> Dict[str, Any]:
+    """Self-description for scraped snapshots.  The plancache schema
+    version rides along so a scrape can be matched against the on-disk
+    plan store it was taken next to (import kept lazy and fallible:
+    metrics must stay importable from anywhere in the stack)."""
+    try:
+        from repro.plancache.keying import SCHEMA_VERSION
+        schema: Optional[int] = SCHEMA_VERSION
+    except Exception:
+        schema = None
+    now = time.time()
+    return {"pid": os.getpid(), "start_time": _START_TIME,
+            "uptime_s": now - _START_TIME, "plancache_schema": schema}
 
 
 REGISTRY = Registry()
@@ -315,21 +365,42 @@ def hist_quantile(series: Mapping[str, Any], q: float) -> Optional[float]:
 
     Linear interpolation inside the covering bucket, clamped to the
     observed ``[min, max]`` so the coarse log bounds can't report a p99
-    above the largest value actually seen.  Returns ``None`` on an empty
-    series."""
+    above the largest value actually seen.
+
+    Boundary contract: ``None`` series or empty histogram -> ``None``;
+    ``q <= 0`` -> observed min; ``q >= 1`` -> observed max (exact, not
+    interpolated); a single-bucket histogram interpolates within
+    ``[min, max]`` instead of within the much coarser bucket; a series
+    without bucket data (foreign/minimal snapshots) degrades to linear
+    interpolation between min and max."""
+    if not series:
+        return None
     count = int(series.get("count") or 0)
     if count <= 0:
         return None
-    lo, hi = float(series["min"]), float(series["max"])
+    lo = float(series.get("min") if series.get("min") is not None else 0.0)
+    hi = float(series.get("max") if series.get("max") is not None else lo)
     q = min(1.0, max(0.0, float(q)))
+    if q <= 0.0 or count == 1 or lo == hi:
+        return lo if q <= 0.0 else (hi if q >= 1.0 else lo)
+    if q >= 1.0:
+        return hi
+    buckets = series.get("buckets") or {}
+    bounds = list(buckets.get("le") or [])
+    counts = list(buckets.get("counts") or [])
+    if not bounds or not counts or sum(counts) <= 0:
+        return lo + (hi - lo) * q
+    if sum(1 for n in counts if n > 0) == 1:
+        # Single occupied bucket: the bucket edges say nothing the
+        # observed extremes don't say better.
+        return lo + (hi - lo) * q
     rank = q * count
-    bounds = list(series["buckets"]["le"])
-    counts = list(series["buckets"]["counts"])
     seen = 0.0
     prev_bound = 0.0
     for bound, n in zip(bounds, counts):
         if n <= 0:
-            prev_bound = bound if bound != "inf" else prev_bound
+            if bound != "inf":
+                prev_bound = float(bound)
             continue
         if seen + n >= rank:
             upper = hi if bound == "inf" else float(bound)
@@ -337,7 +408,8 @@ def hist_quantile(series: Mapping[str, Any], q: float) -> Optional[float]:
             est = prev_bound + (upper - prev_bound) * frac
             return min(hi, max(lo, est))
         seen += n
-        prev_bound = float(bound) if bound != "inf" else prev_bound
+        if bound != "inf":
+            prev_bound = float(bound)
     return hi
 
 

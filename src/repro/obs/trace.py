@@ -37,6 +37,8 @@ from typing import Any, Callable, Dict, List, Optional
 
 TRACE_ENV = "REPRO_TRACE"
 
+from . import context  # noqa: E402  (no cycle: context imports nothing)
+
 # wall-clock anchor for perf_counter timestamps; computed once per process
 # so every span of a process shares one epoch (fork children inherit the
 # parent's, spawn children recompute — both express the same wall clock)
@@ -104,6 +106,12 @@ def _record(name: str, cat: str, t0: float, t1: float,
         "ts": (_EPOCH + t0) * 1e6, "dur": max(0.0, (t1 - t0) * 1e6),
         "pid": os.getpid(), "tid": threading.get_ident(),
     }
+    rid = context.current()
+    if rid is not None:
+        # correlation ID rides in args so Perfetto's span view shows it
+        # and `repro.obs incident` can join spans against the recorder
+        args = dict(args) if args else {}
+        args["rid"] = rid
     if args:
         ev["args"] = args
     with _STATE.lock:

@@ -38,7 +38,7 @@ from concurrent.futures import ProcessPoolExecutor
 from concurrent.futures.process import BrokenProcessPool
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
-from repro.obs import metrics, trace
+from repro.obs import context, flightrec, metrics, trace
 
 WORKERS_ENV = "REPRO_PLANNER_WORKERS"
 MP_CONTEXT_ENV = "REPRO_PLANNER_MP"      # fork | spawn | forkserver
@@ -150,6 +150,11 @@ def _run_pool_tasks(fn: Callable[[Any], Any], tasks: Sequence[Any],
             shutdown_pool()              # a broken pool never recovers
             metrics.inc("search_pool_failures_total",
                         kind=type(e).__name__, where=label)
+            flightrec.record("pool_failure", error=type(e).__name__,
+                             where=label, attempt=attempt,
+                             will_retry=(not isinstance(
+                                 e, pickle.PicklingError)
+                                 and attempt < _POOL_RETRIES))
             if isinstance(e, pickle.PicklingError) \
                     or attempt == _POOL_RETRIES:
                 return None
@@ -219,6 +224,10 @@ def _worker_rank(task: Dict[str, Any]) -> Dict[str, Any]:
     themselves, which would clobber the parent's ``REPRO_TRACE`` path)."""
     os.environ[WORKERS_ENV] = "1"        # no nested pools
     _maybe_crash_worker()
+    # adopt the parent's correlation ID (shipped with the job, like the
+    # trace flag) so worker spans land on the request's timeline; attach
+    # overwrites, so a reused worker never keeps a previous task's ID
+    context.attach(task.get("rid"))
     from repro.core import planner
     from repro.plancache import serialize
     tracing = bool(task.get("trace"))
@@ -291,6 +300,7 @@ def rank_sharded(programs: Sequence, hw, budget, *, spatial_reuse: bool,
             "catch_infeasible": catch_infeasible,
             "engine": engine,
             "trace": trace.enabled(),
+            "rid": context.current(),
         })
     results = _run_pool_tasks(_worker_rank, tasks, workers,
                               label="rank_sharded")
@@ -325,6 +335,7 @@ def _plan_node_pool_job(task: Dict[str, Any]) -> Dict[str, Any]:
     worker's buffered spans when the parent is tracing)."""
     os.environ[WORKERS_ENV] = "1"        # no nested pools
     _maybe_crash_worker()
+    context.attach(task.get("rid"))      # see _worker_rank
     from repro.core import planner
     from repro.pipeline.planner import node_candidate_pool
     from repro.plancache import serialize
@@ -367,6 +378,7 @@ def plan_node_pools(program_lists: Sequence[Sequence], hw, budget, *,
         "budget": wbudget,
         "engine": engine,
         "trace": trace.enabled(),
+        "rid": context.current(),
     } for progs in program_lists]
     results = _run_pool_tasks(_plan_node_pool_job, tasks,
                               min(workers, len(tasks)),
@@ -395,14 +407,16 @@ def _repro_env() -> Dict[str, Optional[str]]:
 
 
 def _run_with_env(task: Tuple[Dict[str, Optional[str]],
-                              Callable[[Any], Any], Any]) -> Any:
-    env, fn, job = task
+                              Callable[[Any], Any], Any, Optional[str]]
+                  ) -> Any:
+    env, fn, job, rid = task
     for k, v in env.items():
         if v is None:
             os.environ.pop(k, None)
         else:
             os.environ[k] = v
     _maybe_crash_worker()
+    context.attach(rid)                  # see _worker_rank
     return fn(job)
 
 
@@ -424,7 +438,9 @@ def map_jobs(fn: Callable[[Any], Any], jobs: Sequence[Any],
     if workers <= 1:
         return [fn(j) for j in jobs]
     env = _repro_env()
-    results = _run_pool_tasks(_run_with_env, [(env, fn, j) for j in jobs],
+    rid = context.current()
+    results = _run_pool_tasks(_run_with_env,
+                              [(env, fn, j, rid) for j in jobs],
                               workers, label="map_jobs")
     if results is None:                  # pool unusable: degrade, don't die
         return [fn(j) for j in jobs]

@@ -15,7 +15,7 @@ from .serialize import (plan_from_dict, plan_to_dict, program_from_dict,
                         program_to_dict, result_from_dict, result_to_dict)
 from .store import (CacheStats, ENV_DIR, ENV_TOGGLE, PlanCacheStore,
                     QUARANTINE_DIR, cache_enabled, default_cache_dir,
-                    get_store, lookup_source, reset_store)
+                    get_store, lookup_source, reset_store, stats_blob)
 from .validate import validate_plan
 from .warmstart import order_programs, tile_signature, warm_order_from_store
 
@@ -27,6 +27,6 @@ __all__ = [
     "plan_from_dict", "plan_to_dict", "program_from_dict", "program_to_dict",
     "result_from_dict", "result_to_dict",
     "cache_enabled", "default_cache_dir", "get_store", "lookup_source",
-    "reset_store", "validate_plan",
+    "reset_store", "stats_blob", "validate_plan",
     "order_programs", "tile_signature", "warm_order_from_store",
 ]

@@ -239,26 +239,19 @@ def cmd_ls(args: argparse.Namespace) -> int:
 
 # ---------------------------------------------------------------- stats
 def cmd_stats(args: argparse.Namespace) -> int:
+    from .store import stats_blob
     store = get_store()
-    n = store.n_entries()
-    cum = store.cumulative_stats()
-    by_template: dict = {}
-    for ent in store.entries():
-        t = ent.get("meta", {}).get("template", "?")
-        by_template[t] = by_template.get(t, 0) + 1
+    blob = stats_blob(store)
+    cum = blob["cumulative"]
     if getattr(args, "as_json", False):
         import json
         from repro.obs import metrics
-        print(json.dumps({
-            "store": {"root": str(store.root), "enabled": store.enabled,
-                      "entries": n, "by_template": by_template,
-                      "cumulative": cum, "hit_rate": _rate(cum)},
-            "metrics": metrics.snapshot(),
-        }, indent=1, sort_keys=True))
+        print(json.dumps({"store": blob, "metrics": metrics.snapshot()},
+                         indent=1, sort_keys=True))
         return 0
     print(f"store: {store.root}  (enabled={store.enabled})")
-    print(f"entries: {n}")
-    for t, c in sorted(by_template.items()):
+    print(f"entries: {blob['entries']}")
+    for t, c in sorted(blob["by_template"].items()):
         print(f"  {t}: {c}")
     hits = cum.get("hits_mem", 0) + cum.get("hits_disk", 0)
     print(f"cumulative: {hits} hits ({cum.get('hits_mem', 0)} mem / "

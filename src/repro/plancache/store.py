@@ -464,3 +464,23 @@ def get_store() -> PlanCacheStore:
 def reset_store() -> None:
     global _STORE
     _STORE = None
+
+
+def stats_blob(store: Optional[PlanCacheStore] = None) -> Dict[str, Any]:
+    """One JSON-ready view of the registry's state: root, entry counts by
+    template, cumulative cross-process hit/miss counters and the derived
+    hit rate.  Shared by ``python -m repro.plancache stats --json`` and
+    the ``launch/serve.py --introspect-port`` ``/plans`` endpoint."""
+    store = store or get_store()
+    cum = store.cumulative_stats()
+    by_template: Dict[str, int] = {}
+    for ent in store.entries():
+        t = ent.get("meta", {}).get("template", "?")
+        by_template[t] = by_template.get(t, 0) + 1
+    hits = cum.get("hits_mem", 0) + cum.get("hits_disk", 0)
+    total = hits + cum.get("misses", 0)
+    return {
+        "root": str(store.root), "enabled": store.enabled,
+        "entries": store.n_entries(), "by_template": by_template,
+        "cumulative": cum, "hit_rate": (hits / total if total else 0.0),
+    }

@@ -36,7 +36,7 @@ from repro.core.hw import HardwareModel
 from repro.core.planner import (PlanResult, SearchBudget, budget_for_deadline,
                                 effective_budget, plan_kernel_multi)
 from repro.core.program import TileProgram
-from repro.obs import metrics, trace
+from repro.obs import context, flightrec, metrics, slo, trace
 from repro.plancache import PlanCache, keying
 
 RUNGS = ("cache", "family", "search", "fallback")
@@ -133,35 +133,55 @@ class _Breaker:
 
     closed -> (threshold misses) -> open -> (cooldown) -> half_open
     -> one trial -> closed on success / open on another miss.
+
+    Every state transition lands in the flight recorder (kind
+    ``breaker``) and in ``planservice_breaker_transitions_total`` — a
+    breaker flapping open is the single most explanatory event in a
+    deadline-miss incident.
     """
 
     def __init__(self, threshold: int, cooldown_s: float,
-                 clock: Callable[[], float]) -> None:
+                 clock: Callable[[], float], key: str = "") -> None:
         self.threshold = threshold
         self.cooldown_s = cooldown_s
         self.clock = clock
+        self.key = key
         self.state = "closed"
         self.misses = 0
         self.opened_at = 0.0
+
+    def _set_state(self, state: str) -> None:
+        if state == self.state:
+            return
+        prev, self.state = self.state, state
+        flightrec.record("breaker", key=self.key,
+                         **{"from": prev, "to": state})
+        metrics.inc("planservice_breaker_transitions_total", to=state)
+
+    def force_open(self) -> None:
+        """Re-open without counting a miss (half-open trial gave its
+        slot back)."""
+        self._set_state("open")
+        self.opened_at = self.clock()
 
     def allow(self) -> bool:
         if self.state == "closed":
             return True
         if self.state == "open":
             if self.clock() - self.opened_at >= self.cooldown_s:
-                self.state = "half_open"     # admit exactly one trial
+                self._set_state("half_open")  # admit exactly one trial
                 return True
             return False
         return False                         # half_open trial in flight
 
     def record_ok(self) -> None:
-        self.state = "closed"
+        self._set_state("closed")
         self.misses = 0
 
     def record_miss(self) -> None:
         self.misses += 1
         if self.state == "half_open" or self.misses >= self.threshold:
-            self.state = "open"
+            self._set_state("open")
             self.opened_at = self.clock()
             self.misses = 0
 
@@ -197,7 +217,15 @@ class PlanService:
     def resolve(self, request: PlanRequest) -> PlanResponse:
         """Walk the ladder.  Never raises; always within ~one rung-check
         of the deadline (each rung re-checks remaining time before it
-        starts, so only the granularity of a single check can overrun)."""
+        starts, so only the granularity of a single check can overrun).
+
+        Runs inside a correlation scope: a fresh ``plan-*`` request ID
+        unless the caller already holds one (a resolve nested inside a
+        tenancy/replan incident inherits the incident ID)."""
+        with context.correlate("plan"):
+            return self._resolve(request)
+
+    def _resolve(self, request: PlanRequest) -> PlanResponse:
         t0 = self.clock()
         deadline_ms = (request.budget_ms if request.budget_ms is not None
                        else default_deadline_ms())
@@ -260,27 +288,37 @@ class PlanService:
         latency against the deadline, same metric families.  Never
         raises."""
         from repro.plancache import lookup_source
-        t0 = self.clock()
-        deadline_ms = (budget_ms if budget_ms is not None
-                       else default_deadline_ms())
-        ranking, rung, outcome = None, "fallback", "error"
-        try:
-            from repro.parallel.planner_bridge import plan_mesh
-            with lookup_source(self.cache.store) as probe:
-                ranking = plan_mesh(api, shape, tcfg, multi_pod=multi_pod,
-                                    top_k=top_k)
-            rung = "cache" if probe["source"] == "cache" else "search"
-            outcome = "ok"
-        except Exception:  # noqa: BLE001
-            pass
-        resp = MeshPlanResponse(ranking=ranking, rung=rung, outcome=outcome,
-                                seconds=self.clock() - t0)
-        metrics.inc("planservice_requests_total", rung=rung, outcome=outcome)
-        metrics.observe("planservice_resolve_seconds", resp.seconds,
-                        rung=rung)
-        if deadline_ms != float("inf") and resp.seconds * 1e3 > deadline_ms:
-            metrics.inc("planservice_deadline_miss_total", rung=rung)
-        return resp
+        with context.correlate("plan"):
+            t0 = self.clock()
+            deadline_ms = (budget_ms if budget_ms is not None
+                           else default_deadline_ms())
+            ranking, rung, outcome = None, "fallback", "error"
+            try:
+                from repro.parallel.planner_bridge import plan_mesh
+                with lookup_source(self.cache.store) as probe:
+                    ranking = plan_mesh(api, shape, tcfg,
+                                        multi_pod=multi_pod, top_k=top_k)
+                rung = "cache" if probe["source"] == "cache" else "search"
+                outcome = "ok"
+            except Exception:  # noqa: BLE001
+                pass
+            resp = MeshPlanResponse(ranking=ranking, rung=rung,
+                                    outcome=outcome,
+                                    seconds=self.clock() - t0)
+            metrics.inc("planservice_requests_total", rung=rung,
+                        outcome=outcome)
+            metrics.observe("planservice_resolve_seconds", resp.seconds,
+                            rung=rung)
+            missed = (deadline_ms != float("inf")
+                      and resp.seconds * 1e3 > deadline_ms)
+            if missed:
+                metrics.inc("planservice_deadline_miss_total", rung=rung)
+            flightrec.record("plan_request", mode="mesh", rung=rung,
+                             outcome=outcome, seconds=resp.seconds,
+                             deadline_ms=deadline_ms)
+            slo.note_request(ok=(outcome == "ok" and not missed),
+                             rung=rung, seconds=resp.seconds)
+            return resp
 
     def note_fault(self, outcome: Any) -> None:
         """Fault-event subscription (``runtime.replan`` orchestration):
@@ -406,8 +444,7 @@ class PlanService:
             return "breaker_open"
         if not self._gate.acquire(blocking=False):
             if breaker.state == "half_open":
-                breaker.state = "open"       # give the trial slot back
-                breaker.opened_at = self.clock()
+                breaker.force_open()         # give the trial slot back
             log.append("rung 3 shed: concurrent search limit reached")
             return "shed"
         result: Optional[PlanResult] = None
@@ -483,7 +520,7 @@ class PlanService:
             if br is None:
                 br = self._breakers[bkey] = _Breaker(
                     self.breaker_threshold, self.breaker_cooldown_s,
-                    self.clock)
+                    self.clock, key=bkey)
             return br
 
     def _fallback_response(self, request: PlanRequest, key: str, t0: float,
@@ -532,8 +569,11 @@ class PlanService:
             self._bg_keys.add(key)
         programs = list(request.programs)
         hw = request.hw
+        rid = context.current()   # threads start with a fresh Context —
+        #                           carry the request ID over explicitly
 
         def run() -> None:
+            token = context.attach(rid)
             try:
                 with self._gate:
                     if hw.is_degraded:
@@ -555,6 +595,7 @@ class PlanService:
             finally:
                 with self._lock:
                     self._bg_keys.discard(key)
+                context.detach(token)
 
         th = threading.Thread(target=run, daemon=True,
                               name=f"planservice-bg-{key[:8]}")
@@ -570,6 +611,16 @@ class PlanService:
                     outcome=resp.outcome)
         metrics.observe("planservice_resolve_seconds", resp.seconds,
                         rung=resp.rung)
-        if (resp.deadline_ms != float("inf")
-                and resp.seconds * 1e3 > resp.deadline_ms):
+        missed = (resp.deadline_ms != float("inf")
+                  and resp.seconds * 1e3 > resp.deadline_ms)
+        if missed:
             metrics.inc("planservice_deadline_miss_total", rung=resp.rung)
+        flightrec.record("plan_request", rung=resp.rung,
+                         outcome=resp.outcome, seconds=resp.seconds,
+                         deadline_ms=resp.deadline_ms, key=resp.key,
+                         background=resp.background, log=resp.log)
+        # SLO view: a request attains its deadline when it answered with
+        # a usable plan inside the budget — regardless of which rung
+        slo.note_request(ok=(resp.ok and not missed
+                             and resp.outcome not in ("error",)),
+                         rung=resp.rung, seconds=resp.seconds)

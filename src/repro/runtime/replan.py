@@ -39,7 +39,7 @@ from repro.core.hw import HardwareModel, Interconnect, SpatialDim, _ring_map
 from repro.core.planner import (PlanResult, SearchBudget, effective_budget,
                                 plan_kernel_multi)
 from repro.core.program import TileProgram
-from repro.obs import metrics, trace
+from repro.obs import context, flightrec, metrics, trace
 
 RUNGS = ("cache_hit", "warm_search", "bounded_search", "submesh_fallback")
 
@@ -201,11 +201,17 @@ def plan_degraded(programs: Sequence[TileProgram], hw: HardwareModel, *,
         metrics.observe("replan_seconds", secs, cause=cause)
         if not within:
             metrics.inc("replan_budget_exceeded_total", cause=cause)
+        flightrec.record("replan", cause=cause, rung=rung, seconds=secs,
+                         within_budget=within, hw=target.name, log=log)
         return ReplanOutcome(cause=cause, rung=rung, result=result,
                              hw=target, seconds=secs, within_budget=within,
                              log=log)
 
-    with trace.span("replan.ladder", cat="replan", cause=cause,
+    # correlate("replan") reuses an enclosing incident/plan ID, so a
+    # ladder trip nested under a fault event stays on the incident's
+    # timeline; a direct plan_degraded call gets its own replan-* ID
+    with context.correlate("replan"), \
+         trace.span("replan.ladder", cat="replan", cause=cause,
                     hw=hw.name, n_faults=len(hw.disabled_cores)
                     + len(hw.degraded_links)):
         # ---- rung 1: exact degraded-key cache hit -------------------------
@@ -326,25 +332,33 @@ class ReplanOrchestrator:
     # ------------------------------------------------------------ faults
     def kill_cores(self, cores: Sequence[Tuple[int, ...]],
                    cause: str = "core_kill") -> Any:
-        if self.tenancy is not None:
-            ev = None
-            for c in cores:
-                ev = self.tenancy.kill_core(c)
-            self.current_hw = self.tenancy.hw
-            return ev
-        self.current_hw = self.current_hw.with_faults(disabled_cores=cores)
-        return self._replan(cause)
+        # one incident ID spans the fault event and every nested re-plan
+        # (the tenancy path records its own fault/containment events)
+        with context.correlate("incident"):
+            if self.tenancy is not None:
+                ev = None
+                for c in cores:
+                    ev = self.tenancy.kill_core(c)
+                self.current_hw = self.tenancy.hw
+                return ev
+            flightrec.record("fault", cause=cause, cores=list(cores))
+            self.current_hw = self.current_hw.with_faults(
+                disabled_cores=cores)
+            return self._replan(cause)
 
     def degrade_links(self, links: Sequence[Tuple[str, float]],
                       cause: str = "link_slow") -> Any:
-        if self.tenancy is not None:
-            ev = None
-            for name, factor in links:
-                ev = self.tenancy.slow_link(name, factor)
-            self.current_hw = self.tenancy.hw
-            return ev
-        self.current_hw = self.current_hw.with_faults(degraded_links=links)
-        return self._replan(cause)
+        with context.correlate("incident"):
+            if self.tenancy is not None:
+                ev = None
+                for name, factor in links:
+                    ev = self.tenancy.slow_link(name, factor)
+                self.current_hw = self.tenancy.hw
+                return ev
+            flightrec.record("fault", cause=cause, links=list(links))
+            self.current_hw = self.current_hw.with_faults(
+                degraded_links=links)
+            return self._replan(cause)
 
     def poll(self, now: Optional[float] = None) -> Optional[ReplanOutcome]:
         """One detection sweep: declare dead/straggling hosts' cores

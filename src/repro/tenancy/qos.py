@@ -23,7 +23,7 @@ import threading
 from contextlib import contextmanager
 from typing import Dict, Iterator, Optional
 
-from repro.obs import metrics
+from repro.obs import flightrec, metrics
 
 from .partition import QOS_CLASSES, TenantSpec
 
@@ -72,4 +72,6 @@ class TenantAdmission:
                                                            0) + 1
         metrics.inc("tenancy_admitted_total", tenant=tenant.name,
                     qos=tenant.qos, outcome="shed")
+        flightrec.record("qos_shed", tenant=tenant.name, qos=tenant.qos,
+                         requested_ms=budget_ms)
         yield 0.0                          # deadline 0: fallback rung only

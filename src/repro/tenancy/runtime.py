@@ -37,7 +37,7 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.hw import HardwareModel
 from repro.core.planner import SearchBudget
-from repro.obs import metrics, trace
+from repro.obs import context, flightrec, metrics, slo, trace
 from repro.runtime.faults import FaultSpec
 from repro.runtime.replan import plan_degraded
 
@@ -133,29 +133,39 @@ class TenantRuntime:
 
     def kill_core(self, core: Sequence[int]) -> ContainedReplan:
         core = tuple(int(v) for v in core)
-        self.hw = self.hw.with_faults(disabled_cores=[core])
-        owner = self.plan.owner_of(core)
-        return self._handle("core_kill", owner, faulted_cell=core)
+        # one incident ID covers the fault, the owning tenant's ladder
+        # trip, and every plan-service resolve nested under it
+        with context.correlate("incident"):
+            flightrec.record("fault", cause="core_kill", cell=core,
+                             hw=self.hw.name)
+            self.hw = self.hw.with_faults(disabled_cores=[core])
+            owner = self.plan.owner_of(core)
+            return self._handle("core_kill", owner, faulted_cell=core)
 
     def slow_link(self, link: str, factor: float,
                   at: Optional[Sequence[int]] = None) -> ContainedReplan:
-        if at is not None:
-            at = tuple(int(v) for v in at)
-            owner = self.plan.owner_of(at)
-            if owner is not None:
-                # physically the links inside a partition are disjoint
-                # from every other partition's, even though the model
-                # names them once per fabric: degrade the owner's submesh
-                # only, and leave the global model untouched
-                return self._handle("link_slow", owner, faulted_cell=at,
-                                    link=(link, factor))
-            # fell on a free/spare cell: record on the fabric so future
-            # repartitions see it, but nobody re-plans
+        with context.correlate("incident"):
+            flightrec.record("fault", cause="link_slow", link=link,
+                             factor=factor,
+                             cell=tuple(at) if at is not None else None,
+                             hw=self.hw.name)
+            if at is not None:
+                at = tuple(int(v) for v in at)
+                owner = self.plan.owner_of(at)
+                if owner is not None:
+                    # physically the links inside a partition are disjoint
+                    # from every other partition's, even though the model
+                    # names them once per fabric: degrade the owner's
+                    # submesh only, and leave the global model untouched
+                    return self._handle("link_slow", owner, faulted_cell=at,
+                                        link=(link, factor))
+                # fell on a free/spare cell: record on the fabric so future
+                # repartitions see it, but nobody re-plans
+                self.hw = self._degrade_global(link, factor)
+                return self._handle("link_slow", None, faulted_cell=at)
+            # unlocalized: the honest blast radius is every tenant
             self.hw = self._degrade_global(link, factor)
-            return self._handle("link_slow", None, faulted_cell=at)
-        # unlocalized: the honest blast radius is every tenant
-        self.hw = self._degrade_global(link, factor)
-        return self._handle_global_link()
+            return self._handle_global_link()
 
     def _degrade_global(self, link: str, factor: float) -> HardwareModel:
         try:
@@ -332,6 +342,7 @@ class TenantRuntime:
                        f"{sorted(evict)} to the fallback rung")
             for t in sorted(evict):
                 metrics.inc("tenancy_evicted_total", tenant=t)
+                flightrec.record("qos_evict", tenant=t, cause=cause)
         new_plan = self.partitioner.plan(
             self.hw, tenants, service=self.service, budget=self.budget,
             tenant_budget_ms=evict or None)
@@ -366,6 +377,12 @@ class TenantRuntime:
         metrics.observe("tenancy_blast_radius", float(len(replanned)),
                         cause=cause)
         metrics.observe("tenancy_contain_seconds", seconds, rung=rung)
+        flightrec.record("containment", cause=cause, owner=owner,
+                         rung=rung, blast_radius=len(replanned),
+                         replanned=replanned, seconds=seconds,
+                         within_budget=within, log=log)
+        slo.note_containment(owner if owner is not None else "(shared)",
+                             len(replanned), rung=rung)
         ev = ContainedReplan(
             cause=cause, owner=owner, rung=rung, replanned=replanned,
             blast_radius=len(replanned), seconds=seconds,

@@ -22,7 +22,7 @@ from __future__ import annotations
 
 from typing import List
 
-from repro.obs import metrics
+from repro.obs import flightrec, metrics
 from repro.plancache.validate import dram_residency_bytes, validate_plan
 
 from .partition import TenancyPlan
@@ -49,6 +49,11 @@ class IsolationValidator:
         if bad:
             metrics.inc("tenancy_isolation_violations_total", len(bad),
                         hw=plan.hw.name)
+            flightrec.record("violation", hw=plan.hw.name, problems=bad)
+            # an isolation violation is the incident the recorder exists
+            # for: force the dump NOW, before any escalation path (or the
+            # serve driver's SystemExit) can lose the buffer
+            flightrec.dump(reason="isolation_violation")
         return bad
 
     def _validate(self, plan: TenancyPlan) -> List[str]:

@@ -360,3 +360,151 @@ def test_plancache_stats_json_cli(capsys):
     doc = json.loads(capsys.readouterr().out)
     assert "store" in doc and "metrics" in doc
     assert "entries" in doc["store"]
+
+
+# ------------------------------------------- serving-layer additions (PR 10)
+def test_snapshot_meta_block():
+    from repro.plancache.keying import SCHEMA_VERSION
+    snap = metrics.snapshot()
+    meta = snap["_meta"]
+    assert meta["pid"] == os.getpid()
+    assert meta["start_time"] > 0 and meta["uptime_s"] >= 0
+    assert meta["plancache_schema"] == SCHEMA_VERSION
+    # existing consumers skip the block: it has no "type" key and never
+    # lands in counter aggregations
+    assert "type" not in meta
+    assert "_meta" not in metrics.counter_totals(snap)
+    assert metrics.diff_counters(snap, metrics.snapshot()) == {}
+
+
+def test_metric_exemplar_rid():
+    from repro.obs import context
+
+    def series(snap):
+        [s] = snap["t_obs_exemplar"]["series"]
+        return s
+
+    metrics.inc("t_obs_exemplar", case="x")
+    assert "rid" not in series(metrics.snapshot())   # uncorrelated: no key
+    with context.correlate("req") as rid:
+        metrics.inc("t_obs_exemplar", case="x")
+    assert series(metrics.snapshot())["rid"] == rid
+    # an uncorrelated increment never erases the last-seen exemplar
+    metrics.inc("t_obs_exemplar", case="x")
+    assert series(metrics.snapshot())["rid"] == rid
+
+
+def test_span_carries_rid():
+    from repro.obs import context
+    trace.enable()
+    with context.correlate("req") as rid:
+        with trace.span("corr.span", k="v"):
+            pass
+    with trace.span("plain.span"):
+        pass
+    by_name = {e["name"]: e for e in trace.events()}
+    assert by_name["corr.span"]["args"] == {"k": "v", "rid": rid}
+    assert "args" not in by_name["plain.span"]
+
+
+def test_sharded_search_propagates_rid_to_workers(fast_search, monkeypatch):
+    """Worker processes attach the parent's correlation ID per task, so
+    worker spans of a correlated resolve land on the same request ID."""
+    from repro.obs import context
+    from repro.parallel import search_exec
+    hw = get_hw("wormhole_8x8")
+    progs = [matmul_program(1024, 1024, 1024, bm=bm, bn=bn, bk=bk)
+             for bm in (32, 64) for bn in (32, 64, 128)
+             for bk in (64, 128)]
+    trace.enable()
+    try:
+        with context.correlate("req") as rid:
+            plan_kernel_multi(progs, hw,
+                              budget=SearchBudget(top_k=3, workers=2))
+        worker_evs = [e for e in trace.events() if e.get("cat") == "worker"]
+        assert worker_evs, "sharded run must merge worker spans"
+        assert all(e["args"]["rid"] == rid for e in worker_evs)
+        assert all(e["pid"] != os.getpid() for e in worker_evs)
+    finally:
+        search_exec.shutdown_pool()
+
+
+def test_killed_worker_trace_and_flightrec(fast_search, monkeypatch,
+                                           tmp_path):
+    """A worker hard-exiting mid-search must not tear the observability
+    stream: the search still succeeds, the merged Chrome trace validates,
+    and the flight recorder holds the ``pool_failure`` event."""
+    from repro.obs import flightrec
+    from repro.parallel import search_exec
+    from repro.runtime.faults import FaultSchedule, FaultSpec
+    hw = get_hw("wormhole_4x8")
+    progs = [matmul_program(256, 256, 256, bm=bm, bn=bn, bk=64)
+             for bm in (32, 64) for bn in (32, 64, 128)]
+    inline = plan_kernel_multi(progs, hw, profile=True)
+
+    search_exec.shutdown_pool()      # fresh workers must see the marker env
+    sched = FaultSchedule([FaultSpec("worker_crash")])
+    marker = sched.arm_worker_crash(directory=str(tmp_path))
+    flightrec.clear()
+    flightrec.enable()
+    trace.enable()
+    try:
+        monkeypatch.setenv("REPRO_PLANNER_WORKERS", "2")
+        res = plan_kernel_multi(progs, hw, profile=True)
+        assert not os.path.exists(marker)        # a worker really died
+        assert res.best.plan.describe() == inline.best.plan.describe()
+        assert res.best.final_s == inline.best.final_s
+        evs = trace.events()
+        assert evs and trace.validate_chrome_trace(
+            {"traceEvents": evs}) == []          # not a torn buffer
+        fails = [e for e in flightrec.events()
+                 if e["kind"] == "pool_failure"]
+        assert fails, "worker death must land a pool_failure event"
+        assert fails[0]["error"] == "BrokenProcessPool"
+        assert {"t", "seq", "attempt", "where"} <= set(fails[0])
+    finally:
+        FaultSchedule.disarm_worker_crash()
+        search_exec.shutdown_pool()
+        flightrec.disable()
+        flightrec.clear()
+
+
+def test_hist_quantile_boundary_grid():
+    """Satellite (b): ``hist_quantile`` over the boundary grid — empty /
+    missing series, q<=0, q>=1, one observation, single occupied bucket,
+    and interpolation staying inside [min, max]."""
+    def snap_series(kind):
+        for s in metrics.snapshot()["t_obs_hq"]["series"]:
+            if s["labels"] == {"kind": kind}:
+                return s
+        return None
+
+    assert metrics.hist_quantile(None, 0.5) is None
+    assert metrics.hist_quantile({}, 0.5) is None
+    assert metrics.hist_quantile({"count": 0}, 0.5) is None
+
+    metrics.observe("t_obs_hq", 0.2, kind="one")
+    s1 = snap_series("one")
+    for q in (-1.0, 0.0, 0.25, 0.5, 0.99, 1.0, 2.0):
+        assert metrics.hist_quantile(s1, q) == pytest.approx(0.2)
+
+    for v in (0.5, 0.5, 0.5):                    # lo == hi, count > 1
+        metrics.observe("t_obs_hq", v, kind="flat")
+    assert metrics.hist_quantile(snap_series("flat"), 0.5) \
+        == pytest.approx(0.5)
+
+    # a foreign/minimal series without buckets degrades to lerp(min, max)
+    bare = {"count": 2, "min": 1.0, "max": 3.0}
+    assert metrics.hist_quantile(bare, 0.5) == pytest.approx(2.0)
+
+    for v in (1.0, 2.0, 4.0, 8.0):
+        metrics.observe("t_obs_hq", v, kind="spread")
+    s = snap_series("spread")
+    assert metrics.hist_quantile(s, 0.0) == pytest.approx(1.0)   # exact min
+    assert metrics.hist_quantile(s, 1.0) == pytest.approx(8.0)   # exact max
+    for q in (0.1, 0.25, 0.5, 0.75, 0.9):
+        v = metrics.hist_quantile(s, q)
+        assert 1.0 <= v <= 8.0
+    # quantiles are monotone in q
+    qs = [metrics.hist_quantile(s, q / 20) for q in range(21)]
+    assert qs == sorted(qs)

@@ -1,0 +1,331 @@
+"""Serving-layer observability contracts (DESIGN_OBS.md, PR 10):
+request-correlation IDs, the bounded flight recorder and its incident
+renderer, the sliding-window SLO/burn-rate tracker, and the Prometheus
+exposition + introspection HTTP endpoint.
+
+Everything here is stdlib-only plumbing — no planner, no jax — so the
+file runs in milliseconds and pins the contracts the serve driver and
+the CI smoke lane build on."""
+import json
+import urllib.error
+import urllib.request
+
+import pytest
+
+from repro.obs import context, expo, flightrec, metrics, slo
+
+
+@pytest.fixture(autouse=True)
+def _clean_serving_obs():
+    """The recorder and tracker are process-global singletons."""
+    flightrec.disable()
+    flightrec.clear()
+    slo.disable()
+    slo.clear()
+    yield
+    flightrec.disable()
+    flightrec.clear()
+    flightrec.RECORDER.path = None       # undo any armed dump destination
+    flightrec.RECORDER.capacity = flightrec.DEFAULT_CAPACITY
+    slo.disable()
+    slo.clear()
+
+
+# ------------------------------------------------------------------ context
+def test_context_default_and_mint():
+    assert context.current() is None
+    with context.correlate("req") as rid:
+        assert context.current() == rid
+        assert rid.startswith("req-")
+    assert context.current() is None
+
+
+def test_context_nested_reuses_enclosing_id():
+    with context.correlate("incident") as outer:
+        with context.correlate("plan") as inner:
+            assert inner == outer          # nested work stays on the incident
+        assert context.current() == outer
+
+
+def test_context_explicit_rid_and_attach():
+    with context.correlate(rid="forced-1") as rid:
+        assert rid == "forced-1"
+    token = context.attach("worker-7")
+    assert context.current() == "worker-7"
+    context.detach(token)
+    assert context.current() is None
+    assert context.new_id("a") != context.new_id("a")
+
+
+# ---------------------------------------------------------------- flightrec
+def test_flightrec_off_by_default_records_nothing():
+    flightrec.record("fault", cause="core_kill")
+    assert flightrec.events() == []
+
+
+def test_flightrec_stamps_and_normalizes():
+    flightrec.enable()
+    with context.correlate("incident") as rid:
+        flightrec.record("fault", cause="core_kill", cores=[(0, 0)],
+                         extra={"k": (1, 2)}, obj=object())
+    [ev] = flightrec.events()
+    assert ev["kind"] == "fault" and ev["rid"] == rid and ev["seq"] == 1
+    assert ev["t"] > 0
+    assert ev["cores"] == [[0, 0]]         # copy-normalized, JSON-safe
+    assert ev["extra"] == {"k": [1, 2]}
+    assert isinstance(ev["obj"], str)
+
+
+def test_flightrec_ring_bounds_and_drop_counter():
+    rec = flightrec.FlightRecorder(capacity=3)
+    rec.enable()
+    for i in range(5):
+        rec.record("plan_request", i=i)
+    evs = rec.events()
+    assert [e["i"] for e in evs] == [2, 3, 4]
+    assert [e["seq"] for e in evs] == [3, 4, 5]
+    assert rec.dropped == 2
+
+
+def test_flightrec_dump_load_and_meta(tmp_path):
+    rec = flightrec.FlightRecorder(capacity=8)
+    rec.enable()
+    rec.record("breaker", key="k", **{"from": "closed", "to": "open"})
+    path = tmp_path / "dump.json"
+    assert rec.dump(str(path), reason="unit") == str(path)
+    assert list(tmp_path.iterdir()) == [path]      # no tmp file left behind
+    doc = flightrec.load_dump(str(path))
+    assert doc["meta"]["reason"] == "unit"
+    assert doc["meta"]["n_events"] == 1 and doc["meta"]["capacity"] == 8
+    assert doc["events"][0]["kind"] == "breaker"
+
+
+def test_flightrec_load_rejects_non_dump(tmp_path):
+    p = tmp_path / "x.json"
+    p.write_text("{\"not\": \"a dump\"}")
+    with pytest.raises(ValueError):
+        flightrec.load_dump(str(p))
+
+
+def test_flightrec_refresh_from_env(tmp_path, monkeypatch):
+    monkeypatch.setenv(flightrec.FLIGHTREC_ENV, str(tmp_path / "fr.json"))
+    monkeypatch.setenv(flightrec.CAP_ENV, "5")
+    flightrec.refresh_from_env()
+    assert flightrec.enabled()
+    assert flightrec.RECORDER.capacity == 5
+    assert flightrec.RECORDER.path == str(tmp_path / "fr.json")
+
+
+def test_render_incident_groups_by_rid(tmp_path):
+    rec = flightrec.FlightRecorder()
+    rec.enable()
+    with context.correlate("incident") as rid:
+        rec.record("fault", cause="core_kill", cores=[(0, 0)])
+        rec.record("containment", cause="core_kill", owner="t0",
+                   rung="shrink_in_place", blast_radius=1,
+                   replanned=["t0"], seconds=0.01, log=["step one"])
+    rec.record("pool_failure", error="BrokenProcessPool", where="rank")
+    path = tmp_path / "d.json"
+    rec.dump(str(path), reason="unit")
+    doc = flightrec.load_dump(str(path))
+
+    text = flightrec.render_incident(doc)
+    assert "containment=1  fault=1  pool_failure=1" in text
+    assert rid in text and "(uncorrelated)" in text
+    # the incident group renders before the uncorrelated tail
+    assert text.index(rid) < text.index("(uncorrelated)")
+    assert "rung=shrink_in_place" in text and "| step one" in text
+    assert "replanned=t0" in text
+
+    only = flightrec.render_incident(doc, rid=rid)
+    assert "(uncorrelated)" not in only and rid in only
+    missing = flightrec.render_incident(doc, rid="nope")
+    assert "no events for rid" in missing and rid in missing
+
+
+def test_incident_cli(tmp_path, capsys):
+    from repro.obs.__main__ import main
+    rec = flightrec.FlightRecorder()
+    rec.enable()
+    rec.record("qos_shed", tenant="t1", qos="best_effort")
+    path = str(tmp_path / "d.json")
+    rec.dump(path, reason="unit")
+    assert main(["incident", path]) == 0
+    out = capsys.readouterr().out
+    assert "flight recorder: 1 events" in out and "tenant=t1" in out
+    assert main(["incident", path, "--json"]) == 0
+    doc = json.loads(capsys.readouterr().out)
+    assert doc["events"][0]["kind"] == "qos_shed"
+    assert main(["incident", str(tmp_path / "missing.json")]) == 2
+
+
+# ---------------------------------------------------------------------- slo
+def _tracker(**kw):
+    clk = {"t": 1000.0}
+    kw.setdefault("target", 0.99)
+    kw.setdefault("fast_s", 60.0)
+    kw.setdefault("slow_s", 600.0)
+    t = slo.SLOTracker(clock=lambda: clk["t"], **kw)
+    t.enable()
+    return t, clk
+
+
+def test_slo_attainment_windows_and_pruning():
+    t, clk = _tracker()
+    for i in range(8):
+        t.note_request(ok=(i != 0), rung="cache")
+        clk["t"] += 1.0
+    rep = t.report()
+    assert rep["fast"]["total"] == 8 and rep["fast"]["miss"] == 1
+    assert rep["fast"]["attainment"] == pytest.approx(7 / 8)
+    assert rep["rungs"] == {"cache": 8}
+    clk["t"] += 700.0                     # everything ages out of slow_s
+    rep = t.report()
+    assert rep["slow"]["total"] == 0 and rep["fast"]["total"] == 0
+
+
+def test_slo_burn_alert_needs_both_windows():
+    # slow window long: early misses keep the *fast* window clean later
+    t, clk = _tracker()
+    # a miss burst inside the fast window: both windows burn >= 14.4
+    for _ in range(5):
+        t.note_request(ok=False, rung="fallback")
+    assert t.alert_state == "firing" and t.transitions == 1
+    # recovery: the burst ages past the fast window while successes land
+    clk["t"] += 90.0
+    for _ in range(200):
+        t.note_request(ok=True, rung="cache")
+    assert t.alert_state == "ok" and t.transitions == 2
+    rep = t.report()
+    assert rep["alert"]["state"] == "ok" and rep["alert"]["transitions"] == 2
+
+
+def test_slo_alert_emits_flightrec_event_and_metric():
+    flightrec.enable()
+    c = metrics.REGISTRY.counter("slo_alert_transitions_total")
+    n0 = c.total()
+    t, _clk = _tracker()
+    for _ in range(3):
+        t.note_request(ok=False, rung="fallback")
+    alerts = [e for e in flightrec.events() if e["kind"] == "slo_alert"]
+    assert len(alerts) == 1               # edge-triggered, not per-request
+    assert alerts[0]["state"] == "firing"
+    assert alerts[0]["fast_burn"] >= t.burn_threshold
+    assert c.total() == n0 + 1
+
+
+def test_slo_blast_radius_per_tenant():
+    t, _clk = _tracker()
+    t.note_containment("t0", 1, rung="shrink_in_place")
+    t.note_containment("t0", 3, rung="repartition")
+    t.note_containment("t1", 2, rung="claim_adjacent")
+    rep = t.report()
+    assert rep["tenants"]["t0"] == {
+        "incidents": 2, "blast_radius_max": 3, "blast_radius_sum": 4,
+        "rungs": {"shrink_in_place": 1, "repartition": 1}}
+    assert rep["tenants"]["t1"]["incidents"] == 1
+
+
+def test_slo_disabled_is_noop_and_env_config(monkeypatch):
+    t = slo.SLOTracker()
+    t.note_request(ok=False, rung="fallback")
+    assert t.report()["slow"]["total"] == 0
+    monkeypatch.setenv(slo.TARGET_ENV, "0.9")
+    monkeypatch.setenv(slo.FAST_ENV, "5")
+    monkeypatch.setenv(slo.SLOW_ENV, "2")         # < fast: clamped up
+    monkeypatch.setenv(slo.BURN_ENV, "2.5")
+    t.configure_from_env()
+    assert t.target == 0.9 and t.burn_threshold == 2.5
+    assert t.fast_s == 5.0 and t.slow_s == 5.0
+
+
+# --------------------------------------------------------------------- expo
+def test_escape_label_value():
+    assert expo.escape_label_value('a"b\\c\nd') == 'a\\"b\\\\c\\nd'
+
+
+def test_render_prometheus_counters_and_histograms():
+    snap = {
+        "_meta": {"pid": 42, "start_time": 1000.0, "uptime_s": 5.0,
+                  "plancache_schema": 4},
+        "reqs_total": {"type": "counter", "help": "requests",
+                       "series": [{"labels": {"rung": 'c"ache'},
+                                   "value": 3, "rid": "req-1-1"}]},
+        "lat_seconds": {"type": "histogram", "series": [{
+            "labels": {}, "count": 3, "sum": 0.6, "min": 0.1, "max": 0.3,
+            "buckets": {"le": [0.1, 1.0, "inf"], "counts": [1, 2, 0]}}]},
+    }
+    text = expo.render_prometheus(snap)
+    assert expo.validate_exposition(text) == []
+    assert 'reqs_total{rung="c\\"ache"} 3' in text
+    assert "repro_process_pid 42" in text
+    assert "repro_plancache_schema_version 4" in text
+    # cumulative ladder + +Inf terminal bucket
+    assert 'lat_seconds_bucket{le="0.1"} 1' in text
+    assert 'lat_seconds_bucket{le="1"} 3' in text
+    assert 'lat_seconds_bucket{le="+Inf"} 3' in text
+    assert "lat_seconds_sum 0.6" in text and "lat_seconds_count 3" in text
+    assert "rid" not in text               # exemplars stay JSON-only
+
+
+def test_render_prometheus_live_registry_validates():
+    metrics.inc("t_serving_total", rung="cache")
+    metrics.observe("t_serving_seconds", 0.01, rung="cache")
+    text = expo.render_prometheus()
+    assert expo.validate_exposition(text) == []
+    assert "t_serving_total" in text and "t_serving_seconds_bucket" in text
+
+
+def test_validate_exposition_catches_problems():
+    assert expo.validate_exposition("# TYPE x counter\nx 1\n") == []
+    probs = expo.validate_exposition(
+        "# TYPE x banana\n"          # bad type
+        "x 1\n"
+        "y 2\n"                      # no TYPE line
+        "z{0bad=\"v\"} 1\n")         # bad label name (and no TYPE)
+    assert len(probs) >= 3
+
+
+def _get(url, path):
+    try:
+        with urllib.request.urlopen(url + path, timeout=5) as r:
+            return r.status, r.read().decode(), r.headers.get("Content-Type")
+    except urllib.error.HTTPError as e:
+        return e.code, e.read().decode(), e.headers.get("Content-Type")
+
+
+def test_introspection_server_endpoints():
+    slo.TRACKER.enable()
+    slo.note_request(ok=True, rung="cache")
+    metrics.inc("t_introspect_total")
+    srv = expo.IntrospectionServer(port=0)
+    srv.add_provider("plans", lambda: {"entries": 7})
+    srv.add_provider("/boom", lambda: 1 / 0)
+    srv.start()
+    try:
+        code, body, ctype = _get(srv.url, "/metrics")
+        assert code == 200 and ctype == expo.CONTENT_TYPE
+        assert expo.validate_exposition(body) == []
+        assert "t_introspect_total" in body
+
+        code, body, _ = _get(srv.url, "/healthz")
+        assert code == 200 and json.loads(body)["ok"] is True
+
+        code, body, _ = _get(srv.url, "/slo")
+        rep = json.loads(body)
+        assert rep["enabled"] and rep["rungs"].get("cache", 0) >= 1
+
+        code, body, _ = _get(srv.url, "/plans")      # normalized to /plans
+        assert code == 200 and json.loads(body) == {"entries": 7}
+
+        code, body, _ = _get(srv.url, "/")
+        assert set(json.loads(body)["endpoints"]) >= {
+            "/metrics", "/healthz", "/slo", "/plans"}
+
+        code, body, _ = _get(srv.url, "/nope")
+        assert code == 404 and "error" in json.loads(body)
+
+        code, body, _ = _get(srv.url, "/boom")       # broken provider: 500
+        assert code == 500 and "ZeroDivisionError" in json.loads(body)["error"]
+    finally:
+        srv.stop()
